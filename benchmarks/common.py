@@ -1,0 +1,49 @@
+"""Shared benchmark utilities: dataset cache, timers, CSV row type.
+
+All benchmarks run CPU-scale replicas of the paper's experiments (n ~ 5e4
+vs the paper's 1e7-1e8; k=10 vs 50) — the *relative* orderings they test
+are scale-stable, and the absolute numbers are reported as derived columns.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.data import Dataset, exact_knn, make_queries, GENERATORS
+
+Row = tuple[str, float, str]  # (name, us_per_call, derived)
+
+N_DEFAULT = 50_000
+D_DEFAULT = 64
+M_QUERIES = 30
+K_DEFAULT = 10
+
+
+@functools.lru_cache(maxsize=8)
+def dataset(kind: str = "gaussian_mixture", n: int = N_DEFAULT, d: int = D_DEFAULT,
+            m: int = M_QUERIES, k: int = K_DEFAULT, seed: int = 0) -> Dataset:
+    x = GENERATORS[kind](n, d, seed)
+    q = make_queries(x, m, seed + 1)
+    ids, dists = exact_knn(x, q, k)
+    return Dataset(f"{kind}-{n}x{d}", x, q, ids, dists)
+
+
+def timeit(fn: Callable, *, repeats: int = 3, number: int = 1) -> float:
+    """Best-of wall time in microseconds per call."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / number)
+    return best * 1e6
+
+
+def block_until_ready(x):
+    import jax
+
+    return jax.block_until_ready(x)

@@ -1,0 +1,58 @@
+"""Figure 7: parameter study on K (cluster count) and Ns (subspaces):
+indexing time, index memory, query time, recall."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, dataset, timeit
+from repro.core import SuCoConfig, build_index, suco_query
+from repro.data import recall
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    ds = dataset("gaussian_mixture", n=20_000)
+    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
+
+    for sqrt_k in (16, 32, 64):
+        cfg = SuCoConfig(n_subspaces=8, sqrt_k=sqrt_k, kmeans_iters=5)
+        us_build = timeit(
+            lambda: jax.block_until_ready(build_index(x, cfg).cell_ids), repeats=1
+        )
+        idx = build_index(x, cfg)
+        us_q = timeit(
+            lambda: suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02)
+            .ids.block_until_ready(), repeats=2,
+        )
+        res = suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02)
+        r = recall(np.asarray(res.ids), ds.gt_ids)
+        rows.append(
+            (f"fig7/K={sqrt_k**2}", us_q,
+             f"recall={r:.4f};index_us={us_build:.0f};mem={idx.memory_bytes()}")
+        )
+
+    for ns in (4, 8, 16):
+        cfg = SuCoConfig(n_subspaces=ns, sqrt_k=32, kmeans_iters=5)
+        us_build = timeit(
+            lambda: jax.block_until_ready(build_index(x, cfg).cell_ids), repeats=1
+        )
+        idx = build_index(x, cfg)
+        us_q = timeit(
+            lambda: suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02)
+            .ids.block_until_ready(), repeats=2,
+        )
+        res = suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02)
+        r = recall(np.asarray(res.ids), ds.gt_ids)
+        rows.append(
+            (f"fig7/Ns={ns}", us_q,
+             f"recall={r:.4f};index_us={us_build:.0f};mem={idx.memory_bytes()}")
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,41 @@
+"""Figure 8: query-time/recall trade-off across alpha and beta."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import Row, dataset, timeit
+from repro.core import SuCoConfig, build_index, suco_query
+from repro.data import recall
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    ds = dataset("gaussian_mixture", n=20_000)
+    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
+    idx = build_index(x, SuCoConfig(n_subspaces=8, sqrt_k=32, kmeans_iters=5))
+
+    for alpha in (0.01, 0.05, 0.1, 0.2):
+        us = timeit(
+            lambda: suco_query(x, idx, q, k=10, alpha=alpha, beta=0.01)
+            .ids.block_until_ready(), repeats=2,
+        )
+        res = suco_query(x, idx, q, k=10, alpha=alpha, beta=0.01)
+        rows.append((f"fig8/alpha={alpha}", us,
+                     f"recall={recall(np.asarray(res.ids), ds.gt_ids):.4f}"))
+
+    for beta in (0.001, 0.003, 0.005, 0.009):
+        us = timeit(
+            lambda: suco_query(x, idx, q, k=10, alpha=0.05, beta=beta)
+            .ids.block_until_ready(), repeats=2,
+        )
+        res = suco_query(x, idx, q, k=10, alpha=0.05, beta=beta)
+        rows.append((f"fig8/beta={beta}", us,
+                     f"recall={recall(np.asarray(res.ids), ds.gt_ids):.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,60 @@
+"""Figures 9-12: SuCo vs competitor families — indexing time, index memory,
+recall/QPS.  Guarantee family: SuCo, SC-Linear, E2LSH.  No-guarantee
+family: IVF-Flat, IMI+Multi-sequence (OPQ-lite), HNSW-lite, RP-forest."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, dataset, timeit
+from repro.baselines import E2LSH, HNSWLite, IMIPQ, IVFFlat, RPForest
+from repro.core import SuCoConfig, build_index, suco_query
+from repro.data import recall
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    ds = dataset("gaussian_mixture", n=20_000)
+    n = ds.x.shape[0]
+    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
+    m = ds.queries.shape[0]
+
+    # --- SuCo
+    t0 = time.perf_counter()
+    idx = build_index(x, SuCoConfig(n_subspaces=8, sqrt_k=32, kmeans_iters=5))
+    jax.block_until_ready(idx.cell_ids)
+    t_build = (time.perf_counter() - t0) * 1e6
+    us = timeit(lambda: suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02)
+                .ids.block_until_ready(), repeats=2)
+    res = suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02)
+    rows.append(("fig9_12/suco", us / m,
+                 f"recall={recall(np.asarray(res.ids), ds.gt_ids):.4f};"
+                 f"index_us={t_build:.0f};mem={idx.memory_bytes()};qps={1e6*m/us:.0f}"))
+
+    # --- competitors (numpy)
+    def bench(name, builder, query_kwargs):
+        t0 = time.perf_counter()
+        b = builder().build(ds.x)
+        t_build = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        ids = b.query(ds.queries, 10, **query_kwargs)
+        t_q = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig9_12/{name}", t_q / m,
+                     f"recall={recall(ids, ds.gt_ids):.4f};index_us={t_build:.0f};"
+                     f"mem={b.memory_bytes()};qps={1e6*m/t_q:.0f}"))
+
+    bench("lsh", lambda: E2LSH(n_tables=8, n_bits=10), dict(threshold=1))
+    bench("ivf", lambda: IVFFlat(n_cells=128, iters=5), dict(nprobe=8))
+    bench("imi_pq", lambda: IMIPQ(sqrt_k=32, iters=5), dict(n_candidates=400))
+    bench("hnsw", lambda: HNSWLite(m=12, ef_construction=48), dict(ef_search=64))
+    bench("rpforest", lambda: RPForest(n_trees=10, leaf_size=64), dict())
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

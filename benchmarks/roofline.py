@@ -1,0 +1,183 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape x mesh) cell, all PER DEVICE per step:
+
+  compute    = FLOPs / peak_FLOPs           (197 TFLOP/s bf16, TPU v5e)
+  memory     = HBM bytes / HBM bw           (819 GB/s)
+  collective = collective bytes / link bw   (50 GB/s/link, 1 link assumed)
+
+FLOPs / bytes come from the *loop-corrected* HLO analysis
+(repro.launch.hlo_analysis): XLA:CPU's cost_analysis counts while bodies
+once, so the raw numbers are also recorded but not used for the terms.
+
+MODEL_FLOPS = 6 * N(_active) * tokens for train (fwd+bwd), 2 * N * tokens
+for inference — the useful-FLOPs yardstick for the compute term.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import math
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.model import SHAPES
+
+
+@functools.lru_cache(maxsize=32)
+def exact_param_count(arch: str) -> int:
+    import jax
+    from repro.models import Model
+
+    shapes = Model(get_config(arch)).param_shapes()
+    return int(sum(math.prod(x.shape) for x in jax.tree.leaves(shapes)))
+
+
+def effective_chips(arch: str, shape_name: str, n_chips: int) -> int:
+    """Chips that actually hold work.  Decode with global_batch < the number
+    of data shards leaves data ranks replicated: only (tp x batch) chips are
+    busy (long_500k: 16 of 256)."""
+    shape = SHAPES[shape_name]
+    if shape.kind != "decode":
+        return n_chips
+    tp = 16
+    dp = n_chips // tp
+    return tp * min(shape.global_batch, dp)
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+__all__ = ["roofline_row", "load_cells", "summary_table", "main"]
+
+
+def model_flops_per_chip(arch: str, shape_name: str, n_chips: int,
+                         param_count: int | None = None) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = param_count if param_count and param_count > 0 else exact_param_count(arch)
+    n_active = n
+    if cfg.family == "moe":
+        # scale exact count by the active/total ratio of the analytic count
+        n_active = n * cfg.active_param_count() / cfg.param_count()
+    chips = effective_chips(arch, shape_name, n_chips)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch / chips
+
+
+def param_traffic_per_chip(arch: str, shape_name: str, n_chips: int) -> float:
+    """Analytic HBM parameter traffic per step per chip (bytes).
+
+    The HLO memory model counts loop-body *outputs* only, so weight reads
+    (operands inside the layer loop) are added back here:
+      serve: params cast-read once           -> 4 B/param (fp32 master)
+      train: fwd read + bwd read + param write + AdamW mu/nu read+write
+             -> 4 * (1+1+1+4) = 28 B/param   (fp32 everywhere)
+    Sharded over all chips (ZeRO-3 + TP shard every big tensor)."""
+    shape = SHAPES[shape_name]
+    n = exact_param_count(arch)
+    per = 28.0 if shape.kind == "train" else 4.0
+    return n * per / n_chips
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    lc = rec.get("loop_corrected", {})
+    if "flops" not in lc:
+        return None
+    t_comp = lc["flops"] / PEAK_FLOPS
+    try:  # non-registry cells (the SuCo engine) have no params / 6ND model
+        p_traffic = param_traffic_per_chip(rec["arch"], rec["shape"], rec["n_chips"])
+        mf = model_flops_per_chip(
+            rec["arch"], rec["shape"], rec["n_chips"], rec.get("param_count")
+        )
+    except KeyError:
+        p_traffic = 0.0
+        mf = float("nan")
+    mem_bytes = lc["memory_bytes"] + p_traffic
+    t_mem = mem_bytes / HBM_BW
+    t_coll = lc["collective_bytes"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())  # perfectly-overlapped lower bound
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+        "n_chips": rec["n_chips"],
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops": lc["flops"],
+        "useful_ratio": mf / lc["flops"] if lc["flops"] else float("nan"),
+        "mfu_bound": mf / PEAK_FLOPS / step_time if step_time else float("nan"),
+        "collective_per_kind": lc.get("per_kind_bytes", {}),
+    }
+
+
+def load_cells(tag: str = "") -> list[dict]:
+    rows = []
+    for f in sorted(RESULTS.glob(f"*{tag}.json")):
+        rec = json.loads(f.read_text())
+        rows.append(rec)
+    return rows
+
+
+def summary_table(multi_pod: bool | None = False, tag: str = "") -> str:
+    lines = [
+        f"{'arch':24s} {'shape':12s} {'mesh':8s} {'compute':>10s} {'memory':>10s} "
+        f"{'collect':>10s} {'dominant':>10s} {'useful':>7s} {'MFU<=':>6s}"
+    ]
+    for rec in load_cells(tag):
+        if multi_pod is not None and rec.get("multi_pod") != multi_pod:
+            continue
+        if rec.get("status") == "skipped":
+            lines.append(
+                f"{rec['arch']:24s} {rec['shape']:12s} {'-':8s} {'skipped':>10s}"
+            )
+            continue
+        row = roofline_row(rec)
+        if row is None:
+            lines.append(
+                f"{rec['arch']:24s} {rec['shape']:12s} {'-':8s} {rec.get('status'):>10s}"
+            )
+            continue
+        lines.append(
+            f"{row['arch']:24s} {row['shape']:12s} {row['mesh']:8s} "
+            f"{row['compute_s']*1e3:9.2f}m {row['memory_s']*1e3:9.2f}m "
+            f"{row['collective_s']*1e3:9.2f}m {row['dominant']:>10s} "
+            f"{row['useful_ratio']:7.2f} {row['mfu_bound']:6.2f}"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all-meshes", action="store_true")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    if args.json:
+        rows = [r for r in (roofline_row(rec) for rec in load_cells()) if r]
+        print(json.dumps(rows, indent=2))
+        return
+    mp = None if args.all_meshes else args.multi_pod
+    print(summary_table(multi_pod=mp))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus a roofline summary from
+the dry-run artifacts when present).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = (
+    "benchmarks.fig2_pareto",
+    "benchmarks.table2_sc_linear",
+    "benchmarks.table4_suco_vs_linear",
+    "benchmarks.table5_l1_l2",
+    "benchmarks.fig6_da_vs_ms",
+    "benchmarks.fig7_k_ns",
+    "benchmarks.fig8_alpha_beta",
+    "benchmarks.fig9_12_competitors",
+    "benchmarks.fig14_preprocessing",
+)
+
+
+def main() -> None:
+    import importlib
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failed = 0
+    for modname in MODULES:
+        if only and only not in modname:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failed += 1
+            print(f"{modname},ERROR,", flush=True)
+            traceback.print_exc(file=sys.stderr)
+
+    # roofline summary (reads benchmarks/results/*.json if the dry-run ran)
+    try:
+        from benchmarks.roofline import load_cells, roofline_row
+
+        for rec in load_cells():
+            row = roofline_row(rec)
+            if row is None:
+                continue
+            name = f"roofline/{row['arch']}/{row['shape']}/{row['mesh']}"
+            derived = (
+                f"dominant={row['dominant']};compute_s={row['compute_s']:.4e};"
+                f"memory_s={row['memory_s']:.4e};collective_s={row['collective_s']:.4e};"
+                f"useful={row['useful_ratio']:.2f}"
+            )
+            step = max(row['compute_s'], row['memory_s'], row['collective_s'])
+            print(f"{name},{step*1e6:.1f},{derived}")
+    except Exception:
+        traceback.print_exc(file=sys.stderr)
+
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

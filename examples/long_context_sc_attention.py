@@ -1,0 +1,46 @@
+"""Beyond-paper demo: Subspace-Collision sparse attention for long-context
+decode — select top keys by SC-score, attend exactly over the selection.
+
+    PYTHONPATH=src python examples/long_context_sc_attention.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sc_attention import attention_mass_recall, sc_sparse_attention
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    h, s, hd = 8, 65_536, 64
+    print(f"== SC sparse attention: {h} heads x {s} keys x {hd} dims ==")
+    # keys with locality structure (recent tokens matter more)
+    base = rng.normal(size=(h, s, hd)).astype(np.float32)
+    drift = np.linspace(0, 2, s)[None, :, None]
+    keys = jnp.asarray(base + drift * rng.normal(size=(h, 1, hd)))
+    values = jnp.asarray(rng.normal(size=(h, s, hd)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(h, hd)).astype(np.float32) + np.asarray(keys[:, -1]))
+
+    for n_keep in (512, 2048, 8192):
+        t0 = time.perf_counter()
+        out, ids = sc_sparse_attention(
+            q, keys, values, n_subspaces=4, alpha=0.05, n_keep=n_keep
+        )
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        mass = attention_mass_recall(q, keys, ids)
+        # exact attention for error reference
+        logits = jnp.einsum("hd,hsd->hs", q, keys) / np.sqrt(hd)
+        w = jax.nn.softmax(logits, axis=-1)
+        exact = jnp.einsum("hs,hsd->hd", w, values)
+        err = float(jnp.abs(out - exact).max())
+        print(f"n_keep={n_keep:5d} ({n_keep/s:6.2%} of keys): "
+              f"attention-mass recall {float(mass.mean()):.4f}, "
+              f"max|err| {err:.4f}, {dt*1e3:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: build a SuCo index and answer k-ANN queries.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SuCoConfig, build_index, suco_query
+from repro.data import make_dataset, recall, mean_relative_error
+
+
+def main() -> None:
+    print("== SuCo quickstart ==")
+    ds = make_dataset("gaussian_mixture", n=50_000, d=96, m=50, k=10)
+    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
+
+    cfg = SuCoConfig(n_subspaces=8, sqrt_k=32, kmeans_iters=8)
+    t0 = time.perf_counter()
+    index = build_index(x, cfg)
+    jax.block_until_ready(index.cell_ids)
+    print(f"index built in {time.perf_counter()-t0:.2f}s, "
+          f"footprint {index.memory_bytes()/1e6:.1f} MB "
+          f"(dataset {ds.x.nbytes/1e6:.1f} MB)")
+
+    res = suco_query(x, index, q, k=10, alpha=0.05, beta=0.01)
+    jax.block_until_ready(res.ids)
+    t0 = time.perf_counter()
+    res = suco_query(x, index, q, k=10, alpha=0.05, beta=0.01)
+    jax.block_until_ready(res.ids)
+    dt = time.perf_counter() - t0
+    print(f"answered {q.shape[0]} queries in {dt*1e3:.1f} ms "
+          f"({q.shape[0]/dt:.0f} QPS)")
+    print(f"recall@10 = {recall(np.asarray(res.ids), ds.gt_ids):.4f}, "
+          f"MRE = {mean_relative_error(np.asarray(res.dists), ds.gt_dists):.5f}")
+
+
+if __name__ == "__main__":
+    main()

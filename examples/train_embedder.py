@@ -1,0 +1,23 @@
+"""End-to-end training driver: train a small LM for a few hundred steps with
+checkpoint/resume (CPU-scaled; the same driver runs any --arch on a mesh).
+
+    PYTHONPATH=src python examples/train_embedder.py
+"""
+
+import argparse
+
+from repro.launch.train import train_once
+
+
+def main() -> None:
+    args = argparse.Namespace(
+        arch="granite-3-2b", reduced=True, steps=200, global_batch=8,
+        seq_len=64, d_model=0, micro_steps=1, lr=2e-3, seed=0, no_remat=False,
+        ckpt_dir="/tmp/repro_train_embedder", ckpt_every=50, log_every=20,
+        mesh="none",
+    )
+    train_once(args)
+
+
+if __name__ == "__main__":
+    main()

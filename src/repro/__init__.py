@@ -1,0 +1,8 @@
+"""repro — Subspace Collision (SuCo) ANN framework on JAX/TPU.
+
+Layers: core (the paper), kernels (Pallas TPU), distributed (multi-pod
+engine), models (assigned architecture pool), train/serve substrate,
+configs + launch (mesh, dry-run, drivers).
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,17 @@
+"""Competitor baselines, one per family the paper compares against (§5):
+
+  E2LSH      — LSH / collision counting (guarantees family)
+  IVFFlat    — vector quantisation, coarse inverted file
+  IMIPQ      — IMI + Multi-sequence (OPQ-lite, M=2)
+  HNSWLite   — proximity graph
+  RPForest   — random-projection trees (Annoy-style)
+  brute      — exact scan (ground truth / reference cost)
+"""
+
+from repro.baselines.ivf import IVFFlat
+from repro.baselines.lsh import E2LSH
+from repro.baselines.imi_pq import IMIPQ
+from repro.baselines.hnsw import HNSWLite
+from repro.baselines.rpforest import RPForest
+
+__all__ = ["IVFFlat", "E2LSH", "IMIPQ", "HNSWLite", "RPForest"]

@@ -1,0 +1,77 @@
+"""HNSW-lite baseline (the graph family's state of the art; numpy).
+
+Single-layer NSW with an HNSW-style entry hierarchy collapsed to greedy
+restarts — keeps the characteristic index/query trade-off (expensive
+neighbour identification at build, converging greedy walk at query) at a
+size the CPU container can build.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+__all__ = ["HNSWLite"]
+
+
+class HNSWLite:
+    def __init__(self, m: int = 16, ef_construction: int = 64, seed: int = 0):
+        self.m = m
+        self.efc = ef_construction
+        self.seed = seed
+
+    def _search(self, q: np.ndarray, ef: int, n_nodes: int) -> list[tuple[float, int]]:
+        """Beam search over the current graph; returns (dist, id) ascending."""
+        x = self.x
+        start = self.entry
+        d0 = float(((x[start] - q) ** 2).sum())
+        visited = {start}
+        cand = [(d0, start)]  # min-heap of frontier
+        best: list[tuple[float, int]] = [(-d0, start)]  # max-heap of results
+        while cand:
+            d, u = heapq.heappop(cand)
+            if d > -best[0][0] and len(best) >= ef:
+                break
+            for v in self.links[u]:
+                if v in visited:
+                    continue
+                visited.add(v)
+                dv = float(((x[v] - q) ** 2).sum())
+                if len(best) < ef or dv < -best[0][0]:
+                    heapq.heappush(cand, (dv, v))
+                    heapq.heappush(best, (-dv, v))
+                    if len(best) > ef:
+                        heapq.heappop(best)
+        return sorted((-nd, i) for nd, i in best)
+
+    def build(self, x: np.ndarray) -> "HNSWLite":
+        n = x.shape[0]
+        self.x = x
+        self.links: list[list[int]] = [[] for _ in range(n)]
+        self.entry = 0
+        for i in range(1, n):
+            res = self._search(x[i], self.efc, i)
+            nbrs = [v for _, v in res[: self.m]]
+            self.links[i] = nbrs
+            for v in nbrs:
+                self.links[v].append(i)
+                if len(self.links[v]) > 2 * self.m:
+                    # prune to the closest 2M (simple heuristic)
+                    dd = ((x[self.links[v]] - x[v]) ** 2).sum(1)
+                    keep = np.argsort(dd, kind="stable")[: 2 * self.m]
+                    self.links[v] = [self.links[v][j] for j in keep]
+        return self
+
+    def memory_bytes(self) -> int:
+        return sum(8 * len(l) + 56 for l in self.links)
+
+    def query(self, q: np.ndarray, k: int, ef_search: int = 64) -> np.ndarray:
+        out = np.zeros((q.shape[0], k), dtype=np.int64)
+        for i, qi in enumerate(q):
+            res = self._search(qi, max(ef_search, k), self.x.shape[0])
+            ids = [v for _, v in res[:k]]
+            while len(ids) < k:
+                ids.append(ids[-1] if ids else 0)
+            out[i] = ids
+        return out

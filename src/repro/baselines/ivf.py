@@ -1,0 +1,55 @@
+"""IVF-Flat baseline (the VQ family's simplest member; numpy).
+
+K-means over the full space; query probes the ``nprobe`` nearest cells and
+scans their inverted lists exactly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["IVFFlat"]
+
+
+class IVFFlat:
+    def __init__(self, n_cells: int = 256, iters: int = 10, seed: int = 0):
+        self.n_cells = n_cells
+        self.iters = iters
+        self.seed = seed
+
+    def build(self, x: np.ndarray) -> "IVFFlat":
+        rng = np.random.default_rng(self.seed)
+        n = x.shape[0]
+        c = x[rng.choice(n, self.n_cells, replace=False)].copy()
+        for _ in range(self.iters):
+            d2 = ((x**2).sum(1)[:, None] + (c**2).sum(1)[None, :] - 2 * x @ c.T)
+            a = d2.argmin(1)
+            for j in range(self.n_cells):
+                m = a == j
+                if m.any():
+                    c[j] = x[m].mean(0)
+        d2 = ((x**2).sum(1)[:, None] + (c**2).sum(1)[None, :] - 2 * x @ c.T)
+        a = d2.argmin(1)
+        self.centroids = c
+        self.lists = [np.nonzero(a == j)[0] for j in range(self.n_cells)]
+        self.x = x
+        return self
+
+    def memory_bytes(self) -> int:
+        return self.centroids.nbytes + sum(l.nbytes for l in self.lists)
+
+    def query(self, q: np.ndarray, k: int, nprobe: int = 8) -> np.ndarray:
+        out = np.zeros((q.shape[0], k), dtype=np.int64)
+        for i, qi in enumerate(q):
+            dc = ((self.centroids - qi) ** 2).sum(1)
+            cells = np.argpartition(dc, min(nprobe, len(dc) - 1))[:nprobe]
+            cand = np.concatenate([self.lists[c] for c in cells]) if nprobe else np.array([], np.int64)
+            if cand.size == 0:
+                cand = np.arange(min(k, self.x.shape[0]))
+            d = ((self.x[cand] - qi) ** 2).sum(1)
+            sel = np.argsort(d, kind="stable")[:k]
+            ids = cand[sel]
+            if ids.size < k:
+                ids = np.pad(ids, (0, k - ids.size), constant_values=ids[0] if ids.size else 0)
+            out[i] = ids[:k]
+        return out

@@ -1,0 +1,67 @@
+"""E2LSH-style collision-counting baseline (the LSH family; numpy).
+
+L tables x K p-stable projections; a point is a candidate when it collides
+with the query in >= ``threshold`` tables (C2LSH/QALSH-style counting),
+then candidates are re-ranked exactly.  Provides-guarantees family.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["E2LSH"]
+
+
+class E2LSH:
+    def __init__(self, n_tables: int = 8, n_bits: int = 12, w: float = 4.0, seed: int = 0):
+        self.L = n_tables
+        self.K = n_bits
+        self.w = w
+        self.seed = seed
+
+    def build(self, x: np.ndarray) -> "E2LSH":
+        rng = np.random.default_rng(self.seed)
+        n, d = x.shape
+        self.a = rng.normal(size=(self.L, self.K, d)).astype(np.float32)
+        self.b = (rng.random((self.L, self.K)) * self.w).astype(np.float32)
+        # (L, n, K) bucket coordinates -> hashed to one int per table
+        codes = np.floor(
+            (np.einsum("lkd,nd->lnk", self.a, x) + self.b[:, None, :]) / self.w
+        ).astype(np.int64)
+        self.tables: list[dict[int, np.ndarray]] = []
+        mult = rng.integers(1, 2**31, size=self.K)
+        self.mult = mult
+        for l in range(self.L):
+            h = (codes[l] * mult[None, :]).sum(1)
+            tab: dict[int, list[int]] = {}
+            for i, hv in enumerate(h):
+                tab.setdefault(int(hv), []).append(i)
+            self.tables.append({k: np.asarray(v, np.int64) for k, v in tab.items()})
+        self.x = x
+        return self
+
+    def memory_bytes(self) -> int:
+        b = self.a.nbytes + self.b.nbytes
+        for tab in self.tables:
+            b += sum(v.nbytes + 8 for v in tab.values())
+        return b
+
+    def query(self, q: np.ndarray, k: int, threshold: int = 1) -> np.ndarray:
+        out = np.zeros((q.shape[0], k), dtype=np.int64)
+        n = self.x.shape[0]
+        for i, qi in enumerate(q):
+            codes = np.floor(
+                ((self.a @ qi) + self.b) / self.w
+            ).astype(np.int64)  # (L, K)
+            counts = np.zeros(n, dtype=np.int32)
+            for l in range(self.L):
+                hv = int((codes[l] * self.mult).sum())
+                hit = self.tables[l].get(hv)
+                if hit is not None:
+                    counts[hit] += 1
+            cand = np.nonzero(counts >= threshold)[0]
+            if cand.size < k:
+                cand = np.arange(n)
+            d = ((self.x[cand] - qi) ** 2).sum(1)
+            out[i] = cand[np.argsort(d, kind="stable")[:k]]
+        return out

@@ -1,0 +1,73 @@
+"""Random-projection forest baseline (Annoy-style trees; numpy)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["RPForest"]
+
+
+class _Node:
+    __slots__ = ("w", "b", "left", "right", "ids")
+
+    def __init__(self, w=None, b=0.0, left=None, right=None, ids=None):
+        self.w, self.b, self.left, self.right, self.ids = w, b, left, right, ids
+
+
+class RPForest:
+    def __init__(self, n_trees: int = 8, leaf_size: int = 64, seed: int = 0):
+        self.n_trees = n_trees
+        self.leaf_size = leaf_size
+        self.seed = seed
+
+    def _build(self, ids: np.ndarray, rng) -> _Node:
+        if ids.size <= self.leaf_size:
+            return _Node(ids=ids)
+        w = rng.normal(size=self.x.shape[1]).astype(np.float32)
+        proj = self.x[ids] @ w
+        b = float(np.median(proj))
+        left = ids[proj <= b]
+        right = ids[proj > b]
+        if left.size == 0 or right.size == 0:
+            return _Node(ids=ids)
+        return _Node(w=w, b=b, left=self._build(left, rng), right=self._build(right, rng))
+
+    def build(self, x: np.ndarray) -> "RPForest":
+        self.x = x
+        rng = np.random.default_rng(self.seed)
+        ids = np.arange(x.shape[0])
+        self.trees = [self._build(ids, rng) for _ in range(self.n_trees)]
+        return self
+
+    def memory_bytes(self) -> int:
+        total = 0
+        stack = list(self.trees)
+        while stack:
+            nd = stack.pop()
+            if nd.ids is not None:
+                total += nd.ids.nbytes
+            else:
+                total += nd.w.nbytes + 8
+                stack.extend([nd.left, nd.right])
+        return total
+
+    def query(self, q: np.ndarray, k: int, search_k: int | None = None) -> np.ndarray:
+        search_k = search_k or (self.n_trees * self.leaf_size)
+        out = np.zeros((q.shape[0], k), dtype=np.int64)
+        for i, qi in enumerate(q):
+            cand: list[np.ndarray] = []
+            got = 0
+            for t in self.trees:
+                nd = t
+                while nd.ids is None:
+                    nd = nd.left if qi @ nd.w <= nd.b else nd.right
+                cand.append(nd.ids)
+                got += nd.ids.size
+                if got >= search_k:
+                    break
+            cc = np.unique(np.concatenate(cand))
+            if cc.size < k:
+                cc = np.arange(self.x.shape[0])
+            d = ((self.x[cc] - qi) ** 2).sum(1)
+            out[i] = cc[np.argsort(d, kind="stable")[:k]]
+        return out

@@ -1,0 +1,3 @@
+from repro.configs.registry import ARCH_IDS, get_config, reduced_config
+
+__all__ = ["ARCH_IDS", "get_config", "reduced_config"]

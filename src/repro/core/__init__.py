@@ -1,0 +1,47 @@
+"""repro.core — the Subspace Collision (SC) framework.
+
+Public API:
+  SubspaceSpec / contiguous_spec / sampled_spec   (Definition 3)
+  sc_scores_from_subspaces, sc_linear_query       (Algorithm 1, SC-Linear)
+  SuCoConfig, SuCoIndex, build_index, suco_query  (Algorithms 2-4, SuCo)
+  activate_cells_sorted, dynamic_activation_lax   (Algorithm 3)
+  theory                                          (Theorems 1-2)
+"""
+
+from repro.core.subspace import (
+    SubspaceSpec,
+    contiguous_spec,
+    sampled_spec,
+    collision_count,
+)
+from repro.core.sc_linear import QueryResult, sc_linear_query, sc_scores_from_subspaces, rerank
+from repro.core.suco import (
+    SuCoConfig,
+    SuCoIndex,
+    build_index,
+    suco_query,
+    suco_scores,
+    activate_cells_sorted,
+    dynamic_activation_lax,
+)
+from repro.core import theory, da_numpy
+
+__all__ = [
+    "SubspaceSpec",
+    "contiguous_spec",
+    "sampled_spec",
+    "collision_count",
+    "QueryResult",
+    "sc_linear_query",
+    "sc_scores_from_subspaces",
+    "rerank",
+    "SuCoConfig",
+    "SuCoIndex",
+    "build_index",
+    "suco_query",
+    "suco_scores",
+    "activate_cells_sorted",
+    "dynamic_activation_lax",
+    "theory",
+    "da_numpy",
+]

@@ -1,0 +1,42 @@
+"""Collision counting — the heart of the Subspace Collision framework.
+
+TPU adaptation (see DESIGN.md §3): the paper counts collisions by sorting
+per-subspace distances and walking an id list (`SC_scores[id]++`).  Scatter
+increments are hostile to the VPU, so we use the *threshold* formulation:
+
+    o collides with q in subspace i  <=>  dist_i(o, q) <= tau_i,
+
+where ``tau_i`` is the (alpha*n)-th smallest distance in subspace ``i``.
+This yields a dense ``(Ns, n)`` boolean mask whose column sum *is* the
+SC-score — identical semantics (the same alpha*n set, modulo exact-distance
+ties which the paper also breaks arbitrarily), zero scatters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["kth_smallest", "collision_thresholds", "collision_mask", "sc_scores"]
+
+
+def kth_smallest(values: jax.Array, k: int) -> jax.Array:
+    """k-th smallest (1-indexed) along the last axis, O(n log k) via top_k."""
+    neg_topk, _ = jax.lax.top_k(-values, k)
+    return -neg_topk[..., -1]
+
+
+def collision_thresholds(subspace_dists: jax.Array, count: int) -> jax.Array:
+    """``(Ns, n) -> (Ns,)`` per-subspace collision thresholds tau_i."""
+    return kth_smallest(subspace_dists, count)
+
+
+def collision_mask(subspace_dists: jax.Array, count: int) -> jax.Array:
+    """``(Ns, n) -> (Ns, n)`` bool: does point j collide with q in subspace i."""
+    tau = collision_thresholds(subspace_dists, count)
+    return subspace_dists <= tau[..., None]
+
+
+def sc_scores(subspace_dists: jax.Array, count: int) -> jax.Array:
+    """``(Ns, n) -> (n,)`` int32 SC-scores (Definition 4)."""
+    return jnp.sum(collision_mask(subspace_dists, count).astype(jnp.int32), axis=0)

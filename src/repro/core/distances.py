@@ -1,0 +1,87 @@
+"""Distance primitives shared by the whole framework.
+
+Two execution paths exist for the hot pairwise-L2 computation:
+
+* pure ``jnp`` (this module) — the reference semantics, used on CPU and as
+  the oracle for the Pallas kernel;
+* ``repro.kernels.pairwise_l2.ops.pairwise_sqdist`` — the blocked MXU Pallas
+  kernel targeted at TPU.  ``repro.core`` routes through
+  :func:`pairwise_sqdist` with ``impl="auto"`` which picks the kernel only on
+  TPU backends, so CPU tests/benches stay on the oracle path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Metric = Literal["l2", "l1"]
+
+__all__ = ["pairwise_sqdist", "pairwise_dist", "sq_l2", "Metric"]
+
+
+def sq_l2(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Squared L2 between matching rows of ``a`` and ``b``."""
+    diff = a - b
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def _sqdist_jnp(q: jax.Array, x: jax.Array) -> jax.Array:
+    """``(m, d), (n, d) -> (m, n)`` squared L2 via the matmul identity."""
+    qn = jnp.sum(q * q, axis=-1)
+    xn = jnp.sum(x * x, axis=-1)
+    # fp32 accumulation even when inputs are bf16.
+    cross = jnp.einsum("md,nd->mn", q, x, preferred_element_type=jnp.float32)
+    d2 = qn[:, None].astype(jnp.float32) + xn[None, :].astype(jnp.float32) - 2.0 * cross
+    return jnp.maximum(d2, 0.0)
+
+
+def pairwise_sqdist(q: jax.Array, x: jax.Array, *, impl: str = "auto") -> jax.Array:
+    """Pairwise squared L2 distances ``(m, d), (n, d) -> (m, n)``.
+
+    ``impl``: "jnp" | "pallas" | "auto" (pallas iff running on TPU).
+    """
+    if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
+        from repro.kernels.pairwise_l2 import ops as _ops
+
+        return _ops.pairwise_sqdist(q, x)
+    return _sqdist_jnp(q, x)
+
+
+def _l1_block(q: jax.Array, xb: jax.Array) -> jax.Array:
+    # (m, d), (nb, d) -> (m, nb); broadcast is fine for a block.
+    return jnp.sum(jnp.abs(q[:, None, :] - xb[None, :, :]), axis=-1)
+
+
+def pairwise_dist(
+    q: jax.Array,
+    x: jax.Array,
+    metric: Metric = "l2",
+    *,
+    block: int = 16384,
+    impl: str = "auto",
+) -> jax.Array:
+    """Pairwise distances under ``metric``; L2 returns *squared* distances.
+
+    Squared L2 preserves the NN ordering, which is all the framework needs;
+    callers that report metric values take ``sqrt`` at the edge.
+    L1 is computed blocked over ``x`` to bound the broadcast intermediate.
+    """
+    if metric == "l2":
+        return pairwise_sqdist(q, x, impl=impl)
+    if metric != "l1":
+        raise ValueError(f"unknown metric {metric!r}")
+    n = x.shape[0]
+    if n <= block:
+        return _l1_block(q, x)
+    nblocks = -(-n // block)
+    pad = nblocks * block - n
+    # Pad with +inf-ish rows so padded columns never win any NN selection.
+    xp = jnp.pad(x, ((0, pad), (0, 0)), constant_values=1e30)
+    xb = xp.reshape(nblocks, block, x.shape[1])
+    out = jax.lax.map(lambda blk: _l1_block(q, blk), xb)  # (nb, m, block)
+    out = jnp.moveaxis(out, 0, 1).reshape(q.shape[0], nblocks * block)
+    return out[:, :n]

@@ -1,0 +1,85 @@
+"""Batched Lloyd K-means in JAX (the paper's Algorithm 2 building block).
+
+SuCo runs ``2 * Ns`` small K-means problems (two half-subspaces per
+subspace), each with only ``sqrt(K)`` centroids (~50).  We therefore batch
+all codebooks into one ``vmap`` so a single XLA program trains the whole
+index — this is the TPU analogue of the paper's "one OpenMP task per
+subspace" parallelism.
+
+The assignment step can optionally run through the fused Pallas
+``kmeans_assign`` kernel (distance + argmin without materialising the
+``(n, K)`` distance matrix).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import pairwise_sqdist
+
+__all__ = ["KMeansResult", "kmeans", "kmeans_batched", "assign"]
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array  # (k, s)
+    assignments: jax.Array  # (n,) int32
+    inertia: jax.Array  # () sum of squared distances to the owning centroid
+
+
+def assign(x: jax.Array, centroids: jax.Array, *, impl: str = "auto") -> jax.Array:
+    """``argmin_c ||x - centroid_c||^2`` for every row of ``x``."""
+    if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
+        from repro.kernels.kmeans_assign import ops as _ops
+
+        return _ops.kmeans_assign(x, centroids)
+    d2 = pairwise_sqdist(x, centroids, impl="jnp")  # (n, k)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def _init_centroids(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """Random distinct-row init (the paper uses plain Lloyd; kmeans++ is
+    unnecessary at sqrt(K)=50 granularity and costs an extra O(nk) pass)."""
+    n = x.shape[0]
+    idx = jax.random.permutation(key, n)[:k]
+    return jnp.take(x, idx, axis=0)
+
+
+def _lloyd_step(x: jax.Array, centroids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    k = centroids.shape[0]
+    d2 = pairwise_sqdist(x, centroids, impl="jnp")  # (n, k)
+    a = jnp.argmin(d2, axis=1)
+    one_hot = jax.nn.one_hot(a, k, dtype=x.dtype)  # (n, k)
+    sums = jnp.einsum("nk,ns->ks", one_hot, x)
+    counts = jnp.sum(one_hot, axis=0)  # (k,)
+    new = sums / jnp.maximum(counts, 1.0)[:, None]
+    # Empty cluster: keep the previous centroid (matches common practice and
+    # keeps the update a fixed-shape op).
+    new = jnp.where(counts[:, None] > 0, new, centroids)
+    inertia = jnp.sum(jnp.take_along_axis(d2, a[:, None], axis=1))
+    return new, inertia
+
+
+def kmeans(key: jax.Array, x: jax.Array, k: int, iters: int) -> KMeansResult:
+    """Plain Lloyd with ``iters`` update steps; deterministic given ``key``."""
+    centroids0 = _init_centroids(key, x, k)
+
+    def body(c, _):
+        new, inertia = _lloyd_step(x, c)
+        return new, inertia
+
+    centroids, inertias = jax.lax.scan(body, centroids0, None, length=iters)
+    a = assign(x, centroids, impl="jnp")
+    return KMeansResult(centroids, a, inertias[-1])
+
+
+def kmeans_batched(key: jax.Array, xs: jax.Array, k: int, iters: int) -> KMeansResult:
+    """``xs: (B, n, s)`` -> centroids ``(B, k, s)``, assignments ``(B, n)``.
+
+    One fused program for all ``B`` codebooks (B = 2*Ns for SuCo).
+    """
+    keys = jax.random.split(key, xs.shape[0])
+    return jax.vmap(lambda kk, x: kmeans(kk, x, k, iters))(keys, xs)

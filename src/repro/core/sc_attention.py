@@ -1,0 +1,108 @@
+"""Beyond-paper application: Subspace-Collision sparse attention.
+
+Long-context decode spends its time scoring one query against an S=500k KV
+cache.  The paper's insight — SC-score is a cheap, theoretically-grounded
+proxy for nearest-neighbour rank — applies directly: treat the cached keys
+as the dataset, the (RoPE'd) query as the query point, pick the top-(beta*S)
+keys by SC-score, and run exact softmax attention on that candidate set
+only.
+
+Attention ranks keys by inner product, so the per-subspace "distance" here
+is the negated partial dot product (max-inner-product collisions); under L2
+on RMS-normalised keys the two coincide and the framework's guarantees
+carry over.  Cost per
+head drops from O(S*hd) to O(S*hd/Ns ... ) distances in subspaces of width
+hd/Ns plus an O(beta*S*hd) exact pass — the same alpha/beta trade the paper
+makes for ANN.
+
+This module is exploratory (EXPERIMENTS.md §Beyond-paper): the quality
+metric is *attention-mass recall* — the fraction of the true softmax mass
+captured by the selected keys.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.collision import kth_smallest
+
+__all__ = ["sc_select_keys", "sc_sparse_attention", "attention_mass_recall"]
+
+
+def _subspace_scores(q: jax.Array, keys: jax.Array, n_subspaces: int, count: int) -> jax.Array:
+    """``q: (hd,), keys: (S, hd) -> (S,)`` SC-scores with L2 collisions."""
+    s, hd = keys.shape
+    w = hd // n_subspaces
+    kq = q[: w * n_subspaces].reshape(n_subspaces, w)
+    kk = keys[:, : w * n_subspaces].reshape(s, n_subspaces, w).transpose(1, 0, 2)
+
+    def per_sub(acc, inp):
+        ks, qs = inp  # (S, w), (w,)
+        # negated partial inner product: "closest" == largest q.k
+        d = -(ks @ qs)
+        tau = kth_smallest(d, count)
+        return acc + (d <= tau).astype(jnp.int32), None
+
+    scores, _ = jax.lax.scan(per_sub, jnp.zeros(s, jnp.int32), (kk, kq))
+    return scores
+
+
+def sc_select_keys(
+    q: jax.Array,  # (H, hd)
+    keys: jax.Array,  # (H, S, hd)
+    *,
+    n_subspaces: int = 4,
+    alpha: float = 0.05,
+    n_keep: int = 1024,
+) -> jax.Array:
+    """Per head: ids (H, n_keep) of the highest-SC-score keys."""
+    s = keys.shape[1]
+    count = max(1, int(alpha * s))
+
+    def per_head(qh, kh):
+        sc = _subspace_scores(qh, kh, n_subspaces, count)
+        _, ids = jax.lax.top_k(sc, n_keep)
+        return ids
+
+    return jax.vmap(per_head)(q, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("n_subspaces", "alpha", "n_keep"))
+def sc_sparse_attention(
+    q: jax.Array,  # (H, hd)
+    keys: jax.Array,  # (H, S, hd)
+    values: jax.Array,  # (H, S, hd)
+    *,
+    n_subspaces: int = 4,
+    alpha: float = 0.05,
+    n_keep: int = 1024,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (H, hd), selected ids (H, n_keep))."""
+    ids = sc_select_keys(q, keys, n_subspaces=n_subspaces, alpha=alpha, n_keep=n_keep)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    def per_head(qh, kh, vh, idh):
+        ks = jnp.take(kh, idh, axis=0)  # (n_keep, hd)
+        vs = jnp.take(vh, idh, axis=0)
+        logits = (ks @ qh) * scale
+        w = jax.nn.softmax(logits)
+        return w @ vs
+
+    out = jax.vmap(per_head)(q, keys, values, ids)
+    return out, ids
+
+
+def attention_mass_recall(q: jax.Array, keys: jax.Array, ids: jax.Array) -> jax.Array:
+    """Fraction of the full softmax mass captured by the selected keys."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    def per_head(qh, kh, idh):
+        logits = (kh @ qh) * scale
+        w = jax.nn.softmax(logits)
+        return jnp.sum(jnp.take(w, idh))
+
+    return jax.vmap(per_head)(q, keys, ids)

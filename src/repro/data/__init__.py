@@ -1,0 +1,27 @@
+from repro.data.datasets import (
+    Dataset,
+    GENERATORS,
+    exact_knn,
+    gaussian_mixture,
+    correlated,
+    uniform,
+    zipf_mixture,
+    make_dataset,
+    make_queries,
+    recall,
+    mean_relative_error,
+)
+
+__all__ = [
+    "Dataset",
+    "GENERATORS",
+    "exact_knn",
+    "gaussian_mixture",
+    "correlated",
+    "uniform",
+    "zipf_mixture",
+    "make_dataset",
+    "make_queries",
+    "recall",
+    "mean_relative_error",
+]

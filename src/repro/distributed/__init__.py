@@ -1,0 +1,21 @@
+from repro.distributed.engine import (
+    DistSuCoConfig,
+    build_sharded,
+    index_shardings,
+    make_query_fn,
+    query_sharded,
+    shard_index,
+)
+from repro.distributed.elastic import reshard_index, index_to_host, index_from_host
+
+__all__ = [
+    "DistSuCoConfig",
+    "build_sharded",
+    "index_shardings",
+    "make_query_fn",
+    "query_sharded",
+    "shard_index",
+    "reshard_index",
+    "index_to_host",
+    "index_from_host",
+]

@@ -1,0 +1,69 @@
+"""Elastic scaling for the sharded SuCo index.
+
+The index layout is a pure function of (dataset order, config): points are
+range-sharded over the point axes and subspaces over the model axis.  That
+makes re-scaling mechanical:
+
+* mesh grows/shrinks along the point axes  -> re-slice point ranges
+  (``reshard_index`` just device_puts with the new layout; cell_ids are
+  per-point so no recomputation is needed);
+* mesh model axis changes                  -> subspace ownership moves, but
+  centroids/counts are replicated along point axes already, so the same
+  device_put applies;
+* a worker is lost mid-build              -> rebuild only its point range
+  (deterministic k-means given the replicated centroids) or reload its
+  shard from the checkpoint manifest.
+
+Checkpoints store the logical (unsharded) arrays — see train.checkpoint —
+so this module is thin glue: layout in, layout out.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.suco import SuCoIndex
+from repro.distributed.engine import DistSuCoConfig, index_shardings
+
+__all__ = ["reshard_index", "index_to_host", "index_from_host"]
+
+
+def reshard_index(new_mesh, cfg: DistSuCoConfig, index: SuCoIndex) -> SuCoIndex:
+    """Move an index (from any previous mesh) onto ``new_mesh``."""
+    sh = index_shardings(new_mesh, cfg)
+    return SuCoIndex(
+        centroids1=jax.device_put(index.centroids1, sh["centroids"]),
+        centroids2=jax.device_put(index.centroids2, sh["centroids"]),
+        cell_ids=jax.device_put(index.cell_ids, sh["cell_ids"]),
+        cell_counts=jax.device_put(index.cell_counts, sh["cell_counts"]),
+        spec=index.spec,
+        sqrt_k=index.sqrt_k,
+    )
+
+
+def index_to_host(index: SuCoIndex) -> dict:
+    """Materialise the logical index on host (checkpoint payload)."""
+    import numpy as np
+
+    return {
+        "centroids1": np.asarray(index.centroids1),
+        "centroids2": np.asarray(index.centroids2),
+        "cell_ids": np.asarray(index.cell_ids),
+        "cell_counts": np.asarray(index.cell_counts),
+    }
+
+
+def index_from_host(payload: dict, spec, sqrt_k: int, mesh=None, cfg=None) -> SuCoIndex:
+    import jax.numpy as jnp
+
+    idx = SuCoIndex(
+        centroids1=jnp.asarray(payload["centroids1"]),
+        centroids2=jnp.asarray(payload["centroids2"]),
+        cell_ids=jnp.asarray(payload["cell_ids"]),
+        cell_counts=jnp.asarray(payload["cell_counts"]),
+        spec=spec,
+        sqrt_k=sqrt_k,
+    )
+    if mesh is not None and cfg is not None:
+        idx = reshard_index(mesh, cfg, idx)
+    return idx

@@ -1,0 +1,284 @@
+"""Distributed SuCo engine: multi-pod index build + query via shard_map.
+
+Sharding layout (DESIGN.md §5) over mesh axes ``(pod, data, model)``:
+
+  X            (n, d)         P((pod, data), model)   points x dim-slices
+  cell_ids     (Ns, n)        P(model, (pod, data))   subspaces x points
+  cell_counts  (Ns, K)        P(model, None)          global counts
+  centroids    (Ns, sqrtK, h) P(model, None, None)
+  queries      (mq, d)        P(None, model)          replicated over points
+
+Requirements (asserted): ``Ns % model == 0`` and ``d % Ns == 0`` — each
+model rank owns ``Ns/model`` whole subspaces, i.e. a contiguous dim slice.
+The single-pod mesh is the same code with ``point_axes=("data",)``.
+
+Query data flow per query chunk:
+  local collision masks  ->  psum(SC-score, model)      [int8, O(n_local)]
+  local top-(beta n_loc) ->  partial-distance re-rank -> psum(model)
+  local top-k            ->  all_gather((dist,id), point axes) -> top-k.
+
+The only collectives are one tiny int8 psum per point-shard row, one fp32
+psum over (mq, beta*n_local), and a k-sized gather: communication is
+O(n_local) per device and independent of the *global* dataset size — the
+design scales to thousands of nodes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.suco import SuCoIndex, activate_cells_sorted
+from repro.core import subspace as sub
+from repro.core.distances import pairwise_sqdist
+
+__all__ = ["DistSuCoConfig", "index_shardings", "shard_index", "build_sharded", "query_sharded"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistSuCoConfig:
+    n_subspaces: int = 16
+    sqrt_k: int = 64
+    kmeans_iters: int = 10
+    alpha: float = 0.03
+    beta: float = 0.003
+    k: int = 50
+    q_chunk: int = 32  # queries processed per scan step (bounds the
+    # (q_chunk, n_local) score block)
+    point_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    seed: int = 0
+
+    @property
+    def n_cells(self) -> int:
+        return self.sqrt_k**2
+
+
+def _check(mesh: Mesh, cfg: DistSuCoConfig, d: int) -> tuple[int, int]:
+    tp = mesh.shape[cfg.model_axis]
+    if cfg.n_subspaces % tp:
+        raise ValueError(f"Ns={cfg.n_subspaces} must divide by model={tp}")
+    if d % cfg.n_subspaces:
+        raise ValueError(f"d={d} must divide by Ns={cfg.n_subspaces}")
+    ns_loc = cfg.n_subspaces // tp
+    s = d // cfg.n_subspaces
+    return ns_loc, s
+
+
+def index_shardings(mesh: Mesh, cfg: DistSuCoConfig) -> dict[str, NamedSharding]:
+    pa = cfg.point_axes
+    return dict(
+        x=NamedSharding(mesh, P(pa, cfg.model_axis)),
+        cell_ids=NamedSharding(mesh, P(cfg.model_axis, pa)),
+        cell_counts=NamedSharding(mesh, P(cfg.model_axis, None)),
+        centroids=NamedSharding(mesh, P(cfg.model_axis, None, None)),
+        queries=NamedSharding(mesh, P(None, cfg.model_axis)),
+        replicated=NamedSharding(mesh, P()),
+    )
+
+
+def shard_index(mesh: Mesh, cfg: DistSuCoConfig, index: SuCoIndex) -> SuCoIndex:
+    """Place a locally-built SuCoIndex onto the mesh with the engine layout."""
+    sh = index_shardings(mesh, cfg)
+    return SuCoIndex(
+        centroids1=jax.device_put(index.centroids1, sh["centroids"]),
+        centroids2=jax.device_put(index.centroids2, sh["centroids"]),
+        cell_ids=jax.device_put(index.cell_ids, sh["cell_ids"]),
+        cell_counts=jax.device_put(index.cell_counts, sh["cell_counts"]),
+        spec=index.spec,
+        sqrt_k=index.sqrt_k,
+    )
+
+
+def _split_local(x_loc: jax.Array, ns_loc: int, s: int) -> tuple[jax.Array, jax.Array, int]:
+    """``(n_loc, ns_loc * s) -> 2 x (ns_loc, n_loc, h1)`` half views (padded)."""
+    n_loc = x_loc.shape[0]
+    xs = x_loc.reshape(n_loc, ns_loc, s).transpose(1, 0, 2)  # (ns, n, s)
+    h1 = (s + 1) // 2
+    a = xs[..., :h1]
+    b = xs[..., h1:]
+    if b.shape[-1] < h1:
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, h1 - b.shape[-1])))
+    return a, b, h1
+
+
+# --------------------------------------------------------------------------
+# Build
+# --------------------------------------------------------------------------
+
+
+def build_sharded(mesh: Mesh, x: jax.Array, cfg: DistSuCoConfig) -> SuCoIndex:
+    """Distributed Algorithm 2: K-means via psum'd sufficient statistics."""
+    n, d = x.shape
+    ns_loc, s = _check(mesh, cfg, d)
+    pa = cfg.point_axes
+    all_point_axes = pa
+    sqrt_k = cfg.sqrt_k
+
+    def _build(x_loc: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+        a, b, h1 = _split_local(x_loc, ns_loc, s)
+        cb = jnp.concatenate([a, b], axis=0)  # (2ns_loc, n_loc, h1)
+        n_loc = cb.shape[1]
+
+        # deterministic init: the first sqrt_k points of point-shard 0
+        shard_idx = jnp.zeros((), jnp.int32)
+        for ax in all_point_axes:
+            shard_idx = shard_idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        first = (shard_idx == 0).astype(cb.dtype)
+        init = jax.lax.psum(cb[:, :sqrt_k, :] * first, all_point_axes)
+
+        def lloyd(c, _):
+            # c: (2ns_loc, sqrt_k, h1)
+            d2 = jax.vmap(lambda xx, cc: pairwise_sqdist(xx, cc, impl="jnp"))(cb, c)
+            assign = jnp.argmin(d2, axis=-1)  # (2ns, n_loc)
+            oh = jax.nn.one_hot(assign, sqrt_k, dtype=cb.dtype)  # (2ns, n_loc, k)
+            sums = jnp.einsum("bnk,bnh->bkh", oh, cb)
+            cnts = jnp.sum(oh, axis=1)  # (2ns, k)
+            sums = jax.lax.psum(sums, all_point_axes)
+            cnts = jax.lax.psum(cnts, all_point_axes)
+            new = sums / jnp.maximum(cnts, 1.0)[..., None]
+            new = jnp.where(cnts[..., None] > 0, new, c)
+            return new, None
+
+        c_fin, _ = jax.lax.scan(lloyd, init, None, length=cfg.kmeans_iters)
+
+        d2 = jax.vmap(lambda xx, cc: pairwise_sqdist(xx, cc, impl="jnp"))(cb, c_fin)
+        assign = jnp.argmin(d2, axis=-1).astype(jnp.int32)  # (2ns, n_loc)
+        a1, a2 = assign[:ns_loc], assign[ns_loc:]
+        cell_ids = a1 * sqrt_k + a2  # (ns_loc, n_loc)
+        counts = jax.vmap(
+            lambda cc: jnp.bincount(cc, length=sqrt_k * sqrt_k).astype(jnp.int32)
+        )(cell_ids)
+        counts = jax.lax.psum(counts, all_point_axes)
+        return c_fin[:ns_loc], c_fin[ns_loc:], cell_ids, counts
+
+    fn = jax.jit(
+        jax.shard_map(
+            _build,
+            mesh=mesh,
+            in_specs=P(pa, cfg.model_axis),
+            out_specs=(
+                P(cfg.model_axis, None, None),
+                P(cfg.model_axis, None, None),
+                P(cfg.model_axis, pa),
+                P(cfg.model_axis, None),
+            ),
+        )
+    )
+    c1, c2, cell_ids, counts = fn(x)
+    spec = sub.contiguous_spec(d, cfg.n_subspaces)
+    return SuCoIndex(c1, c2, cell_ids, counts, spec=spec, sqrt_k=sqrt_k)
+
+
+# --------------------------------------------------------------------------
+# Query
+# --------------------------------------------------------------------------
+
+
+def make_query_fn(mesh: Mesh, cfg: DistSuCoConfig, n: int, d: int, mq: int):
+    """Build the jitted sharded query step: (x, index arrays, q) -> (ids, dists).
+
+    Returned fn signature: f(x, c1, c2, cell_ids, counts, q).
+    """
+    ns_loc, s = _check(mesh, cfg, d)
+    pa = cfg.point_axes
+    sqrt_k = cfg.sqrt_k
+    k = cfg.k
+    n_pt_shards = math.prod(mesh.shape[a] for a in pa)
+    n_loc = n // n_pt_shards
+    target = sub.collision_count(n, cfg.alpha)
+    m_cand = max(k, int(cfg.beta * n_loc))
+    q_chunk = min(cfg.q_chunk, mq)
+    if mq % q_chunk:
+        raise ValueError(f"mq={mq} must divide by q_chunk={q_chunk}")
+
+    def _query(x_loc, c1, c2, cell_ids, counts, q_loc):
+        # x_loc: (n_loc, ns_loc*s); q_loc: (mq, ns_loc*s)
+        shard_idx = jnp.zeros((), jnp.int32)
+        for ax in pa:
+            shard_idx = shard_idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        offset = shard_idx * n_loc
+
+        qa, qb, _ = _split_local(q_loc, ns_loc, s)  # (ns_loc, mq, h1)
+        d1 = jax.vmap(lambda qq, cc: pairwise_sqdist(qq, cc, impl="jnp"))(qa, c1)
+        d2 = jax.vmap(lambda qq, cc: pairwise_sqdist(qq, cc, impl="jnp"))(qb, c2)
+        # (ns_loc, mq, sqrt_k)
+
+        def chunk_fn(qc_idx):
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, qc_idx * q_chunk, q_chunk, axis=1)
+            d1c, d2c = sl(d1), sl(d2)  # (ns_loc, q_chunk, sqrt_k)
+
+            def per_sub(acc, inp):
+                d1_i, d2_i, cells_i, counts_i = inp
+
+                def per_query(d1_q, d2_q):
+                    mask = activate_cells_sorted(d1_q, d2_q, counts_i, target)
+                    return jnp.take(mask, cells_i)  # (n_loc,)
+
+                coll = jax.vmap(per_query)(d1_i, d2_i)  # (q_chunk, n_loc)
+                return acc + coll.astype(jnp.int8), None
+
+            init = jnp.zeros((q_chunk, n_loc), jnp.int8)
+            # mark the carry as device-varying so scan types match (shard_map VMA)
+            init = jax.lax.pcast(init, tuple(mesh.axis_names), to="varying")
+            scores, _ = jax.lax.scan(per_sub, init, (d1c, d2c, cell_ids, counts))
+            scores = jax.lax.psum(scores, cfg.model_axis)  # full SC-scores
+
+            _, cand = jax.lax.top_k(scores.astype(jnp.int32), m_cand)  # (qc, m_cand)
+            # partial-distance re-rank over this rank's dim slice
+            q_blk = jax.lax.dynamic_slice_in_dim(q_loc, qc_idx * q_chunk, q_chunk, axis=0)
+            xc = jnp.take(x_loc, cand, axis=0)  # (qc, m_cand, d_loc)
+            diff = xc - q_blk[:, None, :]
+            part = jnp.sum(diff * diff, axis=-1)  # (qc, m_cand)
+            full = jax.lax.psum(part, cfg.model_axis)
+            neg, pos = jax.lax.top_k(-full, k)
+            ids = jnp.take_along_axis(cand, pos, axis=1) + offset
+            return ids.astype(jnp.int32), -neg
+
+        n_chunks = mq // q_chunk
+        ids, dists = jax.lax.map(chunk_fn, jnp.arange(n_chunks))
+        ids = ids.reshape(mq, k)
+        dists = dists.reshape(mq, k)
+
+        # global top-k merge over point shards
+        all_ids = jax.lax.all_gather(ids, pa, axis=0, tiled=False)
+        all_d = jax.lax.all_gather(dists, pa, axis=0, tiled=False)
+        all_ids = jnp.moveaxis(all_ids, 0, 1).reshape(mq, -1)
+        all_d = jnp.moveaxis(all_d, 0, 1).reshape(mq, -1)
+        neg, pos = jax.lax.top_k(-all_d, k)
+        final_ids = jnp.take_along_axis(all_ids, pos, axis=1)
+        return final_ids, -neg
+
+    return jax.jit(
+        jax.shard_map(
+            _query,
+            mesh=mesh,
+            in_specs=(
+                P(pa, cfg.model_axis),
+                P(cfg.model_axis, None, None),
+                P(cfg.model_axis, None, None),
+                P(cfg.model_axis, pa),
+                P(cfg.model_axis, None),
+                P(None, cfg.model_axis),
+            ),
+            out_specs=(P(None, None), P(None, None)),
+            # The final (ids, dists) are bitwise-identical on every shard
+            # (all_gather + deterministic top_k), but the VMA analysis cannot
+            # prove replication through gather+top_k — disable the check.
+            check_vma=False,
+        )
+    )
+
+
+def query_sharded(
+    mesh: Mesh, cfg: DistSuCoConfig, x: jax.Array, index: SuCoIndex, q: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Convenience wrapper: builds and invokes the sharded query step."""
+    fn = make_query_fn(mesh, cfg, x.shape[0], x.shape[1], q.shape[0])
+    return fn(x, index.centroids1, index.centroids2, index.cell_ids, index.cell_counts, q)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each kernel directory follows the kernel.py (pallas_call + BlockSpec) /
+ops.py (jit'd public wrapper) / ref.py (pure-jnp oracle) convention and is
+validated under ``interpret=True`` in tests/test_kernels.py.
+"""
+
+from repro.kernels.pairwise_l2.ops import pairwise_sqdist
+from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.gather_rerank.ops import gather_rerank
+from repro.kernels.linear_attn.ops import linear_attention
+from repro.kernels.sc_score.ops import sc_scores_fused
+
+__all__ = ["pairwise_sqdist", "kmeans_assign", "gather_rerank",
+           "linear_attention", "sc_scores_fused"]

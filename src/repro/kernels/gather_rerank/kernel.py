@@ -1,0 +1,59 @@
+"""Scalar-prefetch gather + exact-distance Pallas kernel (the re-rank hot
+loop).
+
+Re-ranking gathers ``m_c = beta*n`` candidate rows (per query) from the
+dataset and computes exact squared distances to the query.  On TPU the
+candidate ids are *scalar-prefetched* into SMEM so they can drive the
+``BlockSpec`` index map: grid step ``i`` DMAs exactly row ``ids[i]`` from HBM
+into VMEM.  Pallas pipelines these block fetches across grid steps, so the
+gather gets double-buffered DMA/compute overlap for free — this is the
+canonical TPU embedding-gather pattern.
+
+Layout: queries and ids are flattened to one grid, ``ids: (mq * mc,)``;
+``q`` is indexed by ``i // mc``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, x_ref, q_ref, out_ref):
+    del ids_ref  # only used by the index maps
+    xr = x_ref[...].astype(jnp.float32)  # (1, d)
+    qr = q_ref[...].astype(jnp.float32)  # (1, d)
+    diff = xr - qr
+    out_ref[...] = jnp.sum(diff * diff, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("mc", "interpret"))
+def gather_rerank_kernel(
+    ids: jax.Array,  # (mq*mc,) int32 candidate row ids
+    x: jax.Array,  # (n, d)
+    q: jax.Array,  # (mq, d)
+    *,
+    mc: int,
+    interpret: bool = False,
+) -> jax.Array:
+    total = ids.shape[0]
+    d = x.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(total,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, ids_ref: (ids_ref[i], 0)),
+            pl.BlockSpec((1, d), lambda i, ids_ref: (i // mc, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, ids_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((total, 1), jnp.float32),
+        interpret=interpret,
+    )(ids, x, q)

@@ -1,0 +1,25 @@
+"""jit'd wrapper for gather_rerank."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather_rerank.kernel import gather_rerank_kernel
+from repro.kernels.gather_rerank.ref import gather_rerank_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rerank(
+    ids: jax.Array, x: jax.Array, q: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """``ids: (mq, mc), x: (n, d), q: (mq, d) -> (mq, mc)`` exact sq-L2."""
+    mq, mc = ids.shape
+    flat = ids.reshape(-1).astype(jnp.int32)
+    out = gather_rerank_kernel(flat, x, q, mc=mc, interpret=interpret)
+    return out.reshape(mq, mc)
+
+
+__all__ = ["gather_rerank", "gather_rerank_ref"]

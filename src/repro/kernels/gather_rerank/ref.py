@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the gather_rerank kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rerank_ref(ids: jax.Array, x: jax.Array, q: jax.Array) -> jax.Array:
+    """``ids: (mq, mc), x: (n, d), q: (mq, d) -> (mq, mc)`` exact sq-L2."""
+    xc = jnp.take(x, ids, axis=0).astype(jnp.float32)  # (mq, mc, d)
+    diff = xc - q[:, None, :].astype(jnp.float32)
+    return jnp.sum(diff * diff, axis=-1)

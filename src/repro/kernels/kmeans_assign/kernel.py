@@ -1,0 +1,55 @@
+"""Fused K-means assignment Pallas kernel: distance + argmin in one pass.
+
+For ``x: (n, s)`` and ``centroids: (k, s)`` produces ``argmin_c ||x - c||^2``
+without materialising the ``(n, k)`` distance matrix in HBM.  The whole
+codebook (sqrt(K) ~ 50 rows) lives in VMEM for every grid step; points
+stream through in ``bn`` blocks.
+
+Padding contract (enforced by ops.py): pad dims with 0 (no distance effect),
+pad centroid *rows* with a large constant so they never win the argmin, pad
+point rows freely (junk assignments are sliced off).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, c_ref, out_ref):
+    xb = x_ref[...].astype(jnp.float32)  # (bn, s)
+    cb = c_ref[...].astype(jnp.float32)  # (k, s)
+    xn = jnp.sum(xb * xb, axis=1, keepdims=True)  # (bn, 1)
+    cn = jnp.sum(cb * cb, axis=1, keepdims=True).T  # (1, k)
+    cross = jax.lax.dot_general(
+        xb,
+        cb,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    d2 = xn + cn - 2.0 * cross  # (bn, k)
+    out_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def kmeans_assign_kernel(
+    x: jax.Array, centroids: jax.Array, *, bn: int = 1024, interpret: bool = False
+) -> jax.Array:
+    """Caller pre-pads: n % bn == 0; s, k already VMEM-friendly. -> (n, 1)."""
+    n, s = x.shape
+    k, _ = centroids.shape
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, s), lambda i: (i, 0)),
+            pl.BlockSpec((k, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        interpret=interpret,
+    )(x, centroids)

@@ -1,0 +1,38 @@
+"""jit'd wrapper for kmeans_assign: padding + kernel dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_assign.kernel import kmeans_assign_kernel
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+
+_CENTROID_PAD = 1.0e6  # padded centroids sit ~1e12 away -> never win argmin
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def kmeans_assign(
+    x: jax.Array, centroids: jax.Array, *, bn: int = 1024, interpret: bool = False
+) -> jax.Array:
+    """``(n, s), (k, s) -> (n,)`` int32 fused distance+argmin."""
+    n, s = x.shape
+    k, _ = centroids.shape
+    sp = _round_up(s, 128)
+    kp = _round_up(k, 8)
+    bn_ = min(bn, _round_up(n, 8))
+    np_ = _round_up(n, bn_)
+    xp = jnp.pad(x, ((0, np_ - n), (0, sp - s)))
+    cp = jnp.pad(centroids, ((0, 0), (0, sp - s)))
+    cp = jnp.pad(cp, ((0, kp - k), (0, 0)), constant_values=_CENTROID_PAD)
+    out = kmeans_assign_kernel(xp, cp, bn=bn_, interpret=interpret)
+    return out[:n, 0]
+
+
+__all__ = ["kmeans_assign", "kmeans_assign_ref"]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the kmeans_assign kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    """``(n, s), (k, s) -> (n,)`` int32 nearest-centroid ids."""
+    xf = x.astype(jnp.float32)
+    cf = centroids.astype(jnp.float32)
+    d2 = (
+        jnp.sum(xf * xf, axis=1)[:, None]
+        + jnp.sum(cf * cf, axis=1)[None, :]
+        - 2.0 * jnp.einsum("ns,ks->nk", xf, cf, preferred_element_type=jnp.float32)
+    )
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)

@@ -1,0 +1,132 @@
+"""Chunked gated linear-attention Pallas kernel (RWKV6 / GLA / Mamba2-SSD).
+
+Recurrence (per head, state ``S: (dk, dv)``):
+
+    exclusive ("rwkv", with bonus u):   o_t = q_t S_{t-1} + (q_t . (u * k_t)) v_t
+                                        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    inclusive ("gla"/"ssd"):            S_t = diag(w_t) S_{t-1} + k_t v_t^T
+                                        o_t = q_t S_t
+
+TPU adaptation: the sequential scan is reformulated chunk-parallel.  With
+``lb = cumsum(log w)`` inside a chunk (lb_0 = 0) and ``shift = 1`` for the
+exclusive form:
+
+    inter:  o_t += (q_t * exp(lb_{t-shift})) @ S_chunk_start
+    intra:  A[t, j] = sum_k q_tk k_jk exp(lb_{t-shift,k} - lb_{j,k}),  j <= t-shift
+            o_t += A[t, :] @ v
+    bonus:  o_t += (q_t . (u * k_t)) v_t            (exclusive only)
+    state:  S <- diag(exp(lb_C)) S + (k * exp(lb_C - lb))^T @ v
+
+All exponents are differences of monotone log-decays, hence <= 0 — no
+overflow regardless of chunk length (the naive ``b_i / b_j`` cumprod-ratio
+form overflows for small decay; see DESIGN.md).
+
+Grid = (batch*heads, T/C); chunk axis innermost so the fp32 VMEM scratch
+``S`` carries across grid steps; it is reset when a new head begins.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_EPS = 1e-6
+
+
+def _kernel(q_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_final_ref, s_ref, *, shift: int, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    qb = q_ref[0].astype(jnp.float32)  # (C, dk)
+    kb = k_ref[0].astype(jnp.float32)  # (C, dk)
+    vb = v_ref[0].astype(jnp.float32)  # (C, dv)
+    wb = w_ref[0].astype(jnp.float32)  # (C, dk)
+    ub = u_ref[0].astype(jnp.float32)  # (1, dk)
+
+    c = qb.shape[0]
+    lw = jnp.log(jnp.clip(wb, _EPS, 1.0))
+    lb = jnp.cumsum(lw, axis=0)  # (C, dk), inclusive
+    if shift:
+        lbq = jnp.concatenate([jnp.zeros_like(lb[:1]), lb[:-1]], axis=0)
+    else:
+        lbq = lb
+
+    s0 = s_ref[...]  # (dk, dv)
+
+    # inter-chunk
+    o = jax.lax.dot(
+        qb * jnp.exp(lbq), s0, preferred_element_type=jnp.float32
+    )  # (C, dv)
+
+    # intra-chunk: A[t, j] = sum_k q_tk k_jk exp(lbq_t - lb_j)_k,  j <= t-shift
+    decay = jnp.exp(lbq[:, None, :] - lb[None, :, :])  # (C, C, dk)
+    a = jnp.einsum("tk,jk,tjk->tj", qb, kb, decay)
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    j_ids = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    a = jnp.where(j_ids <= t_ids - shift, a, 0.0)
+    o = o + jax.lax.dot(a, vb, preferred_element_type=jnp.float32)
+
+    if shift:  # bonus diagonal term (rwkv6's u)
+        diag = jnp.sum(qb * ub * kb, axis=1, keepdims=True)  # (C, 1)
+        o = o + diag * vb
+
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    # state update
+    decay_out = jnp.exp(lb[-1:, :] - lb)  # (C, dk), exponent <= 0
+    s_new = jnp.exp(lb[-1])[:, None] * s0 + jax.lax.dot(
+        (kb * decay_out).T, vb, preferred_element_type=jnp.float32
+    )
+    s_ref[...] = s_new
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        s_final_ref[0] = s_new.astype(s_final_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "shift", "interpret"))
+def linear_attn_kernel(
+    q: jax.Array,  # (BH, T, dk)
+    k: jax.Array,  # (BH, T, dk)
+    v: jax.Array,  # (BH, T, dv)
+    w: jax.Array,  # (BH, T, dk) decay in (0, 1]
+    u: jax.Array,  # (BH, 1, dk) bonus (zeros for gla/ssd)
+    *,
+    chunk: int = 64,
+    shift: int = 1,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Caller pre-pads T to a chunk multiple. Returns (o, final_state)."""
+    bh, t, dk = q.shape
+    dv = v.shape[-1]
+    nc = t // chunk
+    grid = (bh, nc)
+    kern = functools.partial(_kernel, shift=shift, nc=nc)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, dk), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dv), q.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, w, u)

@@ -1,0 +1,92 @@
+"""jit'd wrapper for the chunked linear-attention kernel.
+
+Handles (B, H, T, D) <-> (BH, T, D) reshapes and pads T to a chunk multiple
+(pad tokens: w=1, k=0, q=0 — they neither read nor write state).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linear_attn.kernel import linear_attn_kernel
+from repro.kernels.linear_attn.ref import linear_attn_chunked_jnp, linear_attn_ref
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "mode", "interpret", "impl"))
+def linear_attention(
+    q: jax.Array,  # (B, H, T, dk)
+    k: jax.Array,
+    v: jax.Array,  # (B, H, T, dv)
+    w: jax.Array,  # (B, H, T, dk)
+    u: jax.Array | None = None,  # (H, dk) bonus, rwkv mode only
+    *,
+    chunk: int = 64,
+    mode: str = "rwkv",  # "rwkv" (exclusive+bonus) | "gla" | "ssd"
+    interpret: bool = False,
+    impl: str = "auto",
+) -> jax.Array:
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    shift = 1 if mode == "rwkv" else 0
+    if u is None:
+        u = jnp.zeros((h, dk), q.dtype)
+    u_b = jnp.broadcast_to(u[None], (b, h, dk)).reshape(b * h, 1, dk)
+
+    def flat(a):
+        return a.reshape(b * h, t, a.shape[-1])
+
+    qf, kf, vf, wf = flat(q), flat(k), flat(v), flat(w)
+    if impl == "scan":
+        o, _ = linear_attn_ref(qf, kf, vf, wf, u_b, shift=shift)
+        return o.reshape(b, h, t, dv)
+
+    tp = _round_up(t, chunk)
+    if tp != t:
+        pad = ((0, 0), (0, tp - t), (0, 0))
+        qf = jnp.pad(qf, pad)
+        kf = jnp.pad(kf, pad)
+        vf = jnp.pad(vf, pad)
+        wf = jnp.pad(wf, pad, constant_values=1.0)
+    if impl in ("ref", "chunked") or (impl == "auto" and jax.default_backend() != "tpu"):
+        # chunked-jnp: numerically identical math to the Pallas kernel and
+        # HLO-representative of it (see ref.linear_attn_chunked_jnp)
+        o, _ = linear_attn_chunked_jnp(qf, kf, vf, wf, u_b, chunk=chunk, shift=shift)
+        return o[:, :t].reshape(b, h, t, dv)
+    o, _ = linear_attn_kernel(
+        qf, kf, vf, wf, u_b, chunk=chunk, shift=shift, interpret=interpret
+    )
+    return o[:, :t].reshape(b, h, t, dv)
+
+
+def linear_attention_with_state(
+    qf: jax.Array,  # (BH, T, dk)
+    kf: jax.Array,
+    vf: jax.Array,
+    wf: jax.Array,
+    u_b: jax.Array,  # (BH, 1, dk)
+    *,
+    chunk: int = 64,
+    shift: int = 1,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked path returning (o, final_state) — used by prefill."""
+    t = qf.shape[1]
+    tp = _round_up(t, chunk)
+    if tp != t:
+        pad = ((0, 0), (0, tp - t), (0, 0))
+        qf = jnp.pad(qf, pad)
+        kf = jnp.pad(kf, pad)
+        vf = jnp.pad(vf, pad)
+        wf = jnp.pad(wf, pad, constant_values=1.0)
+    o, s = linear_attn_chunked_jnp(qf, kf, vf, wf, u_b, chunk=chunk, shift=shift)
+    return o[:, :t], s
+
+
+__all__ = ["linear_attention", "linear_attention_with_state", "linear_attn_ref",
+           "linear_attn_kernel"]

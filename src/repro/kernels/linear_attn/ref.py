@@ -1,0 +1,128 @@
+"""Sequential-scan oracle for the chunked linear-attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-6
+
+
+@functools.partial(jax.jit, static_argnames=("shift",))
+def linear_attn_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    *,
+    shift: int = 1,
+    initial_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Token-by-token recurrence; shapes as in the kernel. fp32 math."""
+    bh, t, dk = q.shape
+    dv = v.shape[-1]
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    wf = jnp.clip(w.astype(jnp.float32), _EPS, 1.0)
+    uf = u.astype(jnp.float32).reshape(bh, dk)
+
+    s0 = (
+        jnp.zeros((bh, dk, dv), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(s, inp):
+        qt, kt, vt, wt = inp  # (bh, dk) ... (bh, dv)
+        if shift:
+            o = jnp.einsum("bk,bkv->bv", qt, s) + (
+                jnp.sum(qt * uf * kt, axis=1, keepdims=True) * vt
+            )
+            s = wt[:, :, None] * s + kt[:, :, None] * vt[:, None, :]
+        else:
+            s = wt[:, :, None] * s + kt[:, :, None] * vt[:, None, :]
+            o = jnp.einsum("bk,bkv->bv", qt, s)
+        return s, o
+
+    xs = (
+        jnp.moveaxis(qf, 1, 0),
+        jnp.moveaxis(kf, 1, 0),
+        jnp.moveaxis(vf, 1, 0),
+        jnp.moveaxis(wf, 1, 0),
+    )
+    s_fin, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1).astype(q.dtype), s_fin
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "shift"))
+def linear_attn_chunked_jnp(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    *,
+    chunk: int = 64,
+    shift: int = 1,
+) -> tuple[jax.Array, jax.Array]:
+    """Pure-jnp port of the chunked kernel math (same log-space form).
+
+    This is the CPU/backbone path: its HLO is representative of the TPU
+    kernel (T/chunk loop iterations of chunk-sized matmuls) — unlike the
+    token-by-token scan, whose 4096-iteration loop inflates dry-run memory
+    terms by ~chunk x.  Caller must pad T to a chunk multiple.
+    """
+    from repro.models.shard_ctx import constrain
+
+    bh, t, dk = q.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, "pad T to a chunk multiple"
+    nc = t // chunk
+    c = chunk
+    # shard the merged batch*heads dim over the whole mesh (no-op outside a
+    # sharding context); see EXPERIMENTS.md §Perf iteration 4
+    q = constrain(q, "batch_heads", None, None)
+    k = constrain(k, "batch_heads", None, None)
+    v = constrain(v, "batch_heads", None, None)
+    w = constrain(w, "batch_heads", None, None)
+    qf = q.astype(jnp.float32).reshape(bh, nc, c, dk).transpose(1, 0, 2, 3)
+    kf = k.astype(jnp.float32).reshape(bh, nc, c, dk).transpose(1, 0, 2, 3)
+    vf = v.astype(jnp.float32).reshape(bh, nc, c, dv).transpose(1, 0, 2, 3)
+    wf = jnp.clip(w.astype(jnp.float32), _EPS, 1.0).reshape(bh, nc, c, dk)
+    wf = wf.transpose(1, 0, 2, 3)
+    uf = u.astype(jnp.float32).reshape(bh, 1, -1)
+
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    j_ids = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    mask = j_ids <= t_ids - shift
+
+    def body(s0, inp):
+        qb, kb, vb, wb = inp  # (bh, c, ...)
+        lb = jnp.cumsum(jnp.log(wb), axis=1)  # (bh, c, dk)
+        lbq = (
+            jnp.concatenate([jnp.zeros_like(lb[:, :1]), lb[:, :-1]], axis=1)
+            if shift else lb
+        )
+        o = jnp.einsum("bck,bkv->bcv", qb * jnp.exp(lbq), s0)
+        decay = jnp.exp(lbq[:, :, None, :] - lb[:, None, :, :])  # (bh,c,c,dk)
+        a = jnp.einsum("btk,bjk,btjk->btj", qb, kb, decay)
+        a = jnp.where(mask[None], a, 0.0)
+        o = o + jnp.einsum("btj,bjv->btv", a, vb)
+        if shift:
+            diag = jnp.sum(qb * uf * kb, axis=-1, keepdims=True)
+            o = o + diag * vb
+        dec_out = jnp.exp(lb[:, -1:, :] - lb)  # (bh, c, dk)
+        s_new = jnp.exp(lb[:, -1])[:, :, None] * s0 + jnp.einsum(
+            "bck,bcv->bkv", kb * dec_out, vb
+        )
+        return s_new, o
+
+    s0 = jnp.zeros((bh, dk, dv), jnp.float32)
+    # nested remat: recompute the (bh, c, c, dk) decay tensor in the chunk
+    # backward instead of stacking it across all chunks (550 GB/layer at
+    # B=256, T=4k before this fix)
+    s_fin, o = jax.lax.scan(jax.checkpoint(body), s0, (qf, kf, vf, wf))
+    o = o.transpose(1, 0, 2, 3).reshape(bh, t, dv)
+    return o.astype(q.dtype), s_fin

@@ -1,0 +1,73 @@
+"""Blocked pairwise squared-L2 Pallas TPU kernel.
+
+Computes ``D[i, j] = ||q_i - x_j||^2`` for ``q: (m, d)``, ``x: (n, d)`` as
+``|q|^2 + |x|^2 - 2 q x^T`` with the contraction blocked over ``d`` so the
+MXU does the heavy lifting and the working set stays in VMEM:
+
+  grid = (m/bm, n/bn, d/bk)    (k innermost -> sequential accumulation)
+  per step:  acc += rowsum(qk^2) + colsum(xk^2) - 2 qk @ xk^T
+
+Because slice norms sum to full norms over the k-loop, no separate norm pass
+is needed.  Accumulation is fp32 regardless of input dtype (bf16 inputs hit
+the MXU natively).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, x_ref, out_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    qk = q_ref[...].astype(jnp.float32)  # (bm, bk)
+    xk = x_ref[...].astype(jnp.float32)  # (bn, bk)
+    qn = jnp.sum(qk * qk, axis=1, keepdims=True)  # (bm, 1)
+    xn = jnp.sum(xk * xk, axis=1, keepdims=True).T  # (1, bn)
+    cross = jax.lax.dot_general(
+        qk,
+        xk,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += qn + xn - 2.0 * cross
+
+    @pl.when(k == nk - 1)
+    def _clamp():
+        out_ref[...] = jnp.maximum(out_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def pairwise_sqdist_kernel(
+    q: jax.Array,
+    x: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Caller must pre-pad: m % bm == n % bn == d % bk == 0 (see ops.py)."""
+    m, d = q.shape
+    n, _ = x.shape
+    nk = d // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(q, x)

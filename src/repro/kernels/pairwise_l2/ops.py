@@ -1,0 +1,46 @@
+"""jit'd public wrapper for the pairwise_l2 kernel: pads to block multiples,
+invokes the Pallas kernel, slices the result back."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise_l2.kernel import pairwise_sqdist_kernel
+from repro.kernels.pairwise_l2.ref import pairwise_sqdist_ref
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def pairwise_sqdist(
+    q: jax.Array,
+    x: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pairwise squared L2 ``(m, d), (n, d) -> (m, n)`` via the Pallas kernel.
+
+    Zero padding is harmless for this computation (pad rows produce junk
+    rows/cols that are sliced off; pad dims contribute 0 to every norm).
+    """
+    m, d = q.shape
+    n, _ = x.shape
+    bm_ = min(bm, _round_up(m, 8))
+    bn_ = min(bn, _round_up(n, 128))
+    bk_ = min(bk, _round_up(d, 128))
+    mp, np_, dp = _round_up(m, bm_), _round_up(n, bn_), _round_up(d, bk_)
+    qp = jnp.pad(q, ((0, mp - m), (0, dp - d)))
+    xp = jnp.pad(x, ((0, np_ - n), (0, dp - d)))
+    out = pairwise_sqdist_kernel(qp, xp, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    return out[:m, :n]
+
+
+__all__ = ["pairwise_sqdist", "pairwise_sqdist_ref"]

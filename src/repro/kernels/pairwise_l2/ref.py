@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the pairwise_l2 kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sqdist_ref(q: jax.Array, x: jax.Array) -> jax.Array:
+    """``(m, d), (n, d) -> (m, n)`` squared L2, fp32 accumulation."""
+    qf = q.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    qn = jnp.sum(qf * qf, axis=-1)
+    xn = jnp.sum(xf * xf, axis=-1)
+    cross = jnp.einsum("md,nd->mn", qf, xf, preferred_element_type=jnp.float32)
+    return jnp.maximum(qn[:, None] + xn[None, :] - 2.0 * cross, 0.0)

@@ -1,0 +1,70 @@
+"""Fused SC-score accumulation Pallas kernel — the paper's inner loop.
+
+Given per-subspace query/data blocks and per-(subspace, query) collision
+thresholds tau, computes
+
+    scores[q, j] = sum_i [ ||q_i - x_ij||^2 <= tau[i, q] ]
+
+in one pass: the distance block is formed on the MXU (norm + matmul
+identity), compared against tau in VREGs, and accumulated into an int32
+score tile that lives in the output across the subspace grid dimension —
+the (Ns, m, n) distance tensor never touches HBM.
+
+Grid = (m/bm, n/bn, Ns); subspace innermost so the output tile revisits.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, x_ref, tau_ref, out_ref, *, n_sub: int):
+    i = pl.program_id(2)  # subspace index (innermost)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    qb = q_ref[0].astype(jnp.float32)  # (bm, s)
+    xb = x_ref[0].astype(jnp.float32)  # (bn, s)
+    tau = tau_ref[...].astype(jnp.float32)  # (1, bm)
+    qn = jnp.sum(qb * qb, axis=1, keepdims=True)  # (bm, 1)
+    xn = jnp.sum(xb * xb, axis=1, keepdims=True).T  # (1, bn)
+    cross = jax.lax.dot_general(
+        qb, xb, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    d2 = jnp.maximum(qn + xn - 2.0 * cross, 0.0)  # (bm, bn)
+    out_ref[...] += (d2 <= tau.T).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def sc_score_kernel(
+    qs: jax.Array,  # (Ns, m, s) per-subspace queries (zero-padded s)
+    xs: jax.Array,  # (Ns, n, s) per-subspace data
+    tau: jax.Array,  # (Ns, m) collision thresholds
+    *,
+    bm: int = 8,
+    bn: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Caller pre-pads m % bm == n % bn == 0. Returns (m, n) int32 scores."""
+    n_sub, m, s = qs.shape
+    n = xs.shape[1]
+    grid = (m // bm, n // bn, n_sub)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_sub=n_sub),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, s), lambda i, j, k: (k, i, 0)),
+            pl.BlockSpec((1, bn, s), lambda i, j, k: (k, j, 0)),
+            pl.BlockSpec((1, bm), lambda i, j, k: (k, i)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(qs, xs, tau)

@@ -1,0 +1,45 @@
+"""jit'd wrapper for the fused SC-score kernel: pads blocks, dispatches."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sc_score.kernel import sc_score_kernel
+from repro.kernels.sc_score.ref import sc_score_ref
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def sc_scores_fused(
+    qs: jax.Array,  # (Ns, m, s)
+    xs: jax.Array,  # (Ns, n, s)
+    tau: jax.Array,  # (Ns, m)
+    *,
+    bm: int = 8,
+    bn: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused threshold-compare + accumulate; padding contract: padded data
+    rows sit at +inf distance (never collide), padded query rows are junk
+    and sliced off, padded dims are zeros (distance-neutral)."""
+    n_sub, m, s = qs.shape
+    n = xs.shape[1]
+    bm_ = min(bm, _round_up(m, 8))
+    bn_ = min(bn, _round_up(n, 128))
+    sp = _round_up(s, 128)
+    mp, np_ = _round_up(m, bm_), _round_up(n, bn_)
+    qp = jnp.pad(qs, ((0, 0), (0, mp - m), (0, sp - s)))
+    xp = jnp.pad(xs, ((0, 0), (0, 0), (0, sp - s)))
+    xp = jnp.pad(xp, ((0, 0), (0, np_ - n), (0, 0)), constant_values=1e6)
+    taup = jnp.pad(tau, ((0, 0), (0, mp - m)))
+    out = sc_score_kernel(qp, xp, taup, bm=bm_, bn=bn_, interpret=interpret)
+    return out[:m, :n]
+
+
+__all__ = ["sc_scores_fused", "sc_score_ref"]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused SC-score kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sc_score_ref(qs: jax.Array, xs: jax.Array, tau: jax.Array) -> jax.Array:
+    """``qs: (Ns,m,s), xs: (Ns,n,s), tau: (Ns,m) -> (m,n)`` int32 scores."""
+    qf, xf = qs.astype(jnp.float32), xs.astype(jnp.float32)
+    d2 = (
+        jnp.sum(qf * qf, axis=-1)[:, :, None]
+        + jnp.sum(xf * xf, axis=-1)[:, None, :]
+        - 2.0 * jnp.einsum("ims,ins->imn", qf, xf, preferred_element_type=jnp.float32)
+    )
+    d2 = jnp.maximum(d2, 0.0)
+    mask = d2 <= tau[:, :, None]
+    return jnp.sum(mask.astype(jnp.int32), axis=0)

@@ -1,0 +1,325 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. lowers the right step function (train_step / prefill / decode_step)
+     against ShapeDtypeStruct inputs with explicit in/out shardings,
+  3. compiles it (XLA SPMD partitioning for 512 fake host devices),
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     (parsed from the optimized HLO) into benchmarks/results/<cell>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+
+import argparse
+import dataclasses
+import math
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model, SHAPES, input_specs
+from repro.models.model import ShapeSpec
+from repro.models.shard_ctx import activation_sharding
+from repro.launch.mesh import make_production_mesh
+from repro.launch import shardings as SH
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the optimized HLO.
+
+    This is the per-device traffic proxy used for the roofline collective
+    term (operand bytes == output bytes for all-reduce; for all-gather the
+    output is the gathered buffer each device materialises).
+    """
+    per_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        # output type is the leading "(tuple)" or single shape on the rhs
+        head = rhs.split("=")[0] if "=" not in rhs else rhs
+        shapes = _SHAPE_RE.findall(rhs.split(f"{kind}")[0])
+        nbytes = 0
+        for dt, dims in shapes:
+            if dt not in _DTYPE_BYTES:
+                continue
+            size = 1
+            for d in dims.split(","):
+                if d:
+                    size *= int(d)
+            nbytes += size * _DTYPE_BYTES[dt]
+        per_kind[kind] += nbytes
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"total_bytes": total, "per_kind_bytes": per_kind, "counts": counts}
+
+
+def _cell_name(arch: str, shape: str, multi_pod: bool) -> str:
+    return f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+
+
+def should_skip(cfg, shape: ShapeSpec) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "long_500k skipped: pure full-attention arch (sub-quadratic rule, "
+            "see DESIGN.md §6)"
+        )
+    return None
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               act_sharding: bool = True):
+    """Build + lower + compile one cell. Returns the result record."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = should_skip(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": skip}
+
+    # nested-jit traces cache mesh-specific sharding constraints; clear
+    # between cells so pod1/pod2 lowerings never share stale constraints
+    jax.clear_caches()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    p_shapes = model.param_shapes()
+    p_specs = SH.param_specs(cfg, mesh, p_shapes)
+    ins = input_specs(cfg, shape)
+    b_specs = SH.batch_specs(cfg, mesh, shape, ins)
+
+    t0 = time.time()
+    sh = lambda specs: SH.to_shardings(mesh, specs)
+    import contextlib
+
+    act_ctx = activation_sharding(mesh) if act_sharding else contextlib.nullcontext()
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(init_opt_state, p_shapes)
+        o_specs = SH.opt_state_specs(cfg, mesh, opt_shapes)
+        step = make_train_step(model, OptConfig(), remat=True)
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh(p_specs), sh(o_specs), sh(b_specs)),
+            out_shardings=(sh(p_specs), sh(o_specs), None),
+            donate_argnums=(0, 1),
+        )
+        with act_ctx:
+            lowered = jitted.lower(p_shapes, opt_shapes, ins)
+    elif shape.kind == "prefill":
+        def fn(params, tokens, extras=None):
+            return model.prefill(params, tokens, extras=extras, max_seq=shape.seq_len)
+
+        from repro.models import decode as D
+
+        cache_shapes = jax.eval_shape(
+            lambda: D.init_cache(cfg, shape.global_batch, shape.seq_len)
+        )
+        cache_sp = SH.fit_tree(SH.cache_specs(cfg, mesh, shape), cache_shapes, mesh)
+        args = [p_shapes, ins["tokens"]]
+        in_sh = [sh(p_specs), sh(b_specs["tokens"])]
+        if "extras" in ins:
+            args.append(ins["extras"])
+            in_sh.append(sh(b_specs["extras"]))
+        ba = SH.batch_axes(mesh)
+        from jax.sharding import PartitionSpec as P
+
+        logits_sp = SH.fit_spec(
+            P(ba, "model"), (shape.global_batch, cfg.padded_vocab), mesh
+        )
+        jitted = jax.jit(
+            fn,
+            in_shardings=tuple(in_sh),
+            out_shardings=(sh(logits_sp), sh(cache_sp)),
+        )
+        with act_ctx:
+            lowered = jitted.lower(*args)
+    else:  # decode
+        def fn(params, cache, token, pos):
+            return model.decode_step(params, cache, token, pos)
+
+        from jax.sharding import PartitionSpec as P
+
+        ba = SH.batch_axes(mesh)
+        logits_spec = P(None, "model") if shape.global_batch == 1 else P(ba, "model")
+        logits_spec = SH.fit_spec(
+            logits_spec, (shape.global_batch, cfg.padded_vocab), mesh
+        )
+        jitted = jax.jit(
+            fn,
+            in_shardings=(
+                sh(p_specs), sh(b_specs["cache"]), sh(b_specs["token"]),
+                sh(b_specs["pos"]),
+            ),
+            out_shardings=(sh(logits_spec), sh(b_specs["cache"])),
+            donate_argnums=(1,),
+        )
+        with act_ctx:
+            lowered = jitted.lower(p_shapes, ins["cache"], ins["token"], ins["pos"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # pragma: no cover - backend specific
+        mem_rec = {"error": str(e)}
+
+    try:
+        cost = compiled.cost_analysis() or {}
+        cost_rec = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        }
+    except Exception as e:  # pragma: no cover
+        cost_rec = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    try:
+        corrected = analyze_hlo(hlo)
+    except Exception as e:  # pragma: no cover
+        corrected = {"error": str(e)}
+
+    n_chips = 512 if multi_pod else 256
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "n_chips": n_chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_rec,
+        "cost_analysis": cost_rec,
+        "collectives": coll,
+        "loop_corrected": corrected,
+        "act_sharding": act_sharding,
+        "param_count": int(
+            sum(math.prod(x.shape) for x in jax.tree.leaves(model.param_shapes()))
+        ),
+        "active_param_count": cfg.active_param_count(),
+    }
+
+
+def run_and_save(arch: str, shape: str, multi_pod: bool, force: bool,
+                 act_sharding: bool = True, tag: str = "") -> dict:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out = RESULTS_DIR / f"{_cell_name(arch, shape, multi_pod)}{tag}.json"
+    if out.exists() and not force:
+        rec = json.loads(out.read_text())
+        print(f"[cached] {out.name}: {rec['status']}")
+        return rec
+    print(f"[dryrun] {arch} x {shape} ({'2 pods' if multi_pod else '1 pod'}) ...",
+          flush=True)
+    try:
+        rec = lower_cell(arch, shape, multi_pod=multi_pod,
+                         act_sharding=act_sharding)
+    except Exception as e:
+        rec = {
+            "arch": arch, "shape": shape, "multi_pod": multi_pod,
+            "status": "error", "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+    out.write_text(json.dumps(rec, indent=2))
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        extra = (f" compile={rec['compile_s']}s flops={rec['cost_analysis'].get('flops', 0):.3e}"
+                 f" coll={rec['collectives']['total_bytes']/1e9:.3f}GB")
+    print(f"[done]   {out.name}: {status}{extra}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-act-sharding", action="store_true",
+                    help="baseline: drop activation sharding constraints")
+    ap.add_argument("--tag", default="", help="suffix for the result file")
+    args = ap.parse_args()
+
+    if args.all:
+        archs = ARCH_IDS
+        shapes = tuple(SHAPES)
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        archs, shapes = (args.arch,), (args.shape,)
+
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    n_bad = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_and_save(arch, shape, mp, args.force,
+                                   act_sharding=not args.no_act_sharding,
+                                   tag=args.tag)
+                if rec["status"] == "error":
+                    n_bad += 1
+    sys.exit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

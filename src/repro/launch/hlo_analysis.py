@@ -1,0 +1,233 @@
+"""Loop-corrected roofline terms from optimized (SPMD-partitioned) HLO text.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts every while-loop body ONCE,
+which silently drops ~L x the FLOPs of a scan-over-layers model.  The
+optimized HLO, however, annotates every loop with
+``backend_config={"known_trip_count":{"n":...}}`` — so we parse the module,
+attribute work to computations, and expand the call graph with trip-count
+multiplication:
+
+  flops            2*prod(out_dims)*prod(contracting_dims) per dot/conv
+  memory bytes     sum(operand bytes) + output bytes per top-level op
+                   (fusions hide their internals, so this approximates true
+                   HBM traffic post-fusion)
+  collective bytes output-shape bytes per all-gather / all-reduce /
+                   reduce-scatter / all-to-all / collective-permute
+
+Everything is PER DEVICE (the module is already partitioned).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "HloStats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$|^(?:ENTRY\s+)?%?([\w.\-]+)\s+\{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_WHILE_RE = re.compile(r"\bwhile\(.*?body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"\b(?:call|async-start)\(.*?to_apply=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    memory_full: float = 0.0  # operands + outputs (top-level semantics)
+    memory_out: float = 0.0  # outputs only (inside loop bodies, where
+    # operands are loop-carried state that lives in VMEM on TPU)
+    collective_bytes: float = 0.0
+    per_kind: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES}
+    )
+    collective_count: float = 0.0
+
+    def add(self, other: "HloStats", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.memory_full += mult * other.memory_full
+        self.memory_out += mult * other.memory_out
+        self.collective_bytes += mult * other.collective_bytes
+        self.collective_count += mult * other.collective_count
+        for k in _COLLECTIVES:
+            self.per_kind[k] += mult * other.per_kind[k]
+
+
+def _dot_flops(out_type: str, rhs: str, shapes: dict[str, str]) -> float:
+    """2 * prod(output) * prod(contracting dims of lhs)."""
+    out_dims = _shape_dims(out_type)
+    out_elems = 0
+    for _, dims in out_dims:
+        n = 1
+        for d in dims:
+            n *= d
+        out_elems += n
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    ops = _OPERAND_RE.findall(rhs.split("(", 1)[1]) if "(" in rhs else []
+    k = 1
+    if m and ops:
+        lhs_name = ops[0]
+        lhs_type = shapes.get(lhs_name, "")
+        dims = _shape_dims(lhs_type)
+        if dims:
+            lhs_dims = dims[0][1]
+            for ci in m.group(1).split(","):
+                if ci and int(ci) < len(lhs_dims):
+                    k *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def analyze_hlo(text: str) -> dict:
+    # ---- pass 1: split into computations, build name -> output type map
+    computations: dict[str, list[str]] = {}
+    shapes: dict[str, str] = {}
+    current = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")
+                                       or re.match(r"^%?[\w.\-]+\s+\{", stripped)):
+            name = stripped.split()[0].lstrip("%")
+            if name == "ENTRY":
+                name = stripped.split()[1].lstrip("%")
+            current = name
+            computations[current] = []
+            continue
+        if stripped == "}":
+            continue
+        if current is None:
+            continue
+        computations[current].append(stripped)
+        m = _DEF_RE.match(stripped)
+        if m:
+            rhs = m.group(2)
+            # output type = everything before the op name token
+            shapes[m.group(1)] = rhs.split(" ", 1)[0] if rhs.startswith(("(", "f", "b", "s", "u", "p", "c")) else rhs
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            entry = line.split()[1].lstrip("%").split("(")[0]
+            break
+    if entry is None:  # fall back: computation named *main* or the last one
+        cand = [c for c in computations if "main" in c]
+        entry = cand[0] if cand else list(computations)[-1]
+
+    # ---- pass 2: per-computation direct stats + sub-calls
+    direct: dict[str, HloStats] = {}
+    calls: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for comp, lines in computations.items():
+        st = HloStats()
+        for ls in lines:
+            m = _DEF_RE.match(ls)
+            if not m:
+                continue
+            rhs = m.group(2)
+            out_type = rhs.split(" ", 1)[0]
+            out_b = _shape_bytes(out_type)
+            # collectives
+            is_coll = False
+            for k in _COLLECTIVES:
+                if re.search(rf"\b{k}(-start)?\(", rhs):
+                    st.per_kind[k] += out_b
+                    st.collective_bytes += out_b
+                    st.collective_count += 1
+                    is_coll = True
+                    break
+            # flops (dot / convolution)
+            if re.search(r"\bdot\(", rhs) or re.search(r"\bconvolution\(", rhs):
+                st.flops += _dot_flops(out_type, rhs, shapes)
+            # memory traffic: operands + output of top-level ops
+            opk = re.search(r"\)\s*(\w[\w\-]*)\(", " " + rhs)
+            kind_m = re.match(r"[\w\[\],{}\(\) /*]*?\b([a-z][\w\-]*)\(", rhs)
+            kind = kind_m.group(1) if kind_m else ""
+            if kind in ("fusion", "dot", "convolution", "copy", "dynamic-slice",
+                        "dynamic-update-slice", "gather", "scatter", "sort",
+                        "reduce", "transpose", "broadcast", "concatenate",
+                        "slice", "reshape", "bitcast", "iota", "pad",
+                        "select-and-scatter") or is_coll:
+                if kind in ("bitcast", "reshape", "iota"):
+                    pass  # free
+                else:
+                    operand_bytes = 0
+                    args = rhs.split("(", 1)[1] if "(" in rhs else ""
+                    for opn in _OPERAND_RE.findall(args.split("),", 1)[0]):
+                        operand_bytes += _shape_bytes(shapes.get(opn, ""))
+                    st.memory_full += operand_bytes + out_b
+                    st.memory_out += out_b
+            # sub-computations
+            wm = _WHILE_RE.search(rhs)
+            if wm:
+                tm = _TRIP_RE.search(rhs)
+                trip = float(tm.group(1)) if tm else 1.0
+                calls[comp].append((wm.group(1), trip))
+            cm = _CALL_RE.search(rhs)
+            if cm:
+                calls[comp].append((cm.group(1), 1.0))
+        direct[comp] = st
+
+    # ---- pass 3: expand the call graph with memoisation
+    memo: dict[str, HloStats] = {}
+
+    def total(comp: str, stack=()) -> HloStats:
+        if comp in memo:
+            return memo[comp]
+        if comp in stack or comp not in direct:
+            return HloStats()
+        st = HloStats()
+        st.add(direct[comp])
+        for child, mult in calls.get(comp, ()):  # bodies expanded x trip
+            st.add(total(child, stack + (comp,)), mult)
+        memo[comp] = st
+        return st
+
+    agg = total(entry)
+    # memory model: entry-level ops pay operands+outputs; everything reached
+    # through a loop pays outputs only (operands are VMEM-resident carries
+    # or already-counted weight reads -- see roofline.py, which adds the
+    # analytic parameter-read traffic back on top).
+    loop_mem = agg.memory_out - direct[entry].memory_out
+    memory = direct[entry].memory_full + loop_mem
+    return {
+        "entry": entry,
+        "flops": agg.flops,
+        "memory_bytes": memory,
+        "memory_bytes_full": agg.memory_full,
+        "collective_bytes": agg.collective_bytes,
+        "collective_count": agg.collective_count,
+        "per_kind_bytes": dict(agg.per_kind),
+        "n_computations": len(computations),
+    }

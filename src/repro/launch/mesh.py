@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+Single pod: (data, model) = (16, 16) — 256 chips (one v5e pod).
+Multi-pod:  (pod, data, model) = (2, 16, 16) — 512 chips.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import to fabricate the devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = [
+    "make_production_mesh",
+    "make_debug_mesh",
+    "fsdp_axes",
+    "batch_axes",
+]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(shape=(2, 2, 2)):
+    """Small fake-device mesh for CPU tests."""
+    axes = ("pod", "data", "model")[-len(shape):]
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
+    )
+
+
+def fsdp_axes(mesh) -> tuple[str, ...]:
+    """Axes used to shard the parameter 'data' dimension (ZeRO/FSDP)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,221 @@
+"""Sharding rules: parameter, optimizer, batch and cache PartitionSpecs.
+
+Strategy (MaxText-style 2D "fsdp + tensor"):
+  * tensor axis   = "model": heads / d_ff / vocab / experts
+  * fsdp axis(es) = ("pod","data"): the d_model side of every big matrix
+    (ZeRO-3: params+optimizer sharded over the batch axes too)
+  * batch axes    = ("pod","data") for activations
+  * long_500k     = KV-cache *sequence* axis over the batch axes
+    (sequence-parallel decode; softmax statistics turn into psums)
+
+Rules are path-based over the param pytree, so they apply uniformly to
+params, grads and AdamW moments.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.model import ShapeSpec
+from repro.launch.mesh import batch_axes, fsdp_axes
+
+__all__ = [
+    "param_specs",
+    "opt_state_specs",
+    "batch_specs",
+    "cache_specs",
+    "to_shardings",
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _spec_for(path: str, ndim: int, cfg: ModelConfig, fsdp, tp="model") -> P:
+    """PartitionSpec for one parameter leaf. Leading scan (L) axes are
+    detected as (ndim - base rank) and left unsharded."""
+
+    def lead(base: int) -> tuple:
+        return (None,) * (ndim - base)
+
+    # embeddings / heads / positions
+    if path == "embed":
+        return P(tp, fsdp)
+    if path.endswith("lm_head/w"):
+        return P(fsdp, tp)
+    if path.endswith("dec_pos") or path.endswith("enc_pos"):
+        return P(fsdp, None)
+
+    # MoE expert tensors: expert-parallel when divisible, else tensor on d_ff
+    if re.search(r"moe/(w_gate|w_up)$", path) or re.search(r"moe/(w_gate|w_up)/w$", path):
+        pass  # not reached (moe weights are raw arrays, matched below)
+    if "moe/" in path:
+        if path.endswith("router/w"):
+            return P(*lead(2), fsdp, None)
+        ep = cfg.n_experts % 16 == 0
+        if path.endswith("w_gate") or path.endswith("w_up"):
+            return P(*lead(3), tp, fsdp, None) if ep else P(*lead(3), None, fsdp, tp)
+        if path.endswith("w_down"):
+            return P(*lead(3), tp, None, fsdp) if ep else P(*lead(3), None, tp, fsdp)
+
+    # attention / cross-attention projections
+    if re.search(r"(attn|cross)/(wq|wk|wv)/w$", path):
+        return P(*lead(2), fsdp, tp)
+    if re.search(r"(attn|cross)/(wq|wk|wv)/b$", path):
+        return P(*lead(1), tp)
+    if re.search(r"(attn|cross)/wo/w$", path):
+        return P(*lead(2), tp, fsdp)
+
+    # dense mlp
+    if re.search(r"(w_gate|w_up|wk)/w$", path):
+        return P(*lead(2), fsdp, tp)
+    if re.search(r"(w_down|wv)/w$", path):
+        return P(*lead(2), tp, fsdp)
+    if re.search(r"(w_up)/b$", path):
+        return P(*lead(1), tp)
+
+    # rwkv time mix / mamba projections
+    if re.search(r"(wr|wg|w_in)/w$", path):
+        return P(*lead(2), fsdp, tp)
+    if re.search(r"(w_out)/w$", path):
+        return P(*lead(2), tp, fsdp)
+    if path.endswith("w_a"):
+        return P(*lead(2), fsdp, None)
+    if path.endswith("w_b"):
+        return P(*lead(2), None, fsdp)
+    if path.endswith("conv"):
+        return P(*lead(2), None, tp)
+
+    # everything small (norm scales, gates, decay vectors, biases)
+    return P()
+
+
+def fit_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop sharded axes that don't divide the dimension exactly.
+
+    Explicit argument shardings (unlike internal GSPMD propagation) require
+    exact divisibility; odd vocabularies (49155, 51866) and fixed memory
+    lengths (1500/1601) fall back to replication on that dim."""
+    import math as _math
+
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, entries):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = _math.prod(mesh.shape[a] for a in axes)
+        out.append(ax if size and dim % size == 0 else None)
+    return P(*out)
+
+
+def fit_tree(specs, shapes, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, x: fit_spec(s, x.shape, mesh),
+        specs,
+        shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, shapes) -> Any:
+    fsdp = fsdp_axes(mesh)
+
+    def leaf(path, x):
+        return fit_spec(_spec_for(_path_str(path), len(x.shape), cfg, fsdp), x.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, shapes)
+
+
+def opt_state_specs(cfg: ModelConfig, mesh: Mesh, opt_shapes) -> Any:
+    """AdamW moments mirror the param tree; `step` is replicated."""
+    p_specs = param_specs(cfg, mesh, opt_shapes["mu"])
+    return {"mu": p_specs, "nu": param_specs(cfg, mesh, opt_shapes["nu"]), "step": P()}
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec, specs: dict) -> dict:
+    """PartitionSpecs matching input_specs(cfg, shape)."""
+    ba = batch_axes(mesh)
+    out: dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        out["tokens"] = P(ba, None)
+        if shape.kind == "train":
+            out["labels"] = P(ba, None)
+        if "extras" in specs:
+            out["extras"] = P(ba, None, None)
+        return out
+    # decode
+    seq_shard = shape.global_batch == 1  # long_500k: shard the KV seq axis
+    out["token"] = P(None) if seq_shard else P(ba)
+    out["pos"] = P()
+    cs = cache_specs(cfg, mesh, shape)
+    if "cache" in specs:
+        cs = fit_tree(cs, specs["cache"], mesh)
+    out["cache"] = cs
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec) -> dict:
+    """KV/state cache PartitionSpecs.
+
+    Explicit argument shardings must divide exactly, so the head axis only
+    takes the tensor axis when ``n_kv_heads % model == 0``; otherwise the
+    tensor axis is folded into the *sequence* axis (sequence-sharded KV
+    within the TP group — flash-decode semantics, the softmax statistics
+    become psums under GSPMD)."""
+    ba = batch_axes(mesh)
+    tp_size = mesh.shape["model"]
+    seq_shard = shape.global_batch == 1  # long_500k
+    b_ax = None if seq_shard else ba
+
+    heads_div = cfg.n_kv_heads % tp_size == 0
+    h_ax = "model" if heads_div else None
+    if heads_div:
+        s_ax = ba if seq_shard else None
+    else:
+        s_ax = (*ba, "model") if seq_shard else "model"
+
+    # SSM/hybrid small-state tensors: heads axis if divisible, else replicate
+    st_h = "model" if cfg.n_heads % tp_size == 0 else None
+    inner_ax = "model"  # inner = 2*d_model, always divisible in practice
+
+    out: dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        out["k"] = P(None, b_ax, h_ax, s_ax, None)
+        out["v"] = P(None, b_ax, h_ax, s_ax, None)
+    if cfg.family in ("vlm", "audio"):
+        # memory K/V: fixed odd lengths (1601/1500) -> never shard seq
+        out["xk"] = P(None, b_ax, h_ax, None, None)
+        out["xv"] = P(None, b_ax, h_ax, None, None)
+    if cfg.family == "ssm":
+        out["prev1"] = P(None, b_ax, inner_ax if cfg.d_model % tp_size == 0 else None)
+        out["prev2"] = out["prev1"]
+        out["wkv"] = P(None, b_ax, st_h, None, None)
+    if cfg.family == "hybrid":
+        inner_ok = (cfg.ssm_expand * cfg.d_model) % tp_size == 0
+        out["conv"] = P(None, b_ax, None, inner_ax if inner_ok else None)
+        out["ssm"] = P(None, b_ax, st_h, None, None)
+        out["sk"] = P(None, b_ax, h_ax, s_ax, None)
+        out["sv"] = P(None, b_ax, h_ax, s_ax, None)
+    return out
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,8 @@
+from repro.models.config import ModelConfig
+from repro.models.model import Model, ShapeSpec, SHAPES, input_specs
+from repro.models import backbone, decode, prefill, layers, ssm
+
+__all__ = [
+    "ModelConfig", "Model", "ShapeSpec", "SHAPES", "input_specs",
+    "backbone", "decode", "prefill", "layers", "ssm",
+]

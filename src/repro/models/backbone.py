@@ -1,0 +1,446 @@
+"""Backbone assembly: block patterns, scan-over-layers, train/prefill/decode.
+
+Every architecture family maps to a *pattern* of blocks whose parameters are
+stacked along a leading layer axis and applied with ``lax.scan`` (small HLO,
+fast 512-device compiles, remat-friendly):
+
+  dense / moe        uniform [attn + (mlp|moe)] x L        (gemma2: per-layer
+                     local/global flag rides the scan xs)
+  ssm (rwkv6)        uniform [time_mix + channel_mix] x L
+  hybrid (zamba2)    [mamba2] x L with a *shared* transformer block applied
+                     every ``hybrid_period`` layers (same params each time)
+  audio (whisper)    encoder scan + decoder scan (self + cross attention);
+                     frame embeddings come precomputed (conv frontend stub)
+  vlm (llama-vision) units of [self x (period-1), gated cross-attn] scanned
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.layers import Params
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_init(key, n: int, init_fn) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# Block initialisers per family
+# ---------------------------------------------------------------------------
+
+
+def init_dense_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": L.init_norm(cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = L.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg)
+    if cfg.sandwich_norm:
+        p["ln1_post"] = L.init_norm(cfg)
+        p["ln2_post"] = L.init_norm(cfg)
+    return p
+
+
+def init_rwkv_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg),
+        "time_mix": S.init_rwkv_time_mix(k1, cfg),
+        "ln2": L.init_norm(cfg),
+        "channel_mix": S.init_rwkv_channel_mix(k2, cfg),
+    }
+
+
+def init_mamba_block(key, cfg: ModelConfig) -> Params:
+    return {"ln1": L.init_norm(cfg), "mamba": S.init_mamba2(key, cfg)}
+
+
+def init_encoder_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def init_encdec_block(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "ln_x": L.init_norm(cfg),
+        "cross": L.init_attention(k2, cfg),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(k3, cfg),
+    }
+
+
+def init_cross_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg),
+        "cross": L.init_attention(k1, cfg),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(k2, cfg),
+        "gate": jnp.zeros((1,), jnp.float32),  # tanh-gated residual
+    }
+
+
+# ---------------------------------------------------------------------------
+# Model parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Params = {
+        # padded vocab (multiple of 256) so the vocab dim always shards;
+        # padded logits are masked in the loss
+        "embed": jax.random.normal(keys[0], (cfg.padded_vocab, d), jnp.float32) * 0.02,
+        "final_norm": L.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.init_linear(keys[1], d, cfg.padded_vocab)
+
+    if cfg.family in ("dense", "moe"):
+        p["blocks"] = _stack_init(
+            keys[2], cfg.n_layers, lambda k: init_dense_block(k, cfg)
+        )
+    elif cfg.family == "ssm":  # rwkv6
+        p["blocks"] = _stack_init(
+            keys[2], cfg.n_layers, lambda k: init_rwkv_block(k, cfg)
+        )
+    elif cfg.family == "hybrid":  # zamba2
+        p["blocks"] = _stack_init(
+            keys[2], cfg.n_layers, lambda k: init_mamba_block(k, cfg)
+        )
+        p["shared"] = init_dense_block(keys[3], dataclasses.replace(cfg, family="dense"))
+    elif cfg.family == "audio":  # whisper enc-dec
+        p["enc_blocks"] = _stack_init(
+            keys[2], cfg.encoder_layers, lambda k: init_encoder_block(k, cfg)
+        )
+        p["blocks"] = _stack_init(
+            keys[3], cfg.n_layers, lambda k: init_encdec_block(k, cfg)
+        )
+        p["enc_pos"] = jax.random.normal(keys[4], (cfg.encoder_seq, d), jnp.float32) * 0.02
+        p["dec_pos"] = jax.random.normal(keys[5], (cfg.max_learned_pos, d), jnp.float32) * 0.02
+        p["enc_final_norm"] = L.init_norm(cfg)
+    elif cfg.family == "vlm":  # llama-3.2-vision
+        period = cfg.cross_attn_period
+        n_cross = cfg.n_layers // period
+        n_self = cfg.n_layers - n_cross
+        p["blocks"] = _stack_init(keys[2], n_self, lambda k: init_dense_block(k, cfg))
+        p["cross_blocks"] = _stack_init(
+            keys[3], n_cross, lambda k: init_cross_block(k, cfg)
+        )
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def param_shapes(cfg: ModelConfig) -> Params:
+    """Abstract params (no allocation) — dry-run input."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _dense_block_fwd(p, x, cfg: ModelConfig, window):
+    h = L.attn_forward(p["attn"], L.apply_norm(p["ln1"], x, cfg), cfg, window=window)
+    if cfg.sandwich_norm:
+        h = L.apply_norm(p["ln1_post"], h, cfg)
+    x = x + h
+    y = L.apply_norm(p["ln2"], x, cfg)
+    y = L.moe_forward(p["moe"], y, cfg) if "moe" in p else L.mlp_forward(p["mlp"], y, cfg)
+    if cfg.sandwich_norm:
+        y = L.apply_norm(p["ln2_post"], y, cfg)
+    return x + y
+
+
+def _layer_windows(cfg: ModelConfig) -> jax.Array | None:
+    """Per-layer window sizes as a scan xs (0 = global)."""
+    if cfg.local_global:
+        w = [(cfg.local_window if i % 2 == 0 else 0) for i in range(cfg.n_layers)]
+        return jnp.asarray(w, jnp.int32)
+    if cfg.sliding_window is not None:
+        return jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+    return None
+
+
+def _scan_blocks(block_params, x, body, remat: bool, xs_extra=None):
+    from repro.models.shard_ctx import constrain
+
+    def pinned(c, *i):
+        # pin the residual stream's batch sharding inside the loop — GSPMD
+        # otherwise drops it through checkpointed backward bodies
+        c = constrain(c, "batch", None, None)
+        return body(c, *i)
+
+    f = jax.checkpoint(pinned) if remat else pinned
+    ins = (block_params,) if xs_extra is None else (block_params, xs_extra)
+    x, _ = jax.lax.scan(lambda c, i: (f(c, *i), None), x, ins)
+    return x
+
+
+def forward_hidden(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,  # (B, S) int32
+    *,
+    extras: jax.Array | None = None,  # frames (audio) / patches (vlm)
+    remat: bool = True,
+) -> jax.Array:
+    dtype = _dtype(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    b, s = tokens.shape
+
+    if cfg.learned_pos:
+        x = x + params["dec_pos"][:s][None].astype(dtype)
+
+    if cfg.family in ("dense", "moe"):
+        windows = _layer_windows(cfg)
+
+        if windows is None:
+            def body(x, p):
+                return _dense_block_fwd(p, x, cfg, None)
+            x = _scan_blocks(params["blocks"], x, body, remat)
+        else:
+            # window rides the scan; 0 means global. Implemented by masking
+            # with an effective window of S (no-op) when the flag is 0.
+            def body(x, p, w):
+                eff = jnp.where(w > 0, w, jnp.asarray(1 << 30, jnp.int32))
+                return _dense_block_fwd_dynwin(p, x, cfg, eff)
+            x = _scan_blocks(params["blocks"], x, body, remat, xs_extra=windows)
+
+    elif cfg.family == "ssm":
+        def body(x, p):
+            x = x + S.rwkv_time_mix(p["time_mix"], L.apply_norm(p["ln1"], x, cfg), cfg)
+            x = x + S.rwkv_channel_mix(p["channel_mix"], L.apply_norm(p["ln2"], x, cfg), cfg)
+            return x
+        x = _scan_blocks(params["blocks"], x, body, remat)
+
+    elif cfg.family == "hybrid":
+        from repro.models.shard_ctx import constrain as _constrain
+
+        period = cfg.hybrid_period
+        shared = params["shared"]
+        n_units = cfg.n_layers // period
+        n_tail = cfg.n_layers - n_units * period
+        unit_pp = jax.tree.map(
+            lambda a: a[: n_units * period].reshape(n_units, period, *a.shape[1:]),
+            params["blocks"],
+        )
+        tail_pp = jax.tree.map(lambda a: a[n_units * period :], params["blocks"])
+
+        def mamba_body(x, p):
+            x = _constrain(x, "batch", None, None)
+            return x + S.mamba2_forward(p["mamba"], L.apply_norm(p["ln1"], x, cfg), cfg)
+
+        def unit(x, pp):
+            x, _ = jax.lax.scan(lambda c, p: (mamba_body(c, p), None), x, pp)
+            return _dense_block_fwd(shared, x, cfg, None)
+
+        f = jax.checkpoint(unit) if remat else unit
+        x, _ = jax.lax.scan(lambda c, p: (f(c, p), None), x, unit_pp)
+        if n_tail:
+            ft = jax.checkpoint(mamba_body) if remat else mamba_body
+            x, _ = jax.lax.scan(lambda c, p: (ft(c, p), None), x, tail_pp)
+
+    elif cfg.family == "audio":
+        enc = extras.astype(dtype) + params["enc_pos"][None].astype(dtype)
+
+        def enc_body(h, p):
+            h = h + L.attn_forward(p["attn"], L.apply_norm(p["ln1"], h, cfg), cfg, causal=False)
+            h = h + L.mlp_forward(p["mlp"], L.apply_norm(p["ln2"], h, cfg), cfg)
+            return h
+        enc = _scan_blocks(params["enc_blocks"], enc, enc_body, remat)
+        enc = L.apply_norm(params["enc_final_norm"], enc, cfg)
+
+        def dec_body(x, p):
+            x = x + L.attn_forward(p["attn"], L.apply_norm(p["ln1"], x, cfg), cfg)
+            x = x + L.attn_forward(
+                p["cross"], L.apply_norm(p["ln_x"], x, cfg), cfg, kv_override=enc
+            )
+            x = x + L.mlp_forward(p["mlp"], L.apply_norm(p["ln2"], x, cfg), cfg)
+            return x
+        x = _scan_blocks(params["blocks"], x, dec_body, remat)
+
+    elif cfg.family == "vlm":
+        period = cfg.cross_attn_period
+        n_units = cfg.n_layers // period
+        vision = extras.astype(dtype)
+        self_pp = jax.tree.map(
+            lambda a: a.reshape(n_units, period - 1, *a.shape[1:]), params["blocks"]
+        )
+
+        def unit_body(x, selfs, crossp):
+            def inner(x, p):
+                return _dense_block_fwd(p, x, cfg, None)
+            x, _ = jax.lax.scan(lambda c, p: (inner(c, p), None), x, selfs)
+            h = L.attn_forward(
+                crossp["cross"], L.apply_norm(crossp["ln1"], x, cfg), cfg,
+                kv_override=vision,
+            )
+            x = x + jnp.tanh(crossp["gate"]).astype(x.dtype) * h
+            x = x + L.mlp_forward(crossp["mlp"], L.apply_norm(crossp["ln2"], x, cfg), cfg)
+            return x
+
+        body = jax.checkpoint(unit_body) if remat else unit_body
+        x, _ = jax.lax.scan(
+            lambda c, i: (body(c, *i), None), x, (self_pp, params["cross_blocks"])
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    return L.apply_norm(params["final_norm"], x, cfg)
+
+
+def _dense_block_fwd_dynwin(p, x, cfg: ModelConfig, window: jax.Array):
+    """Dense block with a traced (per-layer) window size."""
+    xn = L.apply_norm(p["ln1"], x, cfg)
+    dtype = x.dtype
+    b, s, _ = x.shape
+    q = L._split_heads(L.linear(p["attn"]["wq"], xn, dtype), cfg.n_heads)
+    k = L._split_heads(L.linear(p["attn"]["wk"], xn, dtype), cfg.n_kv_heads)
+    v = L._split_heads(L.linear(p["attn"]["wv"], xn, dtype), cfg.n_kv_heads)
+    if cfg.use_rope:
+        pos = jnp.arange(s)
+        q = L.rope(q, pos, cfg.rope_theta)
+        k = L.rope(k, pos, cfg.rope_theta)
+    o = _flash_dynwin(q, k, v, window, cfg)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    h = L.linear(p["attn"]["wo"], o, dtype)
+    if cfg.sandwich_norm:
+        h = L.apply_norm(p["ln1_post"], h, cfg)
+    x = x + h
+    y = L.apply_norm(p["ln2"], x, cfg)
+    y = L.moe_forward(p["moe"], y, cfg) if "moe" in p else L.mlp_forward(p["mlp"], y, cfg)
+    if cfg.sandwich_norm:
+        y = L.apply_norm(p["ln2_post"], y, cfg)
+    return x + y
+
+
+def _flash_dynwin(q, k, v, window: jax.Array, cfg: ModelConfig):
+    """flash_attention variant whose window is a traced scalar."""
+    b, hq, sq, hd = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.reshape(b, hkv, g, sq, hd).astype(jnp.float32) * scale
+    kv_chunk = min(1024, skv)
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kc = kp.reshape(b, hkv, n_chunks, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+    vc = vp.reshape(b, hkv, n_chunks, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(sq)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kb, vb, ci = inp
+        s = jnp.einsum("bkgqh,bkch->bkgqc", qf, kb.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        s = L._softcap(s, cfg.attn_softcap)
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+        ok = (kpos[None, :] < skv) & (kpos[None, :] <= qpos[:, None])
+        ok = ok & (qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(ok[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bkch->bkgqh", p, vb.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, hq, sq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy over the vocab)
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(
+    cfg: ModelConfig, params: Params, hidden: jax.Array, labels: jax.Array
+) -> jax.Array:
+    """CE without materialising (B, S, V) logits: scan over seq chunks."""
+    b, s, d = hidden.shape
+    w = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    ).astype(_dtype(cfg))
+    chunk = min(cfg.vocab_chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    hp = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hp.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = lp.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    vocab_mask = (jnp.arange(cfg.padded_vocab) < cfg.vocab_size)[None, None, :]
+
+    def body(acc, inp):
+        h, lab = inp  # (B, C, D), (B, C)
+        logits = jnp.einsum("bcd,dv->bcv", h, w, preferred_element_type=jnp.float32)
+        from repro.models.shard_ctx import constrain as _constrain
+
+        logits = _constrain(logits, "batch", None, "vocab")
+        if cfg.final_softcap:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        logits = jnp.where(vocab_mask, logits, -1e30)  # mask pad vocab
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(lab, 0)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        valid = (lab >= 0).astype(jnp.float32)
+        nll = (lse - gold) * valid
+        return (acc[0] + nll.sum(), acc[1] + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def logits_for_position(cfg: ModelConfig, params: Params, hidden_last: jax.Array) -> jax.Array:
+    """(B, D) -> (B, V) final logits (decode/prefill tail)."""
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]).astype(
+        _dtype(cfg)
+    )
+    logits = jnp.einsum("bd,dv->bv", hidden_last, w, preferred_element_type=jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(mask[None, :], logits, -1e30)

@@ -1,0 +1,282 @@
+"""Prefill + single-token decode with per-family caches.
+
+Cache layouts (leading L = layer axis, scanned):
+
+  dense/moe   {"k","v": (L, B, Hkv, Smax, hd)}  (+ per-layer window flags)
+  vlm         {"k","v": (Ls, ...)} + read-only {"xk","xv": (Lc, B, Hkv, Tv, hd)}
+  audio       {"k","v": (L, ...)} + read-only cross {"xk","xv": (L, B, Hkv, Te, hd)}
+  ssm (rwkv6) {"prev1","prev2": (L, B, D), "wkv": (L, B, H, hd, hd)}
+  hybrid      {"conv": (L, B, K-1, inner), "ssm": (L, B, H, N, P),
+               "sk","sv": (n_apps, B, Hkv, Smax, hd)}   (shared-attn KV)
+
+SSM/hybrid state is O(1) in context length — the 500k-decode shape costs the
+same as 1k-decode for rwkv6, and only the shared-attention KV grows for
+zamba2 (sharded over the data axis at 500k; see launch/shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.backbone import _dtype, _layer_windows, logits_for_position
+from repro.models.layers import Params
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Params:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    d = cfg.d_model
+    if cfg.family in ("dense", "moe"):
+        shape = (cfg.n_layers, batch, hkv, max_seq, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if cfg.family == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_period
+        n_self = cfg.n_layers - n_cross
+        return {
+            "k": jnp.zeros((n_self, batch, hkv, max_seq, hd), dtype),
+            "v": jnp.zeros((n_self, batch, hkv, max_seq, hd), dtype),
+            "xk": jnp.zeros((n_cross, batch, hkv, cfg.vision_tokens, hd), dtype),
+            "xv": jnp.zeros((n_cross, batch, hkv, cfg.vision_tokens, hd), dtype),
+        }
+    if cfg.family == "audio":
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, hkv, max_seq, hd), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, hkv, max_seq, hd), dtype),
+            "xk": jnp.zeros((cfg.n_layers, batch, hkv, cfg.encoder_seq, hd), dtype),
+            "xv": jnp.zeros((cfg.n_layers, batch, hkv, cfg.encoder_seq, hd), dtype),
+        }
+    if cfg.family == "ssm":
+        h = cfg.n_heads
+        hd_r = d // h
+        return {
+            "prev1": jnp.zeros((cfg.n_layers, batch, d), dtype),
+            "prev2": jnp.zeros((cfg.n_layers, batch, d), dtype),
+            "wkv": jnp.zeros((cfg.n_layers, batch, h, hd_r, hd_r), jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        inner = cfg.ssm_expand * d
+        n_apps = cfg.n_layers // cfg.hybrid_period
+        return {
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, inner), dtype),
+            "ssm": jnp.zeros(
+                (cfg.n_layers, batch, cfg.n_heads, cfg.ssm_state, inner // cfg.n_heads),
+                jnp.float32,
+            ),
+            "sk": jnp.zeros((n_apps, batch, hkv, max_seq, hd), dtype),
+            "sv": jnp.zeros((n_apps, batch, hkv, max_seq, hd), dtype),
+        }
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one token)
+# ---------------------------------------------------------------------------
+
+
+def _shared_block_decode(p, x, ck, cv, pos, cfg):
+    """Dense block single-token: returns (x, new_ck, new_cv)."""
+    xn = L.apply_norm(p["ln1"], x[:, None], cfg)[:, 0]
+    h, nk, nv = L.attn_decode(p["attn"], xn[:, None], ck, cv, pos, cfg)
+    h = h[:, 0]
+    if cfg.sandwich_norm:
+        h = L.apply_norm(p["ln1_post"], h, cfg)
+    x = x + h
+    y = L.apply_norm(p["ln2"], x[:, None], cfg)
+    y = (
+        L.moe_forward(p["moe"], y, cfg) if "moe" in p else L.mlp_forward(p["mlp"], y, cfg)
+    )[:, 0]
+    if cfg.sandwich_norm:
+        y = L.apply_norm(p["ln2_post"], y, cfg)
+    return x + y, nk, nv
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Params,
+    token: jax.Array,  # (B,) int32
+    pos: jax.Array,  # () int32 current write position
+) -> tuple[jax.Array, Params]:
+    """Returns (logits (B, V), new_cache)."""
+    dtype = _dtype(cfg)
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)  # (B, D)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.learned_pos:
+        x = x + jnp.take(params["dec_pos"], pos, axis=0)[None].astype(dtype)
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "moe"):
+        windows = _layer_windows(cfg)
+
+        def body(x, inp):
+            if windows is None:
+                p, ck, cv = inp
+                win = None
+            else:
+                p, ck, cv, w = inp
+                # traced per-layer window; 0 means global -> huge window
+                win = jnp.where(w > 0, w, jnp.asarray(1 << 30, jnp.int32))
+            xn = L.apply_norm(p["ln1"], x[:, None], cfg)
+            h, nk, nv = L.attn_decode(p["attn"], xn, ck, cv, pos, cfg, window=win)
+            h = h[:, 0]
+            if cfg.sandwich_norm:
+                h = L.apply_norm(p["ln1_post"], h, cfg)
+            x = x + h
+            y = L.apply_norm(p["ln2"], x[:, None], cfg)
+            y = (
+                L.moe_forward(p["moe"], y, cfg)
+                if "moe" in p
+                else L.mlp_forward(p["mlp"], y, cfg)
+            )[:, 0]
+            if cfg.sandwich_norm:
+                y = L.apply_norm(p["ln2_post"], y, cfg)
+            return x + y, (nk, nv)
+
+        xs = (params["blocks"], cache["k"], cache["v"])
+        if windows is not None:
+            xs = xs + (windows,)
+        x, (nk, nv) = jax.lax.scan(body, x, xs)
+        new_cache["k"], new_cache["v"] = nk, nv
+
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            p, p1, p2, st = inp
+            xn = L.apply_norm(p["ln1"], x[:, None], cfg)[:, 0]
+            h, np1, nst = S.rwkv_time_mix_decode(p["time_mix"], xn, p1, st, cfg)
+            x = x + h
+            xn2 = L.apply_norm(p["ln2"], x[:, None], cfg)[:, 0]
+            h2, np2 = S.rwkv_channel_mix_decode(p["channel_mix"], xn2, p2, cfg)
+            return x + h2, (np1.astype(p1.dtype), np2.astype(p2.dtype), nst)
+
+        x, (np1, np2, nst) = jax.lax.scan(
+            body, x, (params["blocks"], cache["prev1"], cache["prev2"], cache["wkv"])
+        )
+        new_cache.update(prev1=np1, prev2=np2, wkv=nst)
+
+    elif cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        shared = params["shared"]
+        n_apps = cfg.n_layers // period
+        flags = jnp.asarray(
+            [1 if (i + 1) % period == 0 else 0 for i in range(cfg.n_layers)], jnp.int32
+        )
+        # application j sits at layer (j+1)*period - 1
+        app_idx = jnp.asarray(
+            [((i + 1) // period - 1) if (i + 1) % period == 0 else 0
+             for i in range(cfg.n_layers)], jnp.int32
+        )
+
+        def body(carry, inp):
+            x, sk, sv = carry
+            p, conv, st, flag, aidx = inp
+            xn = L.apply_norm(p["ln1"], x[:, None], cfg)[:, 0]
+            h, nconv, nst = S.mamba2_decode(p["mamba"], xn, conv, st, cfg)
+            x = x + h
+            ck = jax.lax.dynamic_index_in_dim(sk, aidx, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(sv, aidx, 0, keepdims=False)
+            y, nk, nv = _shared_block_decode(shared, x, ck, cv, pos, cfg)
+            x = jnp.where(flag > 0, y, x)
+            sk = jnp.where(
+                flag > 0, jax.lax.dynamic_update_index_in_dim(sk, nk, aidx, 0), sk
+            )
+            sv = jnp.where(
+                flag > 0, jax.lax.dynamic_update_index_in_dim(sv, nv, aidx, 0), sv
+            )
+            return (x, sk, sv), (nconv, nst)
+
+        (x, nsk, nsv), (nconv, nst) = jax.lax.scan(
+            body,
+            (x, cache["sk"], cache["sv"]),
+            (params["blocks"], cache["conv"], cache["ssm"], flags, app_idx),
+        )
+        new_cache.update(conv=nconv, ssm=nst, sk=nsk, sv=nsv)
+
+    elif cfg.family == "vlm":
+        period = cfg.cross_attn_period
+        n_units = cfg.n_layers // period
+        self_pp = jax.tree.map(
+            lambda a: a.reshape(n_units, period - 1, *a.shape[1:]), params["blocks"]
+        )
+        ksplit = jax.tree.map(
+            lambda a: a.reshape(n_units, period - 1, *a.shape[1:]), cache["k"]
+        )
+        vsplit = jax.tree.map(
+            lambda a: a.reshape(n_units, period - 1, *a.shape[1:]), cache["v"]
+        )
+
+        def unit(x, inp):
+            selfs, sks, svs, crossp, xk, xv = inp
+
+            def inner(x, i2):
+                p, ck, cv = i2
+                y, nk, nv = _shared_block_decode(p, x, ck, cv, pos, cfg)
+                return y, (nk, nv)
+
+            x, (nk, nv) = jax.lax.scan(inner, x, (selfs, sks, svs))
+            xn = L.apply_norm(crossp["ln1"], x[:, None], cfg)
+            h = _cross_decode(crossp["cross"], xn, xk, xv, cfg)[:, 0]
+            x = x + jnp.tanh(crossp["gate"]).astype(x.dtype) * h
+            y = L.mlp_forward(
+                crossp["mlp"], L.apply_norm(crossp["ln2"], x[:, None], cfg), cfg
+            )[:, 0]
+            return x + y, (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(
+            unit,
+            x,
+            (self_pp, ksplit, vsplit, params["cross_blocks"], cache["xk"], cache["xv"]),
+        )
+        new_cache["k"] = nk.reshape(cache["k"].shape)
+        new_cache["v"] = nv.reshape(cache["v"].shape)
+
+    elif cfg.family == "audio":
+        def body(x, inp):
+            p, ck, cv, xk, xv = inp
+            xn = L.apply_norm(p["ln1"], x[:, None], cfg)
+            h, nk, nv = L.attn_decode(p["attn"], xn, ck, cv, pos, cfg)
+            x = x + h[:, 0]
+            xn2 = L.apply_norm(p["ln_x"], x[:, None], cfg)
+            x = x + _cross_decode(p["cross"], xn2, xk, xv, cfg)[:, 0]
+            y = L.mlp_forward(p["mlp"], L.apply_norm(p["ln2"], x[:, None], cfg), cfg)[:, 0]
+            return x + y, (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+        )
+        new_cache["k"], new_cache["v"] = nk, nv
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
+    return logits_for_position(cfg, params, x), new_cache
+
+
+def _cross_decode(p, x, xk, xv, cfg: ModelConfig) -> jax.Array:
+    """Single-token cross attention against precomputed memory K/V."""
+    dtype = x.dtype
+    b = x.shape[0]
+    q = L._split_heads(L.linear(p["wq"], x, dtype), cfg.n_heads)  # (B,Hq,1,h)
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    qf = q.reshape(b, hkv, g, 1, cfg.head_dim).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgqh,bkch->bkgqc", qf, xk.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bkch->bkgqh", w, xv.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, hq, 1, cfg.head_dim).transpose(0, 2, 1, 3).reshape(b, 1, cfg.q_dim)
+    return L.linear(p["wo"], o.astype(dtype), dtype)

@@ -1,0 +1,400 @@
+"""Shared neural net layers: norms, RoPE, attention (flash-style chunked),
+MLPs, and the MoE layer with sort-based capacity dispatch.
+
+All parameters are plain nested dicts of ``jnp`` arrays (fp32 master);
+compute runs in the config dtype (bf16 by default) with fp32 softmax/
+normalisation statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.shard_ctx import constrain
+
+Params = dict
+
+
+# ----------------------------- initialisers -------------------------------
+
+
+def _dense_init(key, d_in: int, d_out: int, scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def linear(p: Params, x: jax.Array, dtype) -> jax.Array:
+    y = jnp.einsum(
+        "...d,df->...f", x, p["w"].astype(dtype), preferred_element_type=jnp.float32
+    ).astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False) -> Params:
+    p = {"w": _dense_init(key, d_in, d_out)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+# ------------------------------- norms ------------------------------------
+
+
+def init_norm(cfg: ModelConfig, d: int | None = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# -------------------------------- RoPE -------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """``x: (..., S, h), positions: (S,) or broadcastable`` rotary embed."""
+    h = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, h, 2, dtype=jnp.float32) / h)  # (h/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (S, h/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : h // 2], x[..., h // 2 :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ----------------------------- attention -----------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, kv_heads: int | None = None) -> Params:
+    kv = kv_heads or cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], cfg.d_model, cfg.q_dim, cfg.qkv_bias),
+        "wk": init_linear(ks[1], cfg.d_model, kv * cfg.head_dim, cfg.qkv_bias),
+        "wv": init_linear(ks[2], cfg.d_model, kv * cfg.head_dim, cfg.qkv_bias),
+        "wo": init_linear(ks[3], cfg.q_dim, cfg.d_model),
+    }
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1).transpose(0, 2, 1, 3)  # (B, H, S, h)
+
+
+def _softcap(s: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, h)
+    k: jax.Array,  # (B, Hkv, Skv, h)
+    v: jax.Array,
+    *,
+    q_offset: int = 0,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention, chunked over KV (memory O(S * chunk)).
+
+    GQA handled by grouping query heads over KV heads.  fp32 statistics.
+    """
+    b, hq, sq, hd = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.reshape(b, hkv, g, sq, hd).astype(jnp.float32) * scale
+
+    kv_chunk = min(kv_chunk, skv)
+    n_chunks = skv // kv_chunk if skv % kv_chunk == 0 else -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kc = kp.reshape(b, hkv, n_chunks, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+    vc = vp.reshape(b, hkv, n_chunks, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    qpos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kb, vb, ci = inp  # (B, Hkv, C, h), (B, Hkv, C, h), ()
+        s = jnp.einsum(
+            "bkgqh,bkch->bkgqc", qf, kb.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        s = _softcap(s, softcap)
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+        ok = kpos[None, :] < skv  # mask tail padding
+        if causal:
+            ok = jnp.logical_and(ok, kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            ok = jnp.logical_and(ok, qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(ok[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bkch->bkgqh", p, vb.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, hq, sq, hd).astype(q.dtype)
+
+
+def attn_forward(
+    p: Params,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    kv_override: jax.Array | None = None,  # cross-attn memory (B, Skv, D)
+) -> jax.Array:
+    dtype = x.dtype
+    b, s, _ = x.shape
+    src = kv_override if kv_override is not None else x
+    q = _split_heads(linear(p["wq"], x, dtype), cfg.n_heads)
+    k = _split_heads(linear(p["wk"], src, dtype), cfg.n_kv_heads)
+    v = _split_heads(linear(p["wv"], src, dtype), cfg.n_kv_heads)
+    # heads over the tensor axis when divisible, else sequence parallelism
+    q = constrain(q, "batch", ("heads", "qseq"), ("qseq",), None)
+    k = constrain(k, "batch", ("kv_heads",), None, None)
+    v = constrain(v, "batch", ("kv_heads",), None, None)
+    if cfg.use_rope and kv_override is None:
+        pos = positions if positions is not None else jnp.arange(s)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    o = flash_attention(
+        q, k, v, causal=causal and kv_override is None, window=window,
+        softcap=cfg.attn_softcap,
+    )
+    o = constrain(o, "batch", ("heads", "qseq"), ("qseq",), None)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    return linear(p["wo"], o, dtype)
+
+
+def attn_decode(
+    p: Params,
+    x: jax.Array,  # (B, 1, D)
+    cache_k: jax.Array,  # (B, Hkv, Smax, h) — updated functionally
+    cache_v: jax.Array,
+    pos: jax.Array,  # () int32 current position
+    cfg: ModelConfig,
+    *,
+    window: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode with a KV cache.
+
+    The einsum-over-cache formulation keeps the seq axis shardable: with the
+    cache sharded over ``data`` (sequence parallelism for 500k contexts)
+    GSPMD turns the softmax statistics into psum-style partial reductions —
+    distributed flash-decoding for free.
+    """
+    dtype = x.dtype
+    b = x.shape[0]
+    smax = cache_k.shape[2]
+    q = _split_heads(linear(p["wq"], x, dtype), cfg.n_heads)  # (B,Hq,1,h)
+    k1 = _split_heads(linear(p["wk"], x, dtype), cfg.n_kv_heads)
+    v1 = _split_heads(linear(p["wv"], x, dtype), cfg.n_kv_heads)
+    if cfg.use_rope:
+        posv = jnp.full((1,), pos)
+        q = rope(q, posv, cfg.rope_theta)
+        k1 = rope(k1, posv, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k1.astype(cache_k.dtype), pos, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v1.astype(cache_v.dtype), pos, axis=2)
+
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    qf = q.reshape(b, hkv, g, 1, cfg.head_dim).astype(jnp.float32) * scale
+    s = jnp.einsum(
+        "bkgqh,bkch->bkgqc", qf, ck.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )  # (B,Hkv,G,1,Smax)
+    s = _softcap(s, cfg.attn_softcap)
+    kpos = jnp.arange(smax)
+    ok = kpos <= pos
+    if window is not None:
+        ok = jnp.logical_and(ok, pos - kpos < window)
+    s = jnp.where(ok[None, None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgqc,bkch->bkgqh", w, cv.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    o = o.reshape(b, hq, 1, cfg.head_dim).transpose(0, 2, 1, 3).reshape(b, 1, cfg.q_dim)
+    return linear(p["wo"], o.astype(dtype), dtype), ck, cv
+
+
+# -------------------------------- MLPs -------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": init_linear(ks[0], cfg.d_model, cfg.d_ff),
+            "w_up": init_linear(ks[1], cfg.d_model, cfg.d_ff),
+            "w_down": init_linear(ks[2], cfg.d_ff, cfg.d_model),
+        }
+    return {
+        "w_up": init_linear(ks[0], cfg.d_model, cfg.d_ff, bias=True),
+        "w_down": init_linear(ks[1], cfg.d_ff, cfg.d_model, bias=True),
+    }
+
+
+def mlp_forward(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dtype = x.dtype
+    if cfg.mlp in ("swiglu", "geglu"):
+        gate = constrain(linear(p["w_gate"], x, dtype), "batch", None, "ffn")
+        act = jax.nn.silu(gate) if cfg.mlp == "swiglu" else jax.nn.gelu(gate)
+        up = constrain(linear(p["w_up"], x, dtype), "batch", None, "ffn")
+        return linear(p["w_down"], act * up, dtype)
+    h = constrain(linear(p["w_up"], x, dtype), "batch", None, "ffn")
+    return linear(p["w_down"], jax.nn.gelu(h), dtype)
+
+
+# --------------------------------- MoE --------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    return {
+        "router": init_linear(ks[0], d, e),
+        "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * s_in,
+        "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * s_in,
+        "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * s_out,
+    }
+
+
+def moe_forward(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Top-k MoE with sort-based capacity dispatch (GShard-style dropping).
+
+    Dispatch is PER BATCH ROW (vmap over B): each row sorts its own S*k
+    (token, expert) pairs, so no sort or scatter ever crosses the batch
+    sharding — under pjit the only expert-parallel communication left is
+    the all-to-all between row-sharded buffers and expert-sharded FFNs.
+    (A global-sort variant was measured 10-60x more collective-bound; see
+    EXPERIMENTS.md §Perf iteration 3.)  Capacity is per row:
+    C = ceil(k * S / E * capacity_factor); overflow tokens are dropped.
+    """
+    dtype = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k_experts
+    cap = int(math.ceil(k * s / e * cfg.capacity_factor))
+
+    logits = linear(p["router"], x, dtype).astype(jnp.float32)  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (B, S, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_row(xr, er, wr):
+        # xr: (S, D); er/wr: (S, k)
+        e_flat = er.reshape(-1)
+        w_flat = wr.reshape(-1)
+        tok_flat = jnp.repeat(jnp.arange(s), k)
+        order = jnp.argsort(e_flat)  # per-row sort: S*k elements
+        e_sorted = jnp.take(e_flat, order)
+        tok_sorted = jnp.take(tok_flat, order)
+        w_sorted = jnp.take(w_flat, order)
+        counts = jnp.bincount(e_flat, length=e)
+        starts = jnp.cumsum(counts) - counts
+        pos_in_e = jnp.arange(s * k) - jnp.take(starts, e_sorted)
+        keep = pos_in_e < cap
+        slot = jnp.where(keep, e_sorted * cap + pos_in_e, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), dtype)
+        buf = buf.at[slot].set(jnp.take(xr, tok_sorted, axis=0).astype(dtype))
+        return buf[: e * cap].reshape(e, cap, d), (tok_sorted, w_sorted, keep, slot)
+
+    h, aux = jax.vmap(dispatch_row)(x, top_e, top_p)  # h: (B, E, C, D)
+    h = constrain(h, "batch", ("expert",), None, None)
+
+    if e > 16:
+        # expert-parallel: expert-major 3D layout; the EP all-to-all lives
+        # in this transpose under GSPMD (expert dim divides the tensor axis)
+        h3 = h.transpose(1, 0, 2, 3).reshape(e, b * cap, d)
+        # expert over the tensor axis AND rows over the batch axes — without
+        # the row sharding the (E, B*C, D) buffer replicates over data
+        h3 = constrain(h3, ("expert",), ("batch",), None)
+        gate = jnp.einsum("ecd,edf->ecf", h3, p["w_gate"].astype(dtype),
+                          preferred_element_type=jnp.float32).astype(dtype)
+        up = jnp.einsum("ecd,edf->ecf", h3, p["w_up"].astype(dtype),
+                        preferred_element_type=jnp.float32).astype(dtype)
+        gate = constrain(gate, ("expert",), ("batch",), "ffn")
+        up = constrain(up, ("expert",), ("batch",), "ffn")
+        act = jax.nn.silu(gate) * up
+        out3 = jnp.einsum("ecf,efd->ecd", act, p["w_down"].astype(dtype),
+                          preferred_element_type=jnp.float32).astype(dtype)
+        out3 = constrain(out3, ("expert",), ("batch",), None)
+        out_e = out3.reshape(e, b, cap, d).transpose(1, 0, 2, 3)
+    else:
+        # few experts (< tensor axis): expert dim cannot shard, so keep
+        # tokens batch-sharded and unroll E tensor-parallel FFNs — weights
+        # are gathered (MBs), activations never are (a fully-replicated
+        # (E, B*C, D) buffer cost 43 GB/layer of all-gather; see
+        # EXPERIMENTS.md §Perf iteration 3)
+        outs = []
+        for ei in range(e):
+            he = h[:, ei]  # (B, C, D) batch-sharded
+            gate = constrain(
+                jnp.einsum("bcd,df->bcf", he, p["w_gate"][ei].astype(dtype),
+                           preferred_element_type=jnp.float32).astype(dtype),
+                "batch", None, "ffn")
+            up = constrain(
+                jnp.einsum("bcd,df->bcf", he, p["w_up"][ei].astype(dtype),
+                           preferred_element_type=jnp.float32).astype(dtype),
+                "batch", None, "ffn")
+            act = jax.nn.silu(gate) * up
+            outs.append(
+                jnp.einsum("bcf,fd->bcd", act, p["w_down"][ei].astype(dtype),
+                           preferred_element_type=jnp.float32).astype(dtype))
+        out_e = jnp.stack(outs, axis=1)  # (B, E, C, D)
+
+    def combine_row(oer, auxr):
+        tok_sorted, w_sorted, keep, slot = auxr
+        flat = oer.reshape(e * cap, d)
+        gathered = jnp.take(flat, jnp.minimum(slot, e * cap - 1), axis=0)
+        gathered = jnp.where(keep[:, None], gathered, 0.0)
+        return jnp.zeros((s, d), dtype).at[tok_sorted].add(
+            gathered * w_sorted[:, None].astype(dtype)
+        )
+
+    return jax.vmap(combine_row)(out_e, aux)

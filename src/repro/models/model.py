@@ -1,0 +1,111 @@
+"""Public model API: one object per architecture config.
+
+    model = Model(get_config("qwen1.5-4b"))
+    params = model.init(jax.random.key(0))
+    loss   = model.loss(params, batch)                   # training
+    logits, cache = model.prefill(params, tokens, ...)   # serving
+    logits, cache = model.decode_step(params, cache, token, pos)
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for the
+dry-run (weak-type-correct, shardable, no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import backbone, decode as D, prefill as P
+from repro.models.layers import Params
+
+__all__ = ["Model", "ShapeSpec", "input_specs", "SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- parameters --------------------------------------------------------
+    def init(self, key) -> Params:
+        return backbone.init_params(self.cfg, key)
+
+    def param_shapes(self) -> Params:
+        return backbone.param_shapes(self.cfg)
+
+    # -- training ----------------------------------------------------------
+    def loss(self, params: Params, batch: dict, *, remat: bool = True) -> jax.Array:
+        hidden = backbone.forward_hidden(
+            self.cfg, params, batch["tokens"], extras=batch.get("extras"), remat=remat
+        )
+        return backbone.chunked_ce_loss(self.cfg, params, hidden, batch["labels"])
+
+    # -- serving -----------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Params:
+        return D.init_cache(self.cfg, batch, max_seq, dtype)
+
+    def prefill(self, params, tokens, *, extras=None, max_seq=None):
+        return P.prefill(self.cfg, params, tokens, extras=extras, max_seq=max_seq)
+
+    def decode_step(self, params, cache, token, pos):
+        return D.decode_step(self.cfg, params, cache, token, pos)
+
+
+def _extras_spec(cfg: ModelConfig, batch: int, dtype) -> jax.ShapeDtypeStruct | None:
+    if cfg.family == "audio":
+        return jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), dtype)
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((batch, cfg.vision_tokens, cfg.d_model), dtype)
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the given cell."""
+    dtype = jnp.dtype(cfg.dtype)
+    b = shape.global_batch
+    s = shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), tok),
+            "labels": jax.ShapeDtypeStruct((b, s), tok),
+        }
+        ex = _extras_spec(cfg, b, dtype)
+        if ex is not None:
+            out["extras"] = ex
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), tok)}
+        ex = _extras_spec(cfg, b, dtype)
+        if ex is not None:
+            out["extras"] = ex
+        return out
+    if shape.kind == "decode":
+        cache = jax.eval_shape(lambda: D.init_cache(cfg, b, s, jnp.bfloat16))
+        return {
+            "token": jax.ShapeDtypeStruct((b,), tok),
+            "pos": jax.ShapeDtypeStruct((), tok),
+            "cache": cache,
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,317 @@
+"""Prefill: full-sequence forward that also materialises the decode cache.
+
+Returns ``(last_token_logits, cache)`` with the cache laid out exactly as
+:func:`repro.models.decode.init_cache` (zero-padded to ``max_seq``).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.backbone import _dtype, _layer_windows, logits_for_position
+from repro.models.layers import Params
+from repro.kernels.linear_attn.ops import linear_attention_with_state
+
+
+def _kv(p, xn, cfg: ModelConfig, positions=None):
+    dtype = xn.dtype
+    k = L._split_heads(L.linear(p["wk"], xn, dtype), cfg.n_kv_heads)
+    v = L._split_heads(L.linear(p["wv"], xn, dtype), cfg.n_kv_heads)
+    if cfg.use_rope and positions is not None:
+        k = L.rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _pad_seq(a: jax.Array, max_seq: int, axis: int = 2) -> jax.Array:
+    pad = max_seq - a.shape[axis]
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _self_attn_with_kv(p, x, cfg, window=None):
+    """Self-attention block half that also returns (k, v) for the cache."""
+    dtype = x.dtype
+    b, s, _ = x.shape
+    q = L._split_heads(L.linear(p["wq"], x, dtype), cfg.n_heads)
+    pos = jnp.arange(s)
+    k, v = _kv(p, x, cfg, positions=pos)
+    if cfg.use_rope:
+        q = L.rope(q, pos, cfg.rope_theta)
+    o = L.flash_attention(q, k, v, causal=True, window=window, softcap=cfg.attn_softcap)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    return L.linear(p["wo"], o, dtype), k, v
+
+
+def _dense_block_prefill(p, x, cfg, window):
+    xn = L.apply_norm(p["ln1"], x, cfg)
+    h, k, v = _self_attn_with_kv(p["attn"], xn, cfg, window)
+    if cfg.sandwich_norm:
+        h = L.apply_norm(p["ln1_post"], h, cfg)
+    x = x + h
+    y = L.apply_norm(p["ln2"], x, cfg)
+    y = L.moe_forward(p["moe"], y, cfg) if "moe" in p else L.mlp_forward(p["mlp"], y, cfg)
+    if cfg.sandwich_norm:
+        y = L.apply_norm(p["ln2_post"], y, cfg)
+    return x + y, k, v
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,  # (B, S)
+    *,
+    extras: jax.Array | None = None,
+    max_seq: int | None = None,
+    cache_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, Params]:
+    dtype = _dtype(cfg)
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.learned_pos:
+        x = x + params["dec_pos"][:s][None].astype(dtype)
+    cache: Params = {}
+
+    if cfg.family in ("dense", "moe"):
+        windows = _layer_windows(cfg)
+
+        if windows is None:
+            def body(x, p):
+                x, k, v = _dense_block_prefill(p, x, cfg, None)
+                return x, (k.astype(cache_dtype), v.astype(cache_dtype))
+            x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        else:
+            def body(x, inp):
+                p, w = inp
+                # static alternation is resolved per-layer by masking with a
+                # huge window when the flag is 0
+                eff = jnp.where(w > 0, w, jnp.asarray(1 << 30, jnp.int32))
+                from repro.models.backbone import _flash_dynwin
+                xn = L.apply_norm(p["ln1"], x, cfg)
+                q = L._split_heads(L.linear(p["attn"]["wq"], xn, x.dtype), cfg.n_heads)
+                pos = jnp.arange(x.shape[1])
+                k, v = _kv(p["attn"], xn, cfg, positions=pos)
+                if cfg.use_rope:
+                    q = L.rope(q, pos, cfg.rope_theta)
+                o = _flash_dynwin(q, k, v, eff, cfg)
+                o = o.transpose(0, 2, 1, 3).reshape(x.shape[0], x.shape[1], cfg.q_dim)
+                h = L.linear(p["attn"]["wo"], o, x.dtype)
+                if cfg.sandwich_norm:
+                    h = L.apply_norm(p["ln1_post"], h, cfg)
+                xx = x + h
+                y = L.apply_norm(p["ln2"], xx, cfg)
+                y = (L.moe_forward(p["moe"], y, cfg) if "moe" in p
+                     else L.mlp_forward(p["mlp"], y, cfg))
+                if cfg.sandwich_norm:
+                    y = L.apply_norm(p["ln2_post"], y, cfg)
+                return xx + y, (k.astype(cache_dtype), v.astype(cache_dtype))
+            x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows))
+
+        cache["k"] = _pad_seq(ks, max_seq, axis=3)
+        cache["v"] = _pad_seq(vs, max_seq, axis=3)
+
+    elif cfg.family == "ssm":
+        def body(x, p):
+            xn1 = L.apply_norm(p["ln1"], x, cfg)
+            h, wkv_state = _rwkv_time_mix_with_state(p["time_mix"], xn1, cfg)
+            x = x + h
+            xn2 = L.apply_norm(p["ln2"], x, cfg)
+            x = x + S.rwkv_channel_mix(p["channel_mix"], xn2, cfg)
+            return x, (xn1[:, -1].astype(cache_dtype), xn2[:, -1].astype(cache_dtype),
+                       wkv_state)
+        x, (p1, p2, wkv) = jax.lax.scan(body, x, params["blocks"])
+        cache.update(prev1=p1, prev2=p2, wkv=wkv)
+
+    elif cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        n_units = cfg.n_layers // period
+        n_tail = cfg.n_layers - n_units * period
+        shared = params["shared"]
+        unit_pp = jax.tree.map(
+            lambda a: a[: n_units * period].reshape(n_units, period, *a.shape[1:]),
+            params["blocks"],
+        )
+        tail_pp = jax.tree.map(lambda a: a[n_units * period :], params["blocks"])
+
+        def mamba_body(x, p):
+            xn = L.apply_norm(p["ln1"], x, cfg)
+            h, conv_st, ssm_st = _mamba2_with_state(p["mamba"], xn, cfg)
+            return x + h, (conv_st.astype(cache_dtype), ssm_st)
+
+        def unit(x, pp):
+            x, states = jax.lax.scan(mamba_body, x, pp)
+            xn = L.apply_norm(shared["ln1"], x, cfg)
+            h, k, v = _self_attn_with_kv(shared["attn"], xn, cfg, None)
+            x = x + h
+            y = L.apply_norm(shared["ln2"], x, cfg)
+            x = x + L.mlp_forward(shared["mlp"], y, cfg)
+            return x, (states, k.astype(cache_dtype), v.astype(cache_dtype))
+
+        x, (unit_states, sk, sv) = jax.lax.scan(unit, x, unit_pp)
+        if n_tail:
+            x, tail_states = jax.lax.scan(mamba_body, x, tail_pp)
+        conv_u, ssm_u = unit_states
+        conv = conv_u.reshape(n_units * period, *conv_u.shape[2:])
+        ssm_st = ssm_u.reshape(n_units * period, *ssm_u.shape[2:])
+        if n_tail:
+            conv = jnp.concatenate([conv, tail_states[0]], axis=0)
+            ssm_st = jnp.concatenate([ssm_st, tail_states[1]], axis=0)
+        cache.update(
+            conv=conv, ssm=ssm_st,
+            sk=_pad_seq(sk, max_seq, axis=3), sv=_pad_seq(sv, max_seq, axis=3),
+        )
+
+    elif cfg.family == "audio":
+        enc = extras.astype(dtype) + params["enc_pos"][None].astype(dtype)
+
+        def enc_body(h, p):
+            h = h + L.attn_forward(p["attn"], L.apply_norm(p["ln1"], h, cfg), cfg, causal=False)
+            h = h + L.mlp_forward(p["mlp"], L.apply_norm(p["ln2"], h, cfg), cfg)
+            return h, None
+        enc, _ = jax.lax.scan(enc_body, enc, params["enc_blocks"])
+        enc = L.apply_norm(params["enc_final_norm"], enc, cfg)
+
+        def dec_body(x, p):
+            xn = L.apply_norm(p["ln1"], x, cfg)
+            h, k, v = _self_attn_with_kv(p["attn"], xn, cfg, None)
+            x = x + h
+            xn2 = L.apply_norm(p["ln_x"], x, cfg)
+            xk, xv = _kv(p["cross"], enc, cfg)
+            x = x + L.attn_forward(p["cross"], xn2, cfg, kv_override=enc)
+            x = x + L.mlp_forward(p["mlp"], L.apply_norm(p["ln2"], x, cfg), cfg)
+            return x, (k.astype(cache_dtype), v.astype(cache_dtype),
+                       xk.astype(cache_dtype), xv.astype(cache_dtype))
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(dec_body, x, params["blocks"])
+        cache.update(
+            k=_pad_seq(ks, max_seq, axis=3), v=_pad_seq(vs, max_seq, axis=3),
+            xk=xks, xv=xvs,
+        )
+
+    elif cfg.family == "vlm":
+        period = cfg.cross_attn_period
+        n_units = cfg.n_layers // period
+        vision = extras.astype(dtype)
+        self_pp = jax.tree.map(
+            lambda a: a.reshape(n_units, period - 1, *a.shape[1:]), params["blocks"]
+        )
+
+        def unit(x, inp):
+            selfs, crossp = inp
+
+            def inner(x, p):
+                x, k, v = _dense_block_prefill(p, x, cfg, None)
+                return x, (k.astype(cache_dtype), v.astype(cache_dtype))
+
+            x, (ks, vs) = jax.lax.scan(inner, x, selfs)
+            xk, xv = _kv(crossp["cross"], vision, cfg)
+            h = L.attn_forward(
+                crossp["cross"], L.apply_norm(crossp["ln1"], x, cfg), cfg,
+                kv_override=vision,
+            )
+            x = x + jnp.tanh(crossp["gate"]).astype(x.dtype) * h
+            x = x + L.mlp_forward(crossp["mlp"], L.apply_norm(crossp["ln2"], x, cfg), cfg)
+            return x, (ks, vs, xk.astype(cache_dtype), xv.astype(cache_dtype))
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(
+            unit, x, (self_pp, params["cross_blocks"])
+        )
+        cache["k"] = _pad_seq(ks.reshape(-1, *ks.shape[2:]), max_seq, axis=3)
+        cache["v"] = _pad_seq(vs.reshape(-1, *vs.shape[2:]), max_seq, axis=3)
+        cache["xk"], cache["xv"] = xks, xvs
+    else:
+        raise ValueError(cfg.family)
+
+    x_last = L.apply_norm(params["final_norm"], x[:, -1:], cfg)[:, 0]
+    return logits_for_position(cfg, params, x_last), cache
+
+
+# -- state-returning variants of the ssm mixers ------------------------------
+
+
+def _rwkv_time_mix_with_state(p, x, cfg: ModelConfig):
+    dtype = x.dtype
+    b, t, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    prev = S._token_shift(x)
+
+    def mixed(i):
+        mu = p["mu"][i].astype(dtype)
+        return x + (prev - x) * mu
+
+    r = L.linear(p["wr"], mixed(0), dtype)
+    k = L.linear(p["wk"], mixed(1), dtype)
+    v = L.linear(p["wv"], mixed(2), dtype)
+    g = L.linear(p["wg"], mixed(3), dtype)
+    xw = mixed(4).astype(jnp.float32)
+    dd = jnp.tanh(xw @ p["w_a"]) @ p["w_b"]
+    w = jnp.exp(-jnp.exp(p["w0"][None, None] + dd))
+
+    def heads(a):
+        return a.reshape(b, t, h, hd).transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+
+    u_b = jnp.broadcast_to(
+        p["u"].reshape(1, h, hd).astype(dtype), (b, h, hd)
+    ).reshape(b * h, 1, hd)
+    o, state = linear_attention_with_state(
+        heads(r), heads(k), heads(v), heads(w.astype(dtype)), u_b, shift=1
+    )
+    o = o.reshape(b, h, t, hd)
+    state = state.reshape(b, h, hd, hd)
+    of = o.astype(jnp.float32)
+    of = of * jax.lax.rsqrt(jnp.mean(of * of, axis=-1, keepdims=True) + 1e-6)
+    o = of.astype(dtype).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return L.linear(p["wo"], o * jax.nn.silu(g), dtype), state
+
+
+def _mamba2_with_state(p, x, cfg: ModelConfig):
+    dtype = x.dtype
+    b, t, d = x.shape
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = cfg.n_heads
+    ph = inner // h
+
+    zxbcdt = L.linear(p["w_in"], x, dtype)
+    xin, z, bmat, cmat, dt = jnp.split(
+        zxbcdt, [inner, 2 * inner, 2 * inner + n, 2 * inner + 2 * n], axis=-1
+    )
+    kw = p["conv"].astype(dtype)
+    xpad = jnp.pad(xin, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+    xconv = sum(xpad[:, i : i + t] * kw[i][None, None] for i in range(cfg.ssm_conv))
+    xconv = jax.nn.silu(xconv)
+    # conv state: the last K-1 raw (pre-activation) inputs
+    conv_state = xin[:, t - (cfg.ssm_conv - 1) :]
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    decay = jnp.exp(-dtf * jnp.exp(p["a_log"]))
+
+    v = xconv.reshape(b, t, h, ph).transpose(0, 2, 1, 3)
+    v = v * dtf.transpose(0, 2, 1)[..., None].astype(dtype)
+    k = jnp.broadcast_to(bmat[:, None], (b, h, t, n))
+    q = jnp.broadcast_to(cmat[:, None], (b, h, t, n))
+    w = jnp.broadcast_to(decay.transpose(0, 2, 1)[..., None], (b, h, t, n)).astype(dtype)
+
+    def flat(a):
+        return a.reshape(b * h, t, a.shape[-1])
+
+    u0 = jnp.zeros((b * h, 1, n), dtype)
+    o, state = linear_attention_with_state(
+        flat(q), flat(k), flat(v), flat(w), u0, shift=0
+    )
+    y = o.reshape(b, h, t, ph)
+    state = state.reshape(b, h, n, ph)
+    y = y + p["d_skip"].astype(dtype)[None, :, None, None] * v
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, inner)
+    y = L.apply_norm(p["norm"], y, cfg) * jax.nn.silu(z)
+    return L.linear(p["w_out"], y, dtype), conv_state, state

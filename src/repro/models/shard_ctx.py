@@ -1,0 +1,99 @@
+"""Logical activation-sharding context.
+
+Model code never mentions mesh axes; it marks activations with *logical*
+dims:
+
+    q = constrain(q, "batch", "heads", "qseq", None)
+
+A launcher installs a mapping {logical dim -> mesh axis (or axes)} via
+:func:`activation_sharding`; ``constrain`` resolves it per-tensor with two
+safety rules:
+
+  * an axis is applied only when it divides the dim exactly,
+  * each mesh axis is used at most once per tensor (first logical dim wins),
+
+so GQA models where ``heads % tp != 0`` automatically fall back to the next
+logical dim that the tensor offers (e.g. sequence parallelism for
+attention) — this is what keeps attention compute sharded instead of
+replicated across the tensor axis (see EXPERIMENTS.md §Perf iteration 1).
+
+Outside a context (unit tests, CPU runs) ``constrain`` is the identity.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("act_sharding", default=None)
+
+# default logical rules for the production mesh
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    # merged (batch*heads) dim of the linear-attention kernels: spread over
+    # the whole mesh (heads fold into the tensor axis)
+    "batch_heads": ("pod", "data", "model"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "qseq": ("model",),  # fallback target when heads don't divide
+    "ffn": ("model",),
+    "expert": ("model",),
+    "embed": (),  # activations keep d_model replicated
+    "vocab": ("model",),
+    "kvseq": (),
+}
+
+__all__ = ["activation_sharding", "constrain", "DEFAULT_RULES"]
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict[str, tuple[str, ...]] | None = None):
+    token = _CTX.set((mesh, dict(DEFAULT_RULES, **(rules or {}))))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes) if axes else 1
+
+
+def constrain(x: jax.Array, *logical: str | Sequence[str] | None) -> jax.Array:
+    """Apply with_sharding_constraint per the active logical rules.
+
+    Each entry is a logical dim name, a tuple of *candidate* names (first
+    one that divides and is free wins), or None.
+    """
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    used: set[str] = set()
+    spec = []
+    for dim, names in zip(x.shape, logical):
+        if names is None:
+            spec.append(None)
+            continue
+        cands = (names,) if isinstance(names, str) else tuple(names)
+        chosen = None
+        for name in cands:
+            axes = tuple(a for a in rules.get(name, ()) if a in mesh.axis_names)
+            if not axes or any(a in used for a in axes):
+                continue
+            if dim % _axes_size(mesh, axes) == 0:
+                chosen = axes
+                break
+        if chosen:
+            used.update(chosen)
+            spec.append(chosen if len(chosen) > 1 else chosen[0])
+        else:
+            spec.append(None)
+    # pad remaining dims
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,254 @@
+"""Sequence-mixing blocks for the attention-free / hybrid families:
+RWKV6 ("Finch", data-dependent per-channel decay) and Mamba2 (SSD,
+scalar-per-head decay).  Both reduce to the gated linear-attention
+recurrence and share the chunked kernel
+(:mod:`repro.kernels.linear_attn`).
+
+Documented simplifications vs the reference implementations (DESIGN.md §7):
+* RWKV6: static token-shift mix per projection (the low-rank data-dependent
+  mix is kept only for the decay ``w``, which is the paper-defining part).
+* Mamba2: B/C projections shared across heads (as in SSD), depthwise conv
+  applied to the value path only; no chunked dt-bias discretisation beyond
+  ``softplus``.
+* Zamba2: the shared transformer block operates on the residual stream
+  (the concat-with-embedding variant is noted but not reproduced).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, init_linear, linear, init_norm, apply_norm
+from repro.kernels.linear_attn.ops import linear_attention
+
+
+# ------------------------------- RWKV6 -------------------------------------
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    lora = 64
+    return {
+        "mu": jnp.full((5, d), 0.5, jnp.float32),  # shift-mix for r,k,v,g,w
+        "wr": init_linear(ks[0], d, d),
+        "wk": init_linear(ks[1], d, d),
+        "wv": init_linear(ks[2], d, d),
+        "wg": init_linear(ks[3], d, d),
+        "wo": init_linear(ks[4], d, d),
+        "w0": jnp.full((d,), -6.0, jnp.float32),  # base decay (w ~ exp(-exp(.)))
+        "w_a": jax.random.normal(ks[5], (d, lora), jnp.float32) * 0.01,
+        "w_b": jax.random.normal(ks[6], (lora, d), jnp.float32) * 0.01,
+        "u": jax.random.normal(ks[7], (d,), jnp.float32) * 0.1,  # bonus
+    }
+
+
+def _token_shift(x: jax.Array) -> jax.Array:
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def rwkv_time_mix(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dtype = x.dtype
+    b, t, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    prev = _token_shift(x)
+
+    def mixed(i):
+        mu = p["mu"][i].astype(dtype)
+        return x + (prev - x) * mu
+
+    r = linear(p["wr"], mixed(0), dtype)
+    k = linear(p["wk"], mixed(1), dtype)
+    v = linear(p["wv"], mixed(2), dtype)
+    g = linear(p["wg"], mixed(3), dtype)
+    # data-dependent decay (the Finch contribution)
+    xw = mixed(4).astype(jnp.float32)
+    dd = jnp.tanh(xw @ p["w_a"]) @ p["w_b"]  # (B,T,D)
+    w = jnp.exp(-jnp.exp(p["w0"][None, None] + dd))  # in (0,1)
+
+    def heads(a):
+        return a.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+
+    o = linear_attention(
+        heads(r), heads(k), heads(v), heads(w.astype(dtype)),
+        u=p["u"].reshape(h, hd).astype(dtype), mode="rwkv",
+    )  # (B,H,T,hd)
+    # per-head groupnorm (RWKV uses GroupNorm over heads)
+    of = o.astype(jnp.float32)
+    of = of * jax.lax.rsqrt(jnp.mean(of * of, axis=-1, keepdims=True) + 1e-6)
+    o = of.astype(dtype).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return linear(p["wo"], o * jax.nn.silu(g), dtype)
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": jnp.full((2, cfg.d_model), 0.5, jnp.float32),
+        "wr": init_linear(ks[0], cfg.d_model, cfg.d_model),
+        "wk": init_linear(ks[1], cfg.d_model, cfg.d_ff),
+        "wv": init_linear(ks[2], cfg.d_ff, cfg.d_model),
+    }
+
+
+def rwkv_channel_mix(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dtype = x.dtype
+    prev = _token_shift(x)
+    xk = x + (prev - x) * p["mu"][0].astype(dtype)
+    xr = x + (prev - x) * p["mu"][1].astype(dtype)
+    r = jax.nn.sigmoid(linear(p["wr"], xr, dtype))
+    k = jnp.square(jax.nn.relu(linear(p["wk"], xk, dtype)))
+    return r * linear(p["wv"], k, dtype)
+
+
+# ------------------------------- Mamba2 ------------------------------------
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = cfg.n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": init_linear(ks[0], d, 2 * inner + 2 * n + h),  # x,z,B,C,dt
+        "conv": jax.random.normal(ks[1], (cfg.ssm_conv, inner), jnp.float32) * 0.1,
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": init_norm(cfg, inner),
+        "w_out": init_linear(ks[2], inner, d),
+    }
+
+
+def mamba2_forward(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dtype = x.dtype
+    b, t, d = x.shape
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = cfg.n_heads
+    ph = inner // h  # channels per head
+
+    zxbcdt = linear(p["w_in"], x, dtype)
+    xin, z, bmat, cmat, dt = jnp.split(
+        zxbcdt, [inner, 2 * inner, 2 * inner + n, 2 * inner + 2 * n], axis=-1
+    )
+    # causal depthwise conv on the value path
+    kw = p["conv"].astype(dtype)  # (K, inner)
+    xpad = jnp.pad(xin, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+    xconv = sum(
+        xpad[:, i : i + t] * kw[i][None, None] for i in range(cfg.ssm_conv)
+    )
+    xconv = jax.nn.silu(xconv)
+
+    # scalar-per-head decay a_t = exp(-softplus(dt + bias) * exp(A_log))
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    decay = jnp.exp(-dtf * jnp.exp(p["a_log"]))  # (B,T,H) in (0,1)
+
+    def heads(a, width):
+        return a.reshape(b, t, h, width).transpose(0, 2, 1, 3)
+
+    v = heads(xconv, ph)  # (B,H,T,P)
+    k = jnp.broadcast_to(bmat[:, None], (b, h, t, n))  # shared across heads
+    q = jnp.broadcast_to(cmat[:, None], (b, h, t, n))
+    w = jnp.broadcast_to(
+        decay.transpose(0, 2, 1)[..., None], (b, h, t, n)
+    ).astype(dtype)
+    # dt also scales the input (discretised B): v_eff = dt * v
+    v = v * dtf.transpose(0, 2, 1)[..., None].astype(dtype)
+
+    y = linear_attention(q, k, v, w, mode="ssd")  # (B,H,T,P)
+    y = y + p["d_skip"].astype(dtype)[None, :, None, None] * v
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, inner)
+    y = apply_norm(p["norm"], y, cfg) * jax.nn.silu(z)
+    return linear(p["w_out"], y, dtype)
+
+
+# --------------------------- decode (stateful) ------------------------------
+# SSM decode carries O(1) state per layer instead of a KV cache — this is
+# what makes the 500k-context decode shape trivially cheap for this family.
+
+
+def rwkv_time_mix_decode(
+    p: Params, x: jax.Array, prev_x: jax.Array, state: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token RWKV6 time mix.  x: (B, D); state: (B, H, hd, hd)."""
+    dtype = x.dtype
+    b, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+
+    def mixed(i):
+        mu = p["mu"][i].astype(dtype)
+        return x + (prev_x - x) * mu
+
+    r = linear(p["wr"], mixed(0), dtype).reshape(b, h, hd)
+    k = linear(p["wk"], mixed(1), dtype).reshape(b, h, hd)
+    v = linear(p["wv"], mixed(2), dtype).reshape(b, h, hd)
+    g = linear(p["wg"], mixed(3), dtype)
+    xw = mixed(4).astype(jnp.float32)
+    dd = jnp.tanh(xw @ p["w_a"]) @ p["w_b"]
+    w = jnp.exp(-jnp.exp(p["w0"][None] + dd)).reshape(b, h, hd)
+    u = p["u"].reshape(h, hd)
+
+    sf = state.astype(jnp.float32)
+    rf, kf, vf = r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]  # (B,H,hd,hd)
+    o = jnp.einsum("bhk,bhkv->bhv", rf, sf + u[None, :, :, None] * kv)
+    new_state = w[..., :, None] * sf + kv
+    of = o * jax.lax.rsqrt(jnp.mean(o * o, axis=-1, keepdims=True) + 1e-6)
+    o = of.astype(dtype).reshape(b, d)
+    return linear(p["wo"], o * jax.nn.silu(g), dtype), x, new_state.astype(state.dtype)
+
+
+def rwkv_channel_mix_decode(
+    p: Params, x: jax.Array, prev_x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    dtype = x.dtype
+    xk = x + (prev_x - x) * p["mu"][0].astype(dtype)
+    xr = x + (prev_x - x) * p["mu"][1].astype(dtype)
+    r = jax.nn.sigmoid(linear(p["wr"], xr, dtype))
+    k = jnp.square(jax.nn.relu(linear(p["wk"], xk, dtype)))
+    return r * linear(p["wv"], k, dtype), x
+
+
+def mamba2_decode(
+    p: Params,
+    x: jax.Array,  # (B, D)
+    conv_state: jax.Array,  # (B, K-1, inner)
+    ssm_state: jax.Array,  # (B, H, N, P)
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    dtype = x.dtype
+    b, d = x.shape
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = cfg.n_heads
+    ph = inner // h
+
+    zxbcdt = linear(p["w_in"], x, dtype)
+    xin, z, bmat, cmat, dt = jnp.split(
+        zxbcdt, [inner, 2 * inner, 2 * inner + n, 2 * inner + 2 * n], axis=-1
+    )
+    kw = p["conv"].astype(dtype)  # (K, inner)
+    hist = jnp.concatenate([conv_state, xin[:, None]], axis=1)  # (B, K, inner)
+    xconv = jax.nn.silu(jnp.einsum("bki,ki->bi", hist, kw))
+    new_conv = hist[:, 1:]
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    decay = jnp.exp(-dtf * jnp.exp(p["a_log"]))  # (B,H)
+
+    v = xconv.reshape(b, h, ph).astype(jnp.float32) * dtf[..., None]
+    kf = bmat.astype(jnp.float32)  # (B,N)
+    qf = cmat.astype(jnp.float32)
+    sf = ssm_state.astype(jnp.float32)
+    new_s = decay[..., None, None] * sf + kf[:, None, :, None] * v[:, :, None, :]
+    y = jnp.einsum("bn,bhnp->bhp", qf, new_s)
+    y = y + p["d_skip"][None, :, None] * v
+    y = y.reshape(b, inner).astype(dtype)
+    y = apply_norm(p["norm"], y, cfg) * jax.nn.silu(z)
+    return linear(p["w_out"], y, dtype), new_conv, new_s.astype(ssm_state.dtype)

@@ -1,0 +1,12 @@
+"""Serving layer: continuous-batching server + decode caches.
+
+The implementations live in repro.launch.serve (driver + Server) and
+repro.models.decode / repro.models.prefill (cache mechanics); re-exported
+here as the public serving API.
+"""
+
+from repro.launch.serve import Request, Server
+from repro.models.decode import decode_step, init_cache
+from repro.models.prefill import prefill
+
+__all__ = ["Request", "Server", "decode_step", "init_cache", "prefill"]

@@ -1,0 +1,9 @@
+from repro.train.optimizer import OptConfig, apply_gradients, init_opt_state, lr_at
+from repro.train.train_step import make_train_step, make_eval_step
+from repro.train import checkpoint, compression, resilience
+
+__all__ = [
+    "OptConfig", "apply_gradients", "init_opt_state", "lr_at",
+    "make_train_step", "make_eval_step", "checkpoint", "compression",
+    "resilience",
+]

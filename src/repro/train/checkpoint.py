@@ -1,0 +1,161 @@
+"""Fault-tolerant checkpointing: atomic, async, sharding-agnostic.
+
+Layout:  <dir>/step_00001230/arrays.npz + manifest.json
+         <dir>/step_00001230.tmp...    (atomic rename on completion)
+
+* Arrays are saved logically-unsharded (device_get), so a checkpoint written
+  on one mesh restores onto ANY mesh — this is the elastic-scaling path:
+  pass new ``shardings`` to :func:`restore` and every leaf is device_put with
+  the new layout.
+* ``save(..., blocking=False)`` hands the write to a background thread; the
+  next save joins it first (at most one outstanding write, never torn:
+  the rename happens last).
+* ``keep`` bounds disk usage; pruning never removes the newest checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "all_steps"]
+
+_PENDING: threading.Thread | None = None
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten(tree_like: Any, flat: dict[str, np.ndarray]) -> Any:
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    new_leaves = []
+    for path, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def _step_dir(root: Path, step: int) -> Path:
+    return root / f"step_{step:08d}"
+
+
+def all_steps(root: str | os.PathLike) -> list[int]:
+    root = Path(root)
+    if not root.exists():
+        return []
+    out = []
+    for p in root.iterdir():
+        if p.is_dir() and p.name.startswith("step_") and (p / "manifest.json").exists():
+            out.append(int(p.name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(root: str | os.PathLike) -> int | None:
+    steps = all_steps(root)
+    return steps[-1] if steps else None
+
+
+def _write(root: Path, step: int, flat_groups: dict[str, dict[str, np.ndarray]],
+           extra: dict, keep: int) -> None:
+    final = _step_dir(root, step)
+    tmp = Path(str(final) + f".tmp{os.getpid()}")
+    tmp.mkdir(parents=True, exist_ok=True)
+    manifest = {"step": step, "time": time.time(), "groups": {}, "extra": extra}
+    for group, flat in flat_groups.items():
+        np.savez(tmp / f"{group}.npz", **flat)
+        manifest["groups"][group] = sorted(flat)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+    # prune
+    steps = all_steps(root)
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(_step_dir(root, s), ignore_errors=True)
+
+
+def save(
+    root: str | os.PathLike,
+    step: int,
+    *,
+    params: Any,
+    opt_state: Any | None = None,
+    extra: dict | None = None,
+    keep: int = 3,
+    blocking: bool = True,
+) -> None:
+    global _PENDING
+    root = Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    if _PENDING is not None:
+        _PENDING.join()
+        _PENDING = None
+    groups = {"params": _flatten(params)}
+    if opt_state is not None:
+        groups["opt_state"] = _flatten(opt_state)
+    if blocking:
+        _write(root, step, groups, extra or {}, keep)
+    else:
+        t = threading.Thread(
+            target=_write, args=(root, step, groups, extra or {}, keep), daemon=True
+        )
+        t.start()
+        _PENDING = t
+
+
+def wait_for_pending() -> None:
+    global _PENDING
+    if _PENDING is not None:
+        _PENDING.join()
+        _PENDING = None
+
+
+def restore(
+    root: str | os.PathLike,
+    *,
+    params_like: Any,
+    opt_state_like: Any | None = None,
+    step: int | None = None,
+    shardings: Any | None = None,
+    opt_shardings: Any | None = None,
+) -> tuple[int, Any, Any | None, dict]:
+    """Load a checkpoint; optionally re-shard onto a (new) mesh layout."""
+    root = Path(root)
+    step = step if step is not None else latest_step(root)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    d = _step_dir(root, step)
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    def load_group(name, like, shard):
+        flat = dict(np.load(d / f"{name}.npz"))
+        tree = _unflatten(like, flat)
+        if shard is not None:
+            tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shard)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree
+
+    params = load_group("params", params_like, shardings)
+    opt_state = None
+    if opt_state_like is not None and "opt_state" in manifest["groups"]:
+        opt_state = load_group("opt_state", opt_state_like, opt_shardings)
+    return step, params, opt_state, manifest.get("extra", {})

@@ -1,0 +1,71 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+``int8_allreduce``: per-shard symmetric int8 quantisation + all_gather of
+(payload, scale) + local dequant-sum.  Bytes on the wire: n/4 per hop vs
+fp32 ring all-reduce's ~2n — a win for the gradient-sized messages the DP
+axis moves every step.  Combine with :class:`ErrorFeedback` so quantisation
+error is re-injected next step (standard EF-SGD; keeps convergence).
+
+Used by the shard_map data-parallel train wrapper (``--grad-compression``
+in launch/train.py); the pjit path leaves reduction to XLA.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "int8_allreduce", "ErrorFeedback",
+           "compressed_grad_allreduce"]
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_allreduce(x: jax.Array, axis_name: str | tuple[str, ...]) -> jax.Array:
+    """Mean over `axis_name` with int8 payloads (inside shard_map)."""
+    q, s = quantize_int8(x)
+    qg = jax.lax.all_gather(q, axis_name)  # (P, ...) int8
+    sg = jax.lax.all_gather(s, axis_name)  # (P,)
+    n = qg.shape[0]
+    deq = qg.astype(jnp.float32) * sg.reshape((n,) + (1,) * x.ndim)
+    return jnp.sum(deq, axis=0) / n
+
+
+def compressed_grad_allreduce(grads: Any, axis_name, residuals: Any) -> tuple[Any, Any]:
+    """Error-feedback int8 all-reduce over a gradient pytree."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize_int8(gf)
+        local_deq = dequantize_int8(q, s)
+        new_r = gf - local_deq  # error feedback
+        qg = jax.lax.all_gather(q, axis_name)
+        sg = jax.lax.all_gather(s, axis_name)
+        n = qg.shape[0]
+        mean = jnp.sum(
+            qg.astype(jnp.float32) * sg.reshape((n,) + (1,) * g.ndim), axis=0
+        ) / n
+        return mean.astype(g.dtype), new_r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return tdef.unflatten([o[0] for o in out]), tdef.unflatten([o[1] for o in out])
+
+
+class ErrorFeedback:
+    """Residual initialiser for :func:`compressed_grad_allreduce`."""
+
+    @staticmethod
+    def init(grads_like: Any) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

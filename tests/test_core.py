@@ -1,0 +1,185 @@
+"""Unit + property tests for the SC framework core (subspace, collision,
+SC-Linear, SuCo)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SuCoConfig,
+    build_index,
+    collision_count,
+    contiguous_spec,
+    sampled_spec,
+    sc_linear_query,
+    sc_scores_from_subspaces,
+    suco_query,
+)
+from repro.core import subspace as sub
+from repro.core.collision import kth_smallest, sc_scores
+from repro.data import make_dataset, recall, mean_relative_error
+
+
+# ------------------------------ subspace -----------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    d=st.integers(4, 100),
+    ns=st.integers(1, 12),
+    seed=st.integers(0, 1000),
+)
+def test_subspace_spec_partitions_all_dims(d, ns, seed):
+    if d // ns < 1:
+        ns = max(1, d // 2)
+    spec = sampled_spec(d, ns, seed)
+    assert sum(spec.sizes) == d
+    assert sorted(spec.perm) == list(range(d))
+    # Definition 3: first Ns-1 subspaces have floor(d/Ns) dims
+    s = d // ns
+    assert all(sz == s for sz in spec.sizes[:-1])
+    assert spec.sizes[-1] == d - s * (ns - 1)
+
+
+def test_split_padded_preserves_distances():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(7, 13)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(13,)), jnp.float32)
+    spec = sampled_spec(13, 4, 3)
+    xp, qp = sub.permute(spec, x), sub.permute(spec, q)
+    xs = sub.split_padded(spec, xp)
+    qs = sub.split_padded(spec, qp)
+    # padded per-subspace distances sum to the full distance (zero pad)
+    per = jnp.sum((xs - qs[:, None, :]) ** 2, axis=-1)  # (Ns, n)
+    full = jnp.sum((x - q[None]) ** 2, axis=-1)
+    np.testing.assert_allclose(np.asarray(per.sum(0)), np.asarray(full), rtol=1e-5)
+
+
+# ------------------------------ collision ----------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 200), st.integers(0, 1000))
+def test_kth_smallest_matches_numpy(k, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=300).astype(np.float32)
+    got = float(kth_smallest(jnp.asarray(v), min(k, 300)))
+    want = float(np.sort(v)[min(k, 300) - 1])
+    assert got == pytest.approx(want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 1000), st.floats(0.01, 0.5))
+def test_collision_mask_counts_at_least_alpha_n(seed, alpha):
+    """Threshold semantics: the collision set contains the alpha*n nearest
+    (ties may add more — never fewer)."""
+    rng = np.random.default_rng(seed)
+    d = rng.normal(size=(4, 500)).astype(np.float32) ** 2
+    c = collision_count(500, alpha)
+    scores = sc_scores(jnp.asarray(d), c)
+    # per subspace: at least c collide
+    from repro.core.collision import collision_mask
+
+    m = np.asarray(collision_mask(jnp.asarray(d), c))
+    assert (m.sum(axis=1) >= c).all()
+    # and the c nearest definitely collide
+    for i in range(4):
+        near = np.argsort(d[i], kind="stable")[:c]
+        assert m[i, near].all()
+
+
+# ------------------------------ SC-Linear ----------------------------------
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    return make_dataset("gaussian_mixture", 4000, 48, m=16, k=10, seed=0)
+
+
+def test_sc_linear_beta_one_is_exact(clustered):
+    ds = clustered
+    spec = contiguous_spec(48, 8)
+    res = sc_linear_query(
+        jnp.asarray(ds.x), jnp.asarray(ds.queries), spec=spec, k=10,
+        alpha=0.05, beta=1.0,
+    )
+    assert recall(np.asarray(res.ids), ds.gt_ids) == 1.0
+    # distances use the fp32 matmul identity; gt is float64 exact -> ~1e-3
+    np.testing.assert_allclose(
+        np.asarray(res.dists[:, 0]), ds.gt_dists[:, 0], rtol=2e-2, atol=1e-2
+    )
+
+
+def test_sc_linear_high_recall_on_clustered(clustered):
+    ds = clustered
+    spec = contiguous_spec(48, 8)
+    res = sc_linear_query(
+        jnp.asarray(ds.x), jnp.asarray(ds.queries), spec=spec, k=10,
+        alpha=0.05, beta=0.05,
+    )
+    assert recall(np.asarray(res.ids), ds.gt_ids) >= 0.9
+
+
+def test_sc_linear_l1_metric(clustered):
+    ds = clustered
+    spec = contiguous_spec(48, 8)
+    res = sc_linear_query(
+        jnp.asarray(ds.x), jnp.asarray(ds.queries), spec=spec, k=10,
+        alpha=0.05, beta=0.05, metric="l1",
+    )
+    from repro.data import exact_knn
+
+    gt_ids, _ = exact_knn(ds.x, ds.queries, 10, metric="l1")
+    assert recall(np.asarray(res.ids), gt_ids) >= 0.85
+
+
+def test_scores_scanned_matches_direct(clustered):
+    ds = clustered
+    spec = contiguous_spec(48, 6)
+    x = jnp.asarray(ds.x[:500])
+    q = jnp.asarray(ds.queries[:4])
+    xs = sub.split_padded(spec, sub.permute(spec, x))
+    qs = sub.split_padded(spec, sub.permute(spec, q))
+    c = collision_count(500, 0.05)
+    scanned = sc_scores_from_subspaces(xs, qs, c)
+    # direct: per-subspace distances + thresholds
+    per = jnp.sum((xs[:, None] - qs[:, :, None]) ** 2, axis=-1)  # (Ns,m,n)
+    direct = jax.vmap(lambda dm: sc_scores(dm, c), in_axes=1)(per)
+    np.testing.assert_array_equal(np.asarray(scanned), np.asarray(direct))
+
+
+# -------------------------------- SuCo --------------------------------------
+
+
+def test_suco_end_to_end_recall(clustered):
+    ds = clustered
+    cfg = SuCoConfig(n_subspaces=8, sqrt_k=24, kmeans_iters=8, seed=0)
+    idx = build_index(jnp.asarray(ds.x), cfg)
+    res = suco_query(
+        jnp.asarray(ds.x), idx, jnp.asarray(ds.queries), k=10, alpha=0.05, beta=0.02
+    )
+    r = recall(np.asarray(res.ids), ds.gt_ids)
+    assert r >= 0.9, f"SuCo recall {r} too low"
+    mre = mean_relative_error(np.asarray(res.dists), ds.gt_dists)
+    assert mre < 0.05
+
+
+def test_suco_deterministic(clustered):
+    ds = clustered
+    cfg = SuCoConfig(n_subspaces=4, sqrt_k=16, kmeans_iters=4, seed=7)
+    i1 = build_index(jnp.asarray(ds.x), cfg)
+    i2 = build_index(jnp.asarray(ds.x), cfg)
+    np.testing.assert_array_equal(np.asarray(i1.cell_ids), np.asarray(i2.cell_ids))
+
+
+def test_suco_index_memory_matches_claim(clustered):
+    """Paper: index space O(sqrt(K) d + n Ns) — check the dominant n*Ns term."""
+    ds = clustered
+    cfg = SuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=2)
+    idx = build_index(jnp.asarray(ds.x), cfg)
+    n, d = ds.x.shape
+    expected = 4 * n * cfg.n_subspaces  # int32 cell ids
+    assert idx.memory_bytes() < expected * 1.5
+    assert idx.memory_bytes() < ds.x.nbytes  # index is lighter than the data

@@ -1,0 +1,88 @@
+"""Distributed SuCo engine tests.
+
+These need >1 device, so they run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the main pytest
+process keeps the default single device per the dry-run contract)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+_SCRIPT = textwrap.dedent(
+    """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.distributed.engine import (
+        DistSuCoConfig, build_sharded, query_sharded, index_shardings, shard_index,
+    )
+    from repro.core import SuCoConfig, build_index, suco_query
+    from repro.data import make_dataset, recall
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    ds = make_dataset("gaussian_mixture", 4096, 64, m=16, k=10)
+    cfg = DistSuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=6, alpha=0.05,
+                         beta=0.02, k=10, q_chunk=16, point_axes=("pod", "data"))
+    sh = index_shardings(mesh, cfg)
+    x = jax.device_put(jnp.asarray(ds.x), sh["x"])
+    q = jax.device_put(jnp.asarray(ds.queries), sh["queries"])
+
+    # distributed build + query
+    idx = build_sharded(mesh, x, cfg)
+    ids, dists = query_sharded(mesh, cfg, x, idx, q)
+    r = recall(np.asarray(ids), ds.gt_ids)
+    assert r >= 0.85, f"distributed recall too low: {r}"
+
+    # same-index equivalence: local query on the distributed index
+    local_idx = jax.device_put(idx, jax.devices()[0])
+    res = suco_query(jnp.asarray(ds.x), local_idx, jnp.asarray(ds.queries),
+                     k=10, alpha=0.05, beta=0.02)
+    overlap = np.mean([
+        len(set(map(int, ids[i])) & set(map(int, res.ids[i]))) / 10
+        for i in range(16)
+    ])
+    assert overlap >= 0.95, f"distributed/local disagree: {overlap}"
+
+    # shard_index round-trip of a locally built index
+    lcfg = SuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=6)
+    li = build_index(jnp.asarray(ds.x), lcfg)
+    si = shard_index(mesh, cfg, li)
+    ids2, _ = query_sharded(mesh, cfg, x, si, q)
+    r2 = recall(np.asarray(ids2), ds.gt_ids)
+    assert r2 >= 0.85, f"sharded local-index recall too low: {r2}"
+
+    # elastic re-scaling: move the index to a DIFFERENT mesh shape and
+    # re-query — results must be identical (sharding-agnostic layout)
+    from repro.distributed.elastic import reshard_index
+    import dataclasses
+    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg2 = dataclasses.replace(cfg, point_axes=("data",))
+    from repro.distributed.engine import index_shardings as ish
+    idx2 = reshard_index(mesh2, cfg2, idx)
+    x2 = jax.device_put(jnp.asarray(ds.x), ish(mesh2, cfg2)["x"])
+    q2 = jax.device_put(jnp.asarray(ds.queries), ish(mesh2, cfg2)["queries"])
+    ids3, _ = query_sharded(mesh2, cfg2, x2, idx2, q2)
+    overlap2 = np.mean([
+        len(set(map(int, ids[i])) & set(map(int, ids3[i]))) / 10
+        for i in range(16)
+    ])
+    assert overlap2 >= 0.95, f"elastic reshard changed results: {overlap2}"
+    print("DISTRIBUTED_OK", r, overlap, r2, overlap2)
+    """
+)
+
+
+def test_distributed_engine_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"stdout={out.stdout}\nstderr={out.stderr[-3000:]}"
+    assert "DISTRIBUTED_OK" in out.stdout

@@ -1,0 +1,74 @@
+"""Property tests: the three Dynamic Activation implementations agree.
+
+multi_sequence (heap, IMI'14) == dynamic_activation (paper Alg. 3) ==
+activate_cells_sorted (TPU sort-prefix) == dynamic_activation_lax
+(lax.while_loop port), on the retrieved cell *set* and its point total.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import activate_cells_sorted, dynamic_activation_lax
+from repro.core.da_numpy import dynamic_activation, multi_sequence
+
+
+@st.composite
+def imi_case(draw):
+    k = draw(st.integers(2, 12))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    d1 = rng.random(k).astype(np.float64)
+    d2 = rng.random(k).astype(np.float64)
+    counts = rng.integers(0, 10, size=(k, k)).astype(np.int32)
+    total = int(counts.sum())
+    target = draw(st.integers(1, max(total, 1)))
+    return d1, d2, counts, target
+
+
+@settings(max_examples=60, deadline=None)
+@given(imi_case())
+def test_all_four_implementations_agree(case):
+    d1, d2, counts, target = case
+    ms = multi_sequence(d1, d2, counts, target)
+    da = dynamic_activation(d1, d2, counts, target)
+    assert ms == da, "Alg.3 must retrieve the same cells in the same order"
+
+    flat = jnp.asarray(counts.reshape(-1))
+    mask_sorted = np.asarray(
+        activate_cells_sorted(jnp.asarray(d1), jnp.asarray(d2), flat, target)
+    )
+    mask_lax = np.asarray(
+        dynamic_activation_lax(jnp.asarray(d1), jnp.asarray(d2), flat, target)
+    )
+    k = counts.shape[1]
+    set_ms = {c1 * k + c2 for c1, c2 in ms}
+    assert set(np.nonzero(mask_sorted)[0].tolist()) == set_ms
+    assert set(np.nonzero(mask_lax)[0].tolist()) == set_ms
+
+
+@settings(max_examples=40, deadline=None)
+@given(imi_case())
+def test_prefix_minimality(case):
+    """The retrieved set is the minimal ascending-distance prefix covering
+    the target count (ties excepted — ties are broken by cell id)."""
+    d1, d2, counts, target = case
+    ms = multi_sequence(d1, d2, counts, target)
+    got = sum(int(counts[c1, c2]) for c1, c2 in ms)
+    if got < target:
+        # only possible if every cell was retrieved
+        assert len(ms) == counts.size
+        return
+    # removing the last (farthest) cell must drop below target
+    drop = int(counts[ms[-1][0], ms[-1][1]])
+    assert got - drop < target
+
+
+def test_order_is_ascending_distance():
+    rng = np.random.default_rng(0)
+    d1, d2 = rng.random(8), rng.random(8)
+    counts = np.ones((8, 8), np.int32)
+    cells = multi_sequence(d1, d2, counts, 64)
+    dists = [d1[a] + d2[b] for a, b in cells]
+    assert all(x <= y + 1e-12 for x, y in zip(dists, dists[1:]))

@@ -1,0 +1,220 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle, with
+shape/dtype sweeps (hypothesis + parametrize)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.pairwise_l2.ops import pairwise_sqdist
+from repro.kernels.pairwise_l2.ref import pairwise_sqdist_ref
+from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+from repro.kernels.gather_rerank.ops import gather_rerank
+from repro.kernels.gather_rerank.ref import gather_rerank_ref
+from repro.kernels.linear_attn.kernel import linear_attn_kernel
+from repro.kernels.linear_attn.ref import linear_attn_ref
+from repro.kernels.linear_attn.ops import linear_attention
+
+
+# --------------------------- pairwise_l2 ------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    n=st.integers(1, 200),
+    d=st.integers(1, 150),
+    seed=st.integers(0, 99),
+)
+def test_pairwise_l2_shapes(m, n, d, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    got = pairwise_sqdist(q, x, interpret=True)
+    want = pairwise_sqdist_ref(q, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_l2_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(33, 64)), dtype)
+    x = jnp.asarray(rng.normal(size=(129, 64)), dtype)
+    got = pairwise_sqdist(q, x, interpret=True)
+    want = pairwise_sqdist_ref(q, x)
+    tol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol, rtol=tol)
+    assert got.dtype == jnp.float32  # fp32 accumulate regardless of input
+
+
+# --------------------------- kmeans_assign ----------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    k=st.integers(1, 80),
+    s=st.integers(1, 40),
+    seed=st.integers(0, 99),
+)
+def test_kmeans_assign_sweep(n, k, s, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, s)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, s)), jnp.float32)
+    got = kmeans_assign(x, c, interpret=True)
+    want = kmeans_assign_ref(x, c)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# --------------------------- gather_rerank ----------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mq=st.integers(1, 6),
+    mc=st.integers(1, 50),
+    n=st.integers(4, 300),
+    d=st.integers(1, 100),
+    seed=st.integers(0, 99),
+)
+def test_gather_rerank_sweep(mq, mc, n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(mq, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, n, size=(mq, mc)), jnp.int32)
+    got = gather_rerank(ids, x, q, interpret=True)
+    want = gather_rerank_ref(ids, x, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------- linear_attn -----------------------------------
+
+
+@pytest.mark.parametrize("shift", [0, 1])
+@pytest.mark.parametrize("t,chunk", [(64, 16), (100, 32), (32, 32)])
+def test_linear_attn_kernel_vs_scan(shift, t, chunk):
+    rng = np.random.default_rng(0)
+    bh, dk, dv = 4, 16, 24
+    q = rng.normal(size=(bh, t, dk)).astype(np.float32) * 0.3
+    k = rng.normal(size=(bh, t, dk)).astype(np.float32) * 0.3
+    v = rng.normal(size=(bh, t, dv)).astype(np.float32)
+    w = rng.uniform(0.2, 0.9995, size=(bh, t, dk)).astype(np.float32)
+    u = rng.normal(size=(bh, 1, dk)).astype(np.float32) * 0.2
+    tp = -(-t // chunk) * chunk
+    pad = lambda a, cv=0.0: np.pad(a, ((0, 0), (0, tp - t), (0, 0)), constant_values=cv)
+    o_k, s_k = linear_attn_kernel(
+        jnp.asarray(pad(q)), jnp.asarray(pad(k)), jnp.asarray(pad(v)),
+        jnp.asarray(pad(w, 1.0)), jnp.asarray(u),
+        chunk=chunk, shift=shift, interpret=True,
+    )
+    o_r, s_r = linear_attn_ref(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(w),
+        jnp.asarray(u), shift=shift,
+    )
+    np.testing.assert_allclose(np.asarray(o_k)[:, :t], np.asarray(o_r), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=2e-4, rtol=1e-3)
+
+
+def test_linear_attn_small_decay_stability():
+    """The log-space chunk form must survive decays that overflow the naive
+    cumprod-ratio formulation (0.2^64 ~ 1e-45 underflow)."""
+    rng = np.random.default_rng(1)
+    bh, t, dk, dv = 2, 128, 8, 8
+    q = rng.normal(size=(bh, t, dk)).astype(np.float32)
+    k = rng.normal(size=(bh, t, dk)).astype(np.float32)
+    v = rng.normal(size=(bh, t, dv)).astype(np.float32)
+    w = np.full((bh, t, dk), 0.2, np.float32)
+    u = np.zeros((bh, 1, dk), np.float32)
+    o_k, _ = linear_attn_kernel(
+        *(jnp.asarray(a) for a in (q, k, v, w, u)), chunk=64, shift=0, interpret=True
+    )
+    o_r, _ = linear_attn_ref(*(jnp.asarray(a) for a in (q, k, v, w, u)), shift=0)
+    assert np.isfinite(np.asarray(o_k)).all()
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-4, rtol=1e-3)
+
+
+def test_linear_attention_wrapper_routes_to_ref_on_cpu():
+    rng = np.random.default_rng(2)
+    b, h, t, d = 2, 3, 20, 8
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    q, k, v = mk(b, h, t, d), mk(b, h, t, d), mk(b, h, t, d)
+    w = jnp.asarray(rng.uniform(0.5, 0.99, size=(b, h, t, d)), jnp.float32)
+    out = linear_attention(q, k, v, w, mode="gla")
+    assert out.shape == (b, h, t, d)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("shift", [0, 1])
+def test_linear_attn_chunked_jnp_vs_scan(shift):
+    from repro.kernels.linear_attn.ref import linear_attn_chunked_jnp
+
+    rng = np.random.default_rng(3)
+    bh, t, dk, dv = 3, 128, 12, 20
+    q = jnp.asarray(rng.normal(size=(bh, t, dk)), jnp.float32) * 0.3
+    k = jnp.asarray(rng.normal(size=(bh, t, dk)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.normal(size=(bh, t, dv)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.2, 0.9995, size=(bh, t, dk)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(bh, 1, dk)), jnp.float32) * 0.2
+    o_c, s_c = linear_attn_chunked_jnp(q, k, v, w, u, chunk=32, shift=shift)
+    o_r, s_r = linear_attn_ref(q, k, v, w, u, shift=shift)
+    np.testing.assert_allclose(np.asarray(o_c), np.asarray(o_r), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_r), atol=2e-4, rtol=1e-3)
+
+
+# ---------------------------- sc_score (fused) ------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    ns=st.integers(1, 8),
+    m=st.integers(1, 20),
+    n=st.integers(1, 300),
+    s=st.integers(1, 40),
+    seed=st.integers(0, 99),
+)
+def test_sc_score_fused_sweep(ns, m, n, s, seed):
+    from repro.kernels.sc_score.ops import sc_scores_fused
+    from repro.kernels.sc_score.ref import sc_score_ref
+
+    rng = np.random.default_rng(seed)
+    qs = jnp.asarray(rng.normal(size=(ns, m, s)), jnp.float32)
+    xs = jnp.asarray(rng.normal(size=(ns, n, s)), jnp.float32)
+    # thresholds from actual distance quantiles so masks are non-trivial
+    d2 = np.maximum(
+        (np.asarray(qs)[:, :, None] - np.asarray(xs)[:, None]) ** 2, 0
+    ).sum(-1)
+    # nudge thresholds off exact distance values so fp32 reduction-order
+    # differences between kernel and oracle cannot flip boundary elements
+    tau = jnp.asarray(np.quantile(d2, 0.3, axis=2) + 1e-3, jnp.float32)
+    got = sc_scores_fused(qs, xs, tau, interpret=True)
+    want = sc_score_ref(qs, xs, tau)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_sc_score_fused_equals_core_pipeline():
+    """The fused kernel reproduces sc_scores_from_subspaces exactly."""
+    from repro.core import contiguous_spec, collision_count
+    from repro.core import subspace as sub
+    from repro.core.collision import kth_smallest
+    from repro.core.sc_linear import sc_scores_from_subspaces
+    from repro.kernels.sc_score.ops import sc_scores_fused
+
+    rng = np.random.default_rng(0)
+    n, d, mq = 500, 32, 6
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(mq, d)), jnp.float32)
+    spec = contiguous_spec(d, 4)
+    xs = sub.split_padded(spec, sub.permute(spec, x))
+    qs = sub.split_padded(spec, sub.permute(spec, q))
+    c = collision_count(n, 0.05)
+    want = sc_scores_from_subspaces(xs, qs, c)
+    # thresholds exactly as the core path computes them (same matmul-identity
+    # rounding; a direct (x-q)^2 formula flips boundary elements)
+    from repro.core.distances import pairwise_dist
+
+    d_sub = jax.vmap(lambda xx, qq: pairwise_dist(qq, xx))(xs, qs)  # (Ns,m,n)
+    tau = kth_smallest(d_sub, c)  # (Ns, m)
+    got = sc_scores_fused(qs, xs, tau, interpret=True)
+    assert (np.asarray(got) == np.asarray(want)).all()

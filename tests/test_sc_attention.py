@@ -1,0 +1,56 @@
+"""Beyond-paper SC sparse attention: selection quality + exactness."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.sc_attention import (
+    attention_mass_recall,
+    sc_select_keys,
+    sc_sparse_attention,
+)
+
+
+def _data(h=4, s=2048, hd=32, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.normal(size=(h, s, hd)), jnp.float32)
+    values = jnp.asarray(rng.normal(size=(h, s, hd)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(h, hd)), jnp.float32) + keys[:, -1]
+    return q, keys, values
+
+
+def test_sc_selection_beats_random():
+    q, keys, values = _data()
+    n_keep = 128
+    ids = sc_select_keys(q, keys, n_subspaces=4, alpha=0.05, n_keep=n_keep)
+    mass = float(attention_mass_recall(q, keys, ids).mean())
+    rng = np.random.default_rng(1)
+    rnd = jnp.asarray(rng.choice(keys.shape[1], size=(keys.shape[0], n_keep),
+                                 replace=False))
+    mass_rnd = float(attention_mass_recall(q, keys, rnd).mean())
+    assert mass > 3 * mass_rnd, (mass, mass_rnd)
+
+
+def test_sc_sparse_attention_converges_to_exact():
+    q, keys, values = _data()
+    out_full_keep, ids = sc_sparse_attention(
+        q, keys, values, n_subspaces=4, alpha=0.2, n_keep=keys.shape[1]
+    )
+    logits = jnp.einsum("hd,hsd->hs", q, keys) / np.sqrt(q.shape[-1])
+    w = jax.nn.softmax(logits, axis=-1)
+    exact = jnp.einsum("hs,hsd->hd", w, values)
+    np.testing.assert_allclose(np.asarray(out_full_keep), np.asarray(exact),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_sc_mass_recall_monotone_in_budget():
+    q, keys, values = _data(seed=2)
+    masses = []
+    for n_keep in (64, 256, 1024):
+        _, ids = sc_sparse_attention(q, keys, values, n_subspaces=4,
+                                     alpha=0.05, n_keep=n_keep)
+        masses.append(float(attention_mass_recall(q, keys, ids).mean()))
+    assert masses[0] <= masses[1] <= masses[2]
+    # iid gaussian keys are the framework's worst case (LID == d); the
+    # structured-cache demo reaches 0.98 — here 0.6+ at half the keys
+    assert masses[2] > 0.6

@@ -1,0 +1,67 @@
+"""Theorem 1/2 calculators: the paper's probability guarantees hold in the
+admissible parameter ranges, and fail gracefully outside them."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.theory import (
+    subspace_statistics,
+    suggest_parameters,
+    theorem1_bound,
+    theorem2_bound,
+    _ndtri,
+)
+
+
+def test_ndtri_matches_known_values():
+    assert _ndtri(0.5) == pytest.approx(0.0, abs=1e-9)
+    assert _ndtri(0.975) == pytest.approx(1.959964, abs=1e-5)
+    assert _ndtri(0.025) == pytest.approx(-1.959964, abs=1e-5)
+
+
+def test_theorem1_reaches_claimed_bound():
+    """For concentrated data (m >> sigma) and admissible alpha the success
+    probability must reach the paper's 1/2 - 1/e^2 ~ 0.3647."""
+    target = 0.5 - 1.0 / math.e**2
+    rep = theorem1_bound(m=10.0, sigma=1.0, n_subspaces=8, alpha=0.95)
+    assert rep.success_prob >= target - 1e-9, rep
+    assert rep.c1 > 0 and rep.c2 > 0
+
+
+def test_theorem1_inadmissible_alpha_returns_zero():
+    rep = theorem1_bound(m=10.0, sigma=1.0, n_subspaces=8, alpha=1e-4)
+    assert rep.success_prob == 0.0
+    assert rep.alpha_min > 1e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(2.0, 50.0), st.integers(4, 16))
+def test_theorem1_monotone_region(ratio, ns):
+    """Higher alpha (within range) never decreases the bound."""
+    a_lo = theorem1_bound(ratio, 1.0, ns, 0.7).success_prob
+    a_hi = theorem1_bound(ratio, 1.0, ns, 0.95).success_prob
+    assert a_hi >= a_lo - 1e-9
+
+
+def test_theorem2_reaches_half():
+    p = theorem2_bound(n=100_000, k=50, n_subspaces=8, m=10.0, sigma=1.0, alpha=0.05)
+    assert p >= 0.5
+
+
+def test_theorem2_vacuous_when_radius_too_small():
+    # alpha -> 1 shrinks the collision radius below the k-th order statistic
+    p = theorem2_bound(n=1000, k=50, n_subspaces=8, m=10.0, sigma=1.0, alpha=0.999999)
+    assert p == 0.0
+
+
+def test_subspace_statistics_and_suggestion():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(2000, 64)).astype(np.float32)
+    q = rng.normal(size=64).astype(np.float32)
+    m, s = subspace_statistics(x, q, 8)
+    assert m > 0 and s > 0
+    sugg = suggest_parameters(n=100_000, d=64, k=50, m=m, sigma=s)
+    assert set(sugg) >= {"n_subspaces", "alpha", "beta", "prob"}
