@@ -30,16 +30,27 @@ def run() -> list[Row]:
 
     cfg = SuCoConfig(n_subspaces=8, sqrt_k=32, kmeans_iters=5)
     idx = build_index(x, cfg)
+    # Production path: the tiled streaming engine (mode="auto" also picks it
+    # at this n).  The dense (m, n) score-matrix path stays as the reference.
     us_suco = timeit(
-        lambda: suco_query(x, idx, q, k=10, alpha=alpha, beta=beta)
+        lambda: suco_query(x, idx, q, k=10, alpha=alpha, beta=beta, mode="streaming")
         .ids.block_until_ready(), repeats=2,
     )
-    res_suco = suco_query(x, idx, q, k=10, alpha=alpha, beta=beta)
+    res_suco = suco_query(x, idx, q, k=10, alpha=alpha, beta=beta, mode="streaming")
     r_suco = recall(np.asarray(res_suco.ids), ds.gt_ids)
+
+    us_dense = timeit(
+        lambda: suco_query(x, idx, q, k=10, alpha=alpha, beta=beta, mode="dense")
+        .ids.block_until_ready(), repeats=2,
+    )
+    res_dense = suco_query(x, idx, q, k=10, alpha=alpha, beta=beta, mode="dense")
+    r_dense = recall(np.asarray(res_dense.ids), ds.gt_ids)
+    assert r_suco >= r_dense, f"streaming recall regressed: {r_suco} < {r_dense}"
 
     return [
         ("table4/sc_linear", us_lin, f"recall={r_lin:.4f}"),
         ("table4/suco", us_suco, f"recall={r_suco:.4f}"),
+        ("table4/suco_dense", us_dense, f"recall={r_dense:.4f}"),
         ("table4/speedup", 0.0, f"{us_lin/us_suco:.1f}x"),
     ]
 

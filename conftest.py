@@ -1,0 +1,20 @@
+"""Repo-root pytest guard: make `python -m pytest` work in a bare,
+network-less environment.
+
+* Puts ``src/`` on ``sys.path`` so ``import repro`` works even when the
+  caller forgot ``PYTHONPATH=src``.
+* Puts ``tests/`` on ``sys.path`` so the vendored
+  ``tests/_hypothesis_fallback.py`` shim is importable from test modules
+  regardless of pytest's rootdir/import mode.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent
+for _p in (_ROOT / "src", _ROOT / "tests"):
+    p = str(_p)
+    if p not in sys.path:
+        sys.path.insert(0, p)

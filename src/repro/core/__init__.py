@@ -14,12 +14,22 @@ from repro.core.subspace import (
     sampled_spec,
     collision_count,
 )
-from repro.core.sc_linear import QueryResult, sc_linear_query, sc_scores_from_subspaces, rerank
+from repro.core.sc_linear import (
+    QueryResult,
+    merge_topk_pool,
+    rerank,
+    rerank_candidates,
+    sc_linear_query,
+    sc_scores_from_subspaces,
+)
 from repro.core.suco import (
+    STREAMING_MIN_N,
     SuCoConfig,
     SuCoIndex,
     build_index,
+    suco_cell_ranks,
     suco_query,
+    suco_query_streaming,
     suco_scores,
     activate_cells_sorted,
     dynamic_activation_lax,
@@ -35,10 +45,15 @@ __all__ = [
     "sc_linear_query",
     "sc_scores_from_subspaces",
     "rerank",
+    "rerank_candidates",
+    "merge_topk_pool",
+    "STREAMING_MIN_N",
     "SuCoConfig",
     "SuCoIndex",
     "build_index",
+    "suco_cell_ranks",
     "suco_query",
+    "suco_query_streaming",
     "suco_scores",
     "activate_cells_sorted",
     "dynamic_activation_lax",

@@ -20,7 +20,14 @@ from repro.core import subspace
 from repro.core.collision import kth_smallest
 from repro.core.distances import Metric, pairwise_dist
 
-__all__ = ["QueryResult", "sc_scores_from_subspaces", "sc_linear_query", "rerank"]
+__all__ = [
+    "QueryResult",
+    "sc_scores_from_subspaces",
+    "sc_linear_query",
+    "rerank",
+    "rerank_candidates",
+    "merge_topk_pool",
+]
 
 
 class QueryResult(NamedTuple):
@@ -54,6 +61,33 @@ def sc_scores_from_subspaces(
     return scores
 
 
+def rerank_candidates(
+    x: jax.Array,
+    q: jax.Array,
+    cand: jax.Array,
+    cand_scores: jax.Array,
+    k: int,
+    metric: Metric = "l2",
+) -> QueryResult:
+    """Exact re-rank of an explicit candidate pool (Alg. 1 lines 11-15).
+
+    ``x: (n, d)``, ``q: (m, d)``, ``cand/cand_scores: (m, p)`` — per-query
+    candidate row ids and their SC-scores.  Deterministic: distance ties
+    resolve to the earlier pool position (``top_k`` tie-break), so two
+    callers that present the same pool in the same order get bit-identical
+    results.
+    """
+
+    def one(qi: jax.Array, cand_i: jax.Array, cs_i: jax.Array) -> QueryResult:
+        xc = jnp.take(x, cand_i, axis=0)  # (p, d)
+        d = pairwise_dist(qi[None], xc, metric)[0]  # (p,)
+        neg, pos = jax.lax.top_k(-d, k)
+        ids = jnp.take(cand_i, pos)
+        return QueryResult(ids.astype(jnp.int32), -neg, jnp.take(cs_i, pos))
+
+    return jax.vmap(one)(q, cand, cand_scores)
+
+
 def rerank(
     x: jax.Array,
     q: jax.Array,
@@ -68,19 +102,32 @@ def rerank(
     """
     n = x.shape[0]
     m = max(k, min(n_candidates, n))
-    # top_k on int scores breaks ties by lower index — deterministic.
-    _, cand = jax.lax.top_k(scores, m)  # (mq, m)
+    # top_k on int scores breaks ties by lower index — deterministic, and
+    # identical to the streaming pool's (score desc, id asc) ordering.
+    vals, cand = jax.lax.top_k(scores, m)  # (mq, m)
+    return rerank_candidates(x, q, cand, vals, k, metric)
 
-    def one(qi: jax.Array, cand_i: jax.Array, scores_i: jax.Array) -> QueryResult:
-        xc = jnp.take(x, cand_i, axis=0)  # (m, d)
-        d = pairwise_dist(qi[None], xc, metric)[0]  # (m,)
-        neg, pos = jax.lax.top_k(-d, k)
-        ids = jnp.take(cand_i, pos)
-        return QueryResult(
-            ids.astype(jnp.int32), -neg, jnp.take(scores_i, ids, axis=0)
-        )
 
-    return jax.vmap(one)(q, cand, scores)
+def merge_topk_pool(
+    pool_scores: jax.Array,
+    pool_ids: jax.Array,
+    blk_scores: jax.Array,
+    blk_ids: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Merge a score block into a carried top-pool, keeping the pool size.
+
+    ``pool_*: (m, p)``, ``blk_*: (m, b)`` -> ``(m, p)``.  Ordering is
+    lexicographic (score desc, id asc) — exactly ``lax.top_k``'s tie-break
+    on a dense score row — so a scan of ``merge_topk_pool`` over blocks
+    reproduces the dense ``top_k(scores, p)`` selection bit-for-bit.
+    Sentinel entries (score -1, id INT32_MAX) sort after every real entry
+    (real scores are >= 0) and are expelled as real candidates arrive.
+    """
+    p = pool_scores.shape[-1]
+    s = jnp.concatenate([pool_scores, blk_scores], axis=-1)
+    i = jnp.concatenate([pool_ids, blk_ids], axis=-1)
+    neg_sorted, ids_sorted = jax.lax.sort((-s, i), num_keys=2)
+    return -neg_sorted[..., :p], ids_sorted[..., :p]
 
 
 @functools.partial(

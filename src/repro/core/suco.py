@@ -15,6 +15,26 @@ sort-prefix equivalent :func:`activate_cells_sorted` (K <= 4096 cells: one
 sort + one cumsum), property-tested against the sequential forms in
 :mod:`repro.core.da_numpy`.  A faithful ``lax.while_loop`` port of Algorithm
 3 is kept in :func:`dynamic_activation_lax`.
+
+Query-memory model (two execution paths, identical results):
+
+* **dense** (:func:`suco_query` with ``mode="dense"``) — materialises the
+  full ``(m, n)`` int32 SC-score matrix and runs one ``top_k`` over all n
+  points.  Peak query memory O(m*n); fastest for small n (one fused XLA
+  loop, no pool bookkeeping).  The reference semantics.
+* **streaming** (:func:`suco_query_streaming`) — a blocked ``lax.scan``
+  over data chunks of ``block_n`` points: each chunk's collision counts
+  come from the chunked SC-score kernel path
+  (:func:`repro.kernels.sc_score.ops.sc_scores_cells`), and a running
+  per-query top-``n_candidates`` pool is maintained by
+  :func:`repro.core.sc_linear.merge_topk_pool` under the (score desc,
+  id asc) order — exactly ``top_k``'s tie-break on the dense matrix, so
+  the surviving pool, and therefore the reranked result, is bit-identical
+  to the dense path.  Peak query memory O(m*(block_n + n_candidates)).
+
+``suco_query(mode="auto")`` (the default) selects dense below
+``STREAMING_MIN_N`` points and streaming at or above it — million-point
+datasets never allocate an (m, n) intermediate.
 """
 
 from __future__ import annotations
@@ -30,7 +50,8 @@ import jax.numpy as jnp
 from repro.core import subspace as sub
 from repro.core.distances import Metric, pairwise_dist
 from repro.core.kmeans import kmeans_batched
-from repro.core.sc_linear import QueryResult, rerank
+from repro.core.sc_linear import QueryResult, merge_topk_pool, rerank, rerank_candidates
+from repro.kernels.sc_score.ops import sc_scores_cells
 
 __all__ = [
     "SuCoConfig",
@@ -39,8 +60,15 @@ __all__ = [
     "activate_cells_sorted",
     "dynamic_activation_lax",
     "suco_scores",
+    "suco_cell_ranks",
     "suco_query",
+    "suco_query_streaming",
+    "STREAMING_MIN_N",
 ]
+
+# mode="auto" switches from the dense (m, n) score matrix to the tiled
+# streaming engine at this dataset size (see module docstring).
+STREAMING_MIN_N = 32_768
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +144,27 @@ def build_index(x: jax.Array, config: SuCoConfig, *, spec: sub.SubspaceSpec | No
 # --------------------------------------------------------------------------
 
 
+def _cell_ranks_and_cut(
+    dists1: jax.Array, dists2: jax.Array, cell_counts: jax.Array, target: int
+) -> tuple[jax.Array, jax.Array]:
+    """Dynamic Activation as (per-cell rank, cutoff rank).
+
+    ``rank[c]`` is cell c's position in ascending ``dists1+dists2`` order
+    (ties by cell id — stable argsort) and ``cut`` the last rank inside
+    the minimal prefix whose cumulative count reaches ``target``; the
+    activation mask is ``rank <= cut``.  This split form feeds the chunked
+    score kernel, which gathers ranks by cell id and compares to the cut.
+    """
+    cell_dist = (dists1[:, None] + dists2[None, :]).reshape(-1)  # (K,)
+    order = jnp.argsort(cell_dist)  # stable -> ties by cell id
+    csum = jnp.cumsum(jnp.take(cell_counts, order))
+    # First prefix position reaching the target (or everything if impossible).
+    reached = csum >= target
+    cut = jnp.where(jnp.any(reached), jnp.argmax(reached), csum.shape[0] - 1)
+    rank = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    return rank.astype(jnp.int32), cut.astype(jnp.int32)
+
+
 def activate_cells_sorted(
     dists1: jax.Array, dists2: jax.Array, cell_counts: jax.Array, target: int
 ) -> jax.Array:
@@ -126,14 +175,7 @@ def activate_cells_sorted(
     minimal ascending-distance prefix whose cumulative count reaches
     ``target`` — exactly the Multi-sequence / Dynamic-Activation set.
     """
-    k1 = dists1.shape[0]
-    cell_dist = (dists1[:, None] + dists2[None, :]).reshape(-1)  # (K,)
-    order = jnp.argsort(cell_dist)  # stable -> ties by cell id
-    csum = jnp.cumsum(jnp.take(cell_counts, order))
-    # First prefix position reaching the target (or everything if impossible).
-    reached = csum >= target
-    cut = jnp.where(jnp.any(reached), jnp.argmax(reached), csum.shape[0] - 1)
-    rank = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    rank, cut = _cell_ranks_and_cut(dists1, dists2, cell_counts, target)
     return rank <= cut
 
 
@@ -241,7 +283,97 @@ def suco_scores(
     return scores
 
 
-@functools.partial(jax.jit, static_argnames=("k", "alpha", "beta", "metric"))
+def suco_cell_ranks(
+    index: SuCoIndex, q: jax.Array, count: int, metric: Metric = "l2"
+) -> tuple[jax.Array, jax.Array]:
+    """Per-(subspace, query) Dynamic-Activation state for chunked scoring.
+
+    ``q: (m, d) -> (ranks (Ns, m, K) int32, cuts (Ns, m) int32)`` — the
+    split form of :func:`activate_cells_sorted` (mask == rank <= cut).
+    O(Ns * m * K) memory, independent of n.
+    """
+    d1, d2 = _centroid_dists(index, q, metric)  # (Ns, m, sqrtK)
+
+    def per_sub(d1_i, d2_i, counts_i):
+        return jax.vmap(
+            lambda a, b: _cell_ranks_and_cut(a, b, counts_i, count)
+        )(d1_i, d2_i)
+
+    return jax.vmap(per_sub)(d1, d2, index.cell_counts)
+
+
+def _pool_size(n: int, k: int, beta: float) -> int:
+    """Candidate-pool size — must mirror :func:`repro.core.sc_linear.rerank`."""
+    return max(k, min(max(k, int(beta * n)), n))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "alpha", "beta", "metric", "block_n", "score_impl")
+)
+def suco_query_streaming(
+    x: jax.Array,
+    index: SuCoIndex,
+    q: jax.Array,
+    *,
+    k: int,
+    alpha: float,
+    beta: float,
+    metric: Metric = "l2",
+    block_n: int = 4096,
+    score_impl: str = "auto",
+) -> QueryResult:
+    """Algorithm 4 as a tiled streaming engine — bit-identical to the dense
+    path, peak query memory O(m*(block_n + n_candidates)).
+
+    A ``lax.scan`` over ceil(n / block_n) data chunks: per chunk the
+    collision counts come from the chunked SC-score kernel path
+    (:func:`sc_scores_cells`), and a carried per-query top pool is merged
+    under the (score desc, id asc) order.  After the scan the pool equals
+    the dense ``top_k(scores, n_candidates)`` selection exactly (sentinels
+    at score -1 / id INT32_MAX lose to every real point), so the exact
+    re-rank returns the same ids/distances as :func:`suco_query`.
+    """
+    if block_n < 1:
+        raise ValueError(f"block_n must be >= 1, got {block_n}")
+    n = x.shape[0]
+    if k > n:
+        # the dense path raises from top_k here; without this the pool would
+        # keep (score -1, id INT32_MAX) sentinels and leak them into ids.
+        raise ValueError(f"k={k} must be <= n={n}")
+    m = q.shape[0]
+    c = sub.collision_count(n, alpha)
+    ranks, cuts = suco_cell_ranks(index, q, c, metric)  # (Ns,m,K), (Ns,m)
+    pool = _pool_size(n, k, beta)
+
+    bn = min(block_n, n)
+    n_blocks = -(-n // bn)
+    int_max = jnp.iinfo(jnp.int32).max
+    cells = jnp.pad(index.cell_ids, ((0, 0), (0, n_blocks * bn - n)))
+    cells = cells.reshape(cells.shape[0], n_blocks, bn).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        pool_s, pool_i = carry
+        blk, cells_b = inp  # (), (Ns, bn)
+        s = sc_scores_cells(ranks, cuts, cells_b, impl=score_impl)  # (m, bn)
+        gids = blk * bn + jnp.arange(bn, dtype=jnp.int32)
+        valid = gids < n  # mask chunk padding past the end of the data
+        s = jnp.where(valid[None, :], s, -1)
+        ids_b = jnp.broadcast_to(jnp.where(valid, gids, int_max), (m, bn))
+        return merge_topk_pool(pool_s, pool_i, s, ids_b), None
+
+    init = (
+        jnp.full((m, pool), -1, jnp.int32),
+        jnp.full((m, pool), int_max, jnp.int32),
+    )
+    (pool_s, pool_i), _ = jax.lax.scan(
+        step, init, (jnp.arange(n_blocks, dtype=jnp.int32), cells)
+    )
+    return rerank_candidates(x, q, pool_i, pool_s, k, metric)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "alpha", "beta", "metric", "mode", "block_n")
+)
 def suco_query(
     x: jax.Array,
     index: SuCoIndex,
@@ -251,9 +383,22 @@ def suco_query(
     alpha: float,
     beta: float,
     metric: Metric = "l2",
+    mode: str = "auto",
+    block_n: int = 4096,
 ) -> QueryResult:
-    """Algorithm 4: k-ANN for a batch ``q: (m, d)`` using the SuCo index."""
+    """Algorithm 4: k-ANN for a batch ``q: (m, d)`` using the SuCo index.
+
+    ``mode``: "dense" | "streaming" | "auto" (streaming iff
+    n >= ``STREAMING_MIN_N``); both paths return bit-identical results —
+    see the module docstring for the memory model.
+    """
     n = x.shape[0]
+    if mode not in ("auto", "dense", "streaming"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if mode == "streaming" or (mode == "auto" and n >= STREAMING_MIN_N):
+        return suco_query_streaming(
+            x, index, q, k=k, alpha=alpha, beta=beta, metric=metric, block_n=block_n
+        )
     c = sub.collision_count(n, alpha)
     scores = suco_scores(index, q, c, metric)  # (m, n)
     n_candidates = max(k, int(beta * n))

@@ -1,0 +1,48 @@
+"""Version-compat shims for jax SPMD APIs used by the distributed engine.
+
+The pinned jax 0.4.37 predates two APIs the engine targets:
+
+* ``jax.shard_map`` (top-level, with ``check_vma``) — 0.4.37 only has
+  ``jax.experimental.shard_map.shard_map`` with the older ``check_rep``
+  replication check.
+* ``jax.lax.pcast`` (varying-manual-axes casts) — 0.4.37's shard_map has
+  no VMA type system, so the cast is a no-op there.
+
+Both shims dispatch on feature presence, not version strings, so they keep
+working as the environment's jax moves forward.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["shard_map_compat", "pcast_varying"]
+
+
+def shard_map_compat(
+    f: Callable, *, mesh, in_specs, out_specs, check: bool = True
+) -> Callable:
+    """``jax.shard_map`` where available, else the experimental spelling.
+
+    ``check=False`` disables the replication/VMA output check (the engine
+    needs this for gather+top_k outputs the analyses cannot prove
+    replicated).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check
+    )
+
+
+def pcast_varying(x: Any, axis_names: tuple[str, ...]) -> Any:
+    """Mark ``x`` as device-varying over ``axis_names`` (no-op pre-VMA)."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axis_names, to="varying")
+    return x

@@ -9,7 +9,7 @@ from repro.kernels.pairwise_l2.ops import pairwise_sqdist
 from repro.kernels.kmeans_assign.ops import kmeans_assign
 from repro.kernels.gather_rerank.ops import gather_rerank
 from repro.kernels.linear_attn.ops import linear_attention
-from repro.kernels.sc_score.ops import sc_scores_fused
+from repro.kernels.sc_score.ops import sc_scores_cells, sc_scores_fused
 
 __all__ = ["pairwise_sqdist", "kmeans_assign", "gather_rerank",
-           "linear_attention", "sc_scores_fused"]
+           "linear_attention", "sc_scores_fused", "sc_scores_cells"]

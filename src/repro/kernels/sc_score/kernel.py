@@ -42,6 +42,60 @@ def _kernel(q_ref, x_ref, tau_ref, out_ref, *, n_sub: int):
     out_ref[...] += (d2 <= tau.T).astype(jnp.int32)
 
 
+def _cells_kernel(rank_ref, cut_ref, cell_ref, out_ref):
+    i = pl.program_id(2)  # subspace index (innermost)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    r = rank_ref[0]  # (bm, K) per-query cell ranks
+    cut = cut_ref[...].astype(jnp.int32)  # (1, bm) activation cutoffs
+    cells = cell_ref[0]  # (bn,) chunk cell ids
+    g = jnp.take(r, cells, axis=1)  # (bm, bn) rank of each point's cell
+    out_ref[...] += (g <= cut.T).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def sc_score_cells_kernel(
+    ranks: jax.Array,  # (Ns, m, K) per-(subspace, query) cell ranks
+    cuts: jax.Array,  # (Ns, m) activation cutoff ranks
+    cells: jax.Array,  # (Ns, bc) cell ids of one data chunk
+    *,
+    bm: int = 8,
+    bn: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Chunked IMI entry point: fused gather-compare-accumulate.
+
+    The SuCo collision test (point j collides with query q in subspace i
+    iff its IMI cell sits inside the activated ascending-distance prefix)
+    is ``rank[i, q, cells[i, j]] <= cut[i, q]`` — the same
+    threshold-compare + int32-accumulate structure as :func:`sc_score_kernel`
+    with the MXU distance block replaced by a VMEM rank gather.  Grid =
+    (m/bm, bc/bn, Ns), subspace innermost so the output tile revisits; the
+    (m, n) score matrix never exists — callers stream chunks of ``bc``
+    points and merge into a running top pool.
+
+    Caller pre-pads m % bm == bc % bn == 0.  Returns (m, bc) int32.
+    """
+    n_sub, m, k_cells = ranks.shape
+    bc = cells.shape[1]
+    grid = (m // bm, bc // bn, n_sub)
+    return pl.pallas_call(
+        _cells_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, k_cells), lambda i, j, k: (k, i, 0)),
+            pl.BlockSpec((1, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, bc), jnp.int32),
+        interpret=interpret,
+    )(ranks, cuts, cells)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def sc_score_kernel(
     qs: jax.Array,  # (Ns, m, s) per-subspace queries (zero-padded s)

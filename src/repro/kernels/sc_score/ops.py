@@ -7,8 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sc_score.kernel import sc_score_kernel
-from repro.kernels.sc_score.ref import sc_score_ref
+from repro.kernels.sc_score.kernel import sc_score_cells_kernel, sc_score_kernel
+from repro.kernels.sc_score.ref import sc_score_cells_ref, sc_score_ref
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -42,4 +42,42 @@ def sc_scores_fused(
     return out[:m, :n]
 
 
-__all__ = ["sc_scores_fused", "sc_score_ref"]
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "impl", "interpret"))
+def sc_scores_cells(
+    ranks: jax.Array,  # (Ns, m, K) per-(subspace, query) cell ranks
+    cuts: jax.Array,  # (Ns, m) activation cutoff ranks
+    cells: jax.Array,  # (Ns, bc) chunk cell ids
+    *,
+    bm: int = 8,
+    bn: int = 512,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """Chunked SuCo collision scores ``-> (m, bc)`` int32.
+
+    ``impl``: "jnp" | "pallas" | "auto" (pallas iff running on TPU; the
+    jnp oracle is the production CPU path — interpret-mode Pallas is for
+    tests only).  Padding contract for the kernel: padded queries get cut
+    -1 (nothing activates), padded K entries get rank INT32_MAX (never
+    inside a prefix), padded chunk columns gather cell 0 and are sliced
+    off.
+    """
+    if impl == "jnp" or (impl == "auto" and jax.default_backend() != "tpu"):
+        return sc_score_cells_ref(ranks, cuts, cells)
+    n_sub, m, k_cells = ranks.shape
+    bc = cells.shape[1]
+    bm_ = min(bm, _round_up(m, 8))
+    bn_ = min(bn, _round_up(bc, 128))
+    mp, bcp = _round_up(m, bm_), _round_up(bc, bn_)
+    kp = _round_up(k_cells, 128)
+    rp = jnp.pad(
+        ranks, ((0, 0), (0, mp - m), (0, kp - k_cells)),
+        constant_values=jnp.iinfo(jnp.int32).max,
+    )
+    cutp = jnp.pad(cuts, ((0, 0), (0, mp - m)), constant_values=-1)
+    cellp = jnp.pad(cells, ((0, 0), (0, bcp - bc)))
+    out = sc_score_cells_kernel(rp, cutp, cellp, bm=bm_, bn=bn_, interpret=interpret)
+    return out[:m, :bc]
+
+
+__all__ = ["sc_scores_fused", "sc_scores_cells", "sc_score_ref", "sc_score_cells_ref"]

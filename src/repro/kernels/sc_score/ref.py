@@ -6,6 +6,19 @@ import jax
 import jax.numpy as jnp
 
 
+def sc_score_cells_ref(
+    ranks: jax.Array, cuts: jax.Array, cells: jax.Array
+) -> jax.Array:
+    """``ranks: (Ns,m,K), cuts: (Ns,m), cells: (Ns,bc) -> (m,bc)`` int32.
+
+    Oracle for the chunked IMI kernel: point j collides with query q in
+    subspace i iff the rank of its cell is within the activation cutoff.
+    """
+    g = jax.vmap(lambda r, c: jnp.take(r, c, axis=-1))(ranks, cells)  # (Ns,m,bc)
+    mask = g <= cuts[:, :, None]
+    return jnp.sum(mask.astype(jnp.int32), axis=0)
+
+
 def sc_score_ref(qs: jax.Array, xs: jax.Array, tau: jax.Array) -> jax.Array:
     """``qs: (Ns,m,s), xs: (Ns,n,s), tau: (Ns,m) -> (m,n)`` int32 scores."""
     qf, xf = qs.astype(jnp.float32), xs.astype(jnp.float32)

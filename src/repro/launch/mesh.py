@@ -7,6 +7,11 @@ Defined as functions (never module-level constants) so importing this module
 never touches jax device state; the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
 import to fabricate the devices.
+
+Version compat: ``jax.sharding.AxisType`` (explicit-sharding axis typing)
+only exists in newer jax releases; the pinned 0.4.37 predates it.
+:func:`compat_make_mesh` passes ``axis_types`` only when available, so the
+same call sites work on both sides of the API change.
 """
 
 from __future__ import annotations
@@ -14,6 +19,7 @@ from __future__ import annotations
 import jax
 
 __all__ = [
+    "compat_make_mesh",
     "make_production_mesh",
     "make_debug_mesh",
     "fsdp_axes",
@@ -21,20 +27,25 @@ __all__ = [
 ]
 
 
+def compat_make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with ``axis_types=Auto`` where the API supports it."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kwargs = (
+        {"axis_types": (axis_type.Auto,) * len(axes)} if axis_type is not None else {}
+    )
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat_make_mesh(shape, axes)
 
 
 def make_debug_mesh(shape=(2, 2, 2)):
     """Small fake-device mesh for CPU tests."""
     axes = ("pod", "data", "model")[-len(shape):]
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
-    )
+    return compat_make_mesh(shape, axes)
 
 
 def fsdp_axes(mesh) -> tuple[str, ...]:

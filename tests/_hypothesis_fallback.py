@@ -1,0 +1,127 @@
+"""Minimal deterministic stand-in for `hypothesis`.
+
+This environment is network-less and `hypothesis` is not always
+installable, but four test modules property-test the SC framework with
+it.  This shim provides the tiny subset they use — ``given``,
+``settings`` and ``strategies`` (``integers``, ``floats``,
+``composite``) — running each property over a fixed number of *seeded,
+deterministic* examples instead of hypothesis' adaptive search.
+
+No shrinking, no database, no adaptive generation: every run draws the
+same examples, so failures are reproducible by example index.  Test
+modules import it via
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+
+so they behave identically with or without the real library installed.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Any, Callable
+
+__all__ = ["given", "settings", "strategies", "SearchStrategy"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED_BASE = 0x5C0  # "SC" — any fixed constant works; determinism is the point
+
+
+class SearchStrategy:
+    """A strategy is just a deterministic draw function over a PRNG."""
+
+    def __init__(self, draw_fn: Callable[[random.Random], Any]):
+        self._draw = draw_fn
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (used subset only)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        # Bias the first draws toward the boundaries: hypothesis finds most
+        # bugs at the edges, and the fallback should keep that property.
+        def draw(rng: random.Random) -> int:
+            r = rng.random()
+            if r < 0.08:
+                return min_value
+            if r < 0.16:
+                return max_value
+            return rng.randint(min_value, max_value)
+
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+        def draw(rng: random.Random) -> float:
+            r = rng.random()
+            if r < 0.08:
+                return min_value
+            if r < 0.16:
+                return max_value
+            return rng.uniform(min_value, max_value)
+
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def composite(fn: Callable) -> Callable[..., SearchStrategy]:
+        def make(*args, **kwargs) -> SearchStrategy:
+            def drawer(rng: random.Random):
+                return fn(lambda strat: strat.example(rng), *args, **kwargs)
+
+            return SearchStrategy(drawer)
+
+        return make
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records ``max_examples`` on the (already ``given``-wrapped) test."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    """Run the property over seeded deterministic examples.
+
+    The wrapper deliberately takes no parameters (and does not set
+    ``__wrapped__``) so pytest's fixture resolution sees a zero-arg test
+    instead of trying to inject the strategy names as fixtures.
+    """
+
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(_SEED_BASE * 1_000_003 + i)
+                args = [s.example(rng) for s in arg_strategies]
+                kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:  # re-raise with the failing example
+                    raise AssertionError(
+                        f"falsifying example #{i}: args={args!r} kwargs={kwargs!r}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

@@ -20,9 +20,9 @@ _SCRIPT = textwrap.dedent(
     )
     from repro.core import SuCoConfig, build_index, suco_query
     from repro.data import make_dataset, recall
+    from repro.launch.mesh import compat_make_mesh
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = compat_make_mesh((2, 2, 2), ("pod", "data", "model"))
     ds = make_dataset("gaussian_mixture", 4096, 64, m=16, k=10)
     cfg = DistSuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=6, alpha=0.05,
                          beta=0.02, k=10, q_chunk=16, point_axes=("pod", "data"))
@@ -46,6 +46,13 @@ _SCRIPT = textwrap.dedent(
     ])
     assert overlap >= 0.95, f"distributed/local disagree: {overlap}"
 
+    # streaming (blocked) vs dense per-shard scoring: bit-identical results
+    import dataclasses
+    ids_d, dists_d = query_sharded(mesh, dataclasses.replace(cfg, block_n=0), x, idx, q)
+    ids_b, dists_b = query_sharded(mesh, dataclasses.replace(cfg, block_n=300), x, idx, q)
+    assert np.array_equal(np.asarray(ids_d), np.asarray(ids_b)), "engine streaming ids"
+    assert np.array_equal(np.asarray(dists_d), np.asarray(dists_b)), "engine streaming dists"
+
     # shard_index round-trip of a locally built index
     lcfg = SuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=6)
     li = build_index(jnp.asarray(ds.x), lcfg)
@@ -57,9 +64,7 @@ _SCRIPT = textwrap.dedent(
     # elastic re-scaling: move the index to a DIFFERENT mesh shape and
     # re-query — results must be identical (sharding-agnostic layout)
     from repro.distributed.elastic import reshard_index
-    import dataclasses
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = compat_make_mesh((4, 2), ("data", "model"))
     cfg2 = dataclasses.replace(cfg, point_axes=("data",))
     from repro.distributed.engine import index_shardings as ish
     idx2 = reshard_index(mesh2, cfg2, idx)

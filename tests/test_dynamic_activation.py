@@ -8,7 +8,10 @@ activate_cells_sorted (TPU sort-prefix) == dynamic_activation_lax
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # network-less env: vendored deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import activate_cells_sorted, dynamic_activation_lax
 from repro.core.da_numpy import dynamic_activation, multi_sequence

@@ -1,0 +1,263 @@
+"""Tiled streaming SuCo engine: exact parity with the dense reference path,
+tie-break determinism, and the O(m*(block_n + n_candidates)) memory claim."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    STREAMING_MIN_N,
+    SuCoConfig,
+    build_index,
+    merge_topk_pool,
+    rerank,
+    rerank_candidates,
+    suco_query,
+    suco_query_streaming,
+)
+from repro.data import make_dataset
+
+
+@pytest.fixture(scope="module")
+def small():
+    ds = make_dataset("gaussian_mixture", 4000, 48, m=16, k=10, seed=0)
+    x = jnp.asarray(ds.x)
+    idx = build_index(x, SuCoConfig(n_subspaces=8, sqrt_k=24, kmeans_iters=8, seed=0))
+    return ds, x, idx
+
+
+def _assert_bitwise_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+# ------------------------- dense/streaming parity ---------------------------
+
+
+@pytest.mark.parametrize("block_n", [512, 4096, 333, 1000])
+def test_streaming_matches_dense_bitwise(small, block_n):
+    """block_n=333/1000 do not divide n=4000 — the padded tail must not leak."""
+    ds, x, idx = small
+    q = jnp.asarray(ds.queries)
+    dense = suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02, mode="dense")
+    stream = suco_query_streaming(
+        x, idx, q, k=10, alpha=0.05, beta=0.02, block_n=block_n
+    )
+    _assert_bitwise_equal(dense, stream)
+
+
+def test_streaming_pool_larger_than_n(small):
+    """n < n_candidates (beta > 1): the pool clamps to n, parity still exact."""
+    ds, x, idx = small
+    q = jnp.asarray(ds.queries)
+    dense = suco_query(x, idx, q, k=10, alpha=0.05, beta=1.5, mode="dense")
+    stream = suco_query_streaming(x, idx, q, k=10, alpha=0.05, beta=1.5, block_n=777)
+    _assert_bitwise_equal(dense, stream)
+
+
+def test_streaming_l1_metric_parity(small):
+    ds, x, idx = small
+    q = jnp.asarray(ds.queries)
+    dense = suco_query(x, idx, q, k=10, alpha=0.05, beta=0.05, metric="l1", mode="dense")
+    stream = suco_query_streaming(
+        x, idx, q, k=10, alpha=0.05, beta=0.05, metric="l1", block_n=700
+    )
+    _assert_bitwise_equal(dense, stream)
+
+
+def test_streaming_rejects_bad_block_n(small):
+    ds, x, idx = small
+    q = jnp.asarray(ds.queries)
+    for bad in (0, -5):
+        with pytest.raises(ValueError, match="block_n"):
+            suco_query_streaming(x, idx, q, k=10, alpha=0.05, beta=0.02, block_n=bad)
+
+
+def test_streaming_rejects_k_larger_than_n(small):
+    """The dense path raises (top_k) for k > n; the streaming path must too,
+    not leak (score -1, id INT32_MAX) pool sentinels into the results."""
+    ds, x, idx = small
+    q = jnp.asarray(ds.queries)
+    with pytest.raises(ValueError, match="k="):
+        suco_query_streaming(
+            x, idx, q, k=x.shape[0] + 1, alpha=0.05, beta=0.02, block_n=512
+        )
+
+
+def test_streaming_single_block_and_block_larger_than_n(small):
+    ds, x, idx = small
+    q = jnp.asarray(ds.queries)
+    dense = suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02, mode="dense")
+    stream = suco_query_streaming(
+        x, idx, q, k=10, alpha=0.05, beta=0.02, block_n=1_000_000
+    )
+    _assert_bitwise_equal(dense, stream)
+
+
+def test_mode_dispatch(small):
+    ds, x, idx = small
+    q = jnp.asarray(ds.queries)
+    # below the cutover, auto == dense
+    auto = suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02)
+    dense = suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02, mode="dense")
+    _assert_bitwise_equal(auto, dense)
+    assert ds.x.shape[0] < STREAMING_MIN_N
+    with pytest.raises(ValueError, match="unknown mode"):
+        suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02, mode="bogus")
+
+
+# ----------------------------- pool merge -----------------------------------
+
+
+def test_merge_topk_pool_equals_dense_topk():
+    """Scanning merge_topk_pool over blocks == one top_k over the full row,
+    including the (score desc, id asc) tie-break."""
+    rng = np.random.default_rng(0)
+    m, n, p, bn = 7, 1000, 64, 96
+    scores = jnp.asarray(rng.integers(0, 6, size=(m, n)), jnp.int32)  # many ties
+    want_s, want_i = jax.lax.top_k(scores, p)
+
+    int_max = np.iinfo(np.int32).max
+    pool_s = jnp.full((m, p), -1, jnp.int32)
+    pool_i = jnp.full((m, p), int_max, jnp.int32)
+    for start in range(0, n, bn):
+        blk = scores[:, start:start + bn]
+        ids = jnp.broadcast_to(
+            jnp.arange(start, start + blk.shape[1], dtype=jnp.int32), blk.shape
+        )
+        pool_s, pool_i = merge_topk_pool(pool_s, pool_i, blk, ids)
+    np.testing.assert_array_equal(np.asarray(pool_s), np.asarray(want_s))
+    np.testing.assert_array_equal(np.asarray(pool_i), np.asarray(want_i))
+
+
+# -------------------------- rerank determinism ------------------------------
+
+
+def test_rerank_tie_breaking_deterministic():
+    """Duplicate points produce exact distance ties; rerank must resolve them
+    to the earlier pool position (higher score, then lower id), identically
+    on every invocation."""
+    rng = np.random.default_rng(3)
+    n, d, k = 24, 8, 6
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    # rows 4, 9, 17 identical; rows 2 and 11 identical
+    x[9] = x[4]
+    x[17] = x[4]
+    x[11] = x[2]
+    q = rng.normal(size=(2, d)).astype(np.float32)
+    scores = jnp.asarray(rng.integers(0, 4, size=(2, n)), jnp.int32)
+
+    r1 = rerank(jnp.asarray(x), jnp.asarray(q), scores, k, n_candidates=16)
+    r2 = rerank(jnp.asarray(x), jnp.asarray(q), scores, k, n_candidates=16)
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_array_equal(np.asarray(r1.dists), np.asarray(r2.dists))
+
+    # numpy oracle: pool ordered by (score desc, id asc); final ids by
+    # (distance asc, pool position asc)
+    s_np = np.asarray(scores)
+    for qi in range(2):
+        pool = sorted(range(n), key=lambda j: (-s_np[qi, j], j))[:16]
+        dd = ((x[pool] - q[qi]) ** 2).sum(axis=1)
+        order = sorted(range(len(pool)), key=lambda t: (dd[t], t))[:k]
+        want = [pool[t] for t in order]
+        got = np.asarray(r1.ids[qi]).tolist()
+        assert got == want, f"query {qi}: {got} != {want}"
+
+
+def test_rerank_candidates_matches_rerank(small):
+    ds, x, idx = small
+    q = jnp.asarray(ds.queries)
+    rng = np.random.default_rng(1)
+    scores = jnp.asarray(rng.integers(0, 9, size=(q.shape[0], x.shape[0])), jnp.int32)
+    full = rerank(x, q, scores, 10, n_candidates=80)
+    vals, cand = jax.lax.top_k(scores, 80)
+    via_pool = rerank_candidates(x, q, cand, vals, 10)
+    _assert_bitwise_equal(full, via_pool)
+
+
+# ------------------------------ memory model --------------------------------
+
+
+def _max_intermediate_size(jaxpr) -> int:
+    """Largest intermediate array (in elements) anywhere in a jaxpr tree,
+    excluding top-level inputs/constants."""
+    seen = set()
+    best = 0
+
+    def walk(jx):
+        nonlocal best
+        if id(jx) in seen:
+            return
+        seen.add(id(jx))
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "shape"):
+                    best = max(best, int(np.prod(aval.shape, dtype=np.int64)))
+            for p in eqn.params.values():
+                for sub in (p if isinstance(p, (list, tuple)) else (p,)):
+                    inner = getattr(sub, "jaxpr", sub)
+                    if hasattr(inner, "eqns"):
+                        walk(inner)
+
+    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return best
+
+
+def test_streaming_never_materialises_m_by_n():
+    """The acceptance bound: every live intermediate in the streaming query
+    is O(m*(block_n + n_candidates)) (+ the O(Ns*n) index arrays and the
+    O(m*p*d) rerank gather) — in particular nothing of size m*n exists,
+    while the dense path provably allocates one."""
+    n, d, m, k, bn, beta = 20_000, 32, 32, 10, 2048, 0.02
+    ds = make_dataset("gaussian_mixture", n, d, m=m, k=k, seed=1)
+    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
+    cfg = SuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=2, seed=0)
+    idx = build_index(x, cfg)
+
+    stream_jaxpr = jax.make_jaxpr(
+        lambda xx, qq: suco_query_streaming(
+            xx, idx, qq, k=k, alpha=0.05, beta=beta, block_n=bn
+        )
+    )(x, q)
+    dense_jaxpr = jax.make_jaxpr(
+        lambda xx, qq: suco_query(xx, idx, qq, k=k, alpha=0.05, beta=beta, mode="dense")
+    )(x, q)
+
+    p = max(k, int(beta * n))
+    ns, cells = cfg.n_subspaces, cfg.n_cells
+    n_pad = -(-n // bn) * bn
+    allowed = max(
+        2 * m * (bn + p),  # score block + carried pool (+ concat inside merge)
+        ns * m * bn,  # per-chunk per-subspace collision gather
+        m * p * d,  # rerank candidate gather (dense path has it too)
+        ns * n_pad,  # the index's own cell-id array, reshaped into blocks
+        ns * m * cells,  # Dynamic-Activation ranks
+    )
+    got = _max_intermediate_size(stream_jaxpr)
+    assert got <= allowed, f"streaming intermediate {got} > allowed {allowed}"
+    assert got < m * n, f"streaming materialised an (m, n)-sized array: {got}"
+    assert _max_intermediate_size(dense_jaxpr) >= m * n  # the bound is real
+
+
+def test_streaming_parity_at_100k():
+    """Acceptance: bit-identical ids to the dense path on n=100k synthetic
+    data for at least two chunk sizes."""
+    n, d, m = 100_000, 16, 8
+    ds = make_dataset("gaussian_mixture", n, d, m=m, k=10, seed=2)
+    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
+    idx = build_index(x, SuCoConfig(n_subspaces=4, sqrt_k=16, kmeans_iters=2, seed=0))
+    dense = suco_query(x, idx, q, k=10, alpha=0.03, beta=0.005, mode="dense")
+    for bn in (8192, 30_000):
+        stream = suco_query_streaming(
+            x, idx, q, k=10, alpha=0.03, beta=0.005, block_n=bn
+        )
+        np.testing.assert_array_equal(np.asarray(dense.ids), np.asarray(stream.ids))
+        np.testing.assert_array_equal(
+            np.asarray(dense.dists), np.asarray(stream.dists)
+        )
+    # mode="auto" routes this n to the streaming engine
+    auto = suco_query(x, idx, q, k=10, alpha=0.03, beta=0.005)
+    np.testing.assert_array_equal(np.asarray(dense.ids), np.asarray(auto.ids))

@@ -5,7 +5,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # network-less env: vendored deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.theory import (
     subspace_statistics,
