@@ -1,14 +1,22 @@
 """Figure 14: data preprocessing x subspace collision — the paper's simple
 division vs PCA rotation vs LSH (random projection) preprocessing feeding
-the same SC pipeline."""
+the same SC pipeline.
+
+Since PR 2 the dominant preprocessing cost is index construction itself,
+so this figure also times ``build_index`` under each build mode (dense /
+chunked / minibatch) on the same dataset — the paper's "indexing is 1-2
+orders of magnitude faster" claim lives or dies here."""
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, dataset, timeit
-from repro.core import contiguous_spec, sc_linear_query
+from repro.core import SuCoConfig, build_index, contiguous_spec, sc_linear_query, suco_query
 from repro.data import recall
 
 
@@ -46,6 +54,20 @@ def run() -> list[Row]:
         )
         res = sc_linear_query(x, q, spec=spec, k=10, alpha=0.05, beta=0.01)
         rows.append((f"fig14/sc-{name}", us,
+                     f"recall={recall(np.asarray(res.ids), ds.gt_ids):.4f}"))
+
+    # index construction under each build memory model (division variant)
+    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
+    base = SuCoConfig(n_subspaces=8, sqrt_k=24, kmeans_iters=8, block_n=2048)
+    for mode in ("dense", "chunked", "minibatch"):
+        cfg = dataclasses.replace(base, build_mode=mode)
+        idx = build_index(x, cfg)  # warm-up compile; reused for the query below
+        jax.block_until_ready(idx.cell_ids)
+        us = timeit(
+            lambda: jax.block_until_ready(build_index(x, cfg).cell_ids), repeats=1
+        )
+        res = suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02)
+        rows.append((f"fig14/build-{mode}", us,
                      f"recall={recall(np.asarray(res.ids), ds.gt_ids):.4f}"))
     return rows
 

@@ -1,0 +1,109 @@
+"""Index-build perf suite: wall time + peak-intermediate size per build mode.
+
+Run via ``python -m benchmarks.run --suite index_build`` — emits
+``BENCH_index_build.json`` so the index-construction perf trajectory
+(dense vs chunked vs minibatch, n from 1e4 to 1e6) is tracked from PR 2 on.
+
+Two measurements per (n, mode):
+
+* ``build_s``       — wall-clock of ``build_index`` (compile excluded by a
+  warm-up at the smallest n; at the largest sizes the dense mode is
+  *estimated only* — actually materialising its ``(2Ns, n, sqrtK)``
+  one-hot would defeat the point of the suite).
+* ``peak_intermediate_elems`` — the largest intermediate array (in
+  elements) anywhere in the build's jaxpr: a deterministic, device-free
+  stand-in for peak build memory that does not require running anything.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.core import SuCoConfig, build_index
+from repro.data import GENERATORS
+from repro.launch.hlo_analysis import jaxpr_peak_intermediate
+
+SIZES = (10_000, 100_000, 1_000_000)
+MODES = ("dense", "chunked", "minibatch")
+# dense above this n is jaxpr-estimated, not executed (its (2Ns, n, sqrtK)
+# one-hot would need tens of GB at 1e6 points).
+DENSE_RUN_MAX_N = 100_000
+OUT_PATH = Path("BENCH_index_build.json")
+
+D = 32
+_CFG = dict(n_subspaces=8, sqrt_k=32, kmeans_iters=3, seed=0, block_n=8192)
+
+
+def _config(mode: str) -> SuCoConfig:
+    return SuCoConfig(build_mode=mode, **_CFG)
+
+
+def _measure(x: jnp.ndarray, mode: str, *, run: bool) -> dict:
+    n = x.shape[0]
+    cfg = _config(mode)
+    peak = jaxpr_peak_intermediate(
+        jax.make_jaxpr(lambda xx: build_index(xx, cfg).cell_ids)(x)
+    )
+    rec = dict(n=n, mode=mode, peak_intermediate_elems=peak, built=bool(run))
+    if run:
+        jax.block_until_ready(build_index(x, cfg).cell_ids)  # compile
+        t0 = time.perf_counter()
+        jax.block_until_ready(build_index(x, cfg).cell_ids)
+        rec["build_s"] = time.perf_counter() - t0
+    return rec
+
+
+def collect(sizes=SIZES, out_path: Path = OUT_PATH) -> dict:
+    if tuple(sizes) != SIZES and out_path == OUT_PATH:
+        # partial/dev runs must not clobber the CI-tracked trajectory artifact
+        out_path = OUT_PATH.with_suffix(".partial.json")
+    results = []
+    for n in sizes:
+        x = jnp.asarray(GENERATORS["gaussian_mixture"](n, D, 0))
+        for mode in MODES:
+            run = mode != "dense" or n <= DENSE_RUN_MAX_N
+            results.append(_measure(x, mode, run=run))
+    payload = dict(
+        meta=dict(
+            d=D,
+            config={k: v for k, v in _CFG.items()},
+            backend=jax.default_backend(),
+            dense_run_max_n=DENSE_RUN_MAX_N,
+            schema="suco-index-build-v1",
+        ),
+        results=results,
+    )
+    out_path.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def run(sizes=SIZES) -> list[Row]:
+    payload = collect(sizes)
+    rows: list[Row] = []
+    by_key = {(r["n"], r["mode"]): r for r in payload["results"]}
+    for rec in payload["results"]:
+        dense = by_key[(rec["n"], "dense")]
+        mem_ratio = dense["peak_intermediate_elems"] / max(
+            rec["peak_intermediate_elems"], 1
+        )
+        us = rec.get("build_s", float("nan")) * 1e6
+        derived = (
+            f"peak_elems={rec['peak_intermediate_elems']};"
+            f"mem_vs_dense={mem_ratio:.1f}x;built={rec['built']}"
+        )
+        if rec["built"] and dense.get("build_s"):
+            derived += f";speed_vs_dense={dense['build_s'] / rec['build_s']:.2f}x"
+        rows.append((f"index_build/n{rec['n']}/{rec['mode']}", us, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,73 @@
+"""Micro-benchmark: per-block cost of the streaming top-pool merge.
+
+Compares ``merge_topk_pool(impl="sort")`` (two-key sort of the (m, p+b)
+concat) against the default ``impl="topk"`` (single ``lax.top_k``
+selection) at streaming-engine shapes, and asserts they stay
+bit-identical under the streaming (ascending block id) invariant.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timeit
+from repro.core import merge_topk_pool
+
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnames=("p", "bn", "impl"))
+def _run_stream(scores: jnp.ndarray, *, p: int, bn: int, impl: str):
+    m, n = scores.shape
+    int_max = np.iinfo(np.int32).max
+    pool_s = jnp.full((m, p), -1, jnp.int32)
+    pool_i = jnp.full((m, p), int_max, jnp.int32)
+
+    def step(carry, blk):
+        ps, pi = carry
+        blk_s, blk_i = blk
+        return merge_topk_pool(ps, pi, blk_s, blk_i, impl=impl), None
+
+    blocks_s = scores.reshape(m, n // bn, bn).transpose(1, 0, 2)
+    ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (m, n))
+    blocks_i = ids.reshape(m, n // bn, bn).transpose(1, 0, 2)
+    (ps, pi), _ = jax.lax.scan(step, (pool_s, pool_i), (blocks_s, blocks_i))
+    return ps, pi
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    rng = np.random.default_rng(0)
+    m, n = 32, 131_072
+    scores = jnp.asarray(rng.integers(0, 9, size=(m, n)), jnp.int32)  # many ties
+    for p, bn in ((512, 4096), (1024, 8192)):
+        res = {}
+        for impl in ("sort", "topk"):
+            fn = lambda impl=impl: jax.block_until_ready(
+                _run_stream(scores, p=p, bn=bn, impl=impl)
+            )
+            fn()  # compile outside the timed region
+            res[impl] = (timeit(fn, repeats=5), fn())
+        (us_s, (ss, si)), (us_t, (ts, ti)) = res["sort"], res["topk"]
+        bit_equal = bool(
+            np.array_equal(np.asarray(ss), np.asarray(ts))
+            and np.array_equal(np.asarray(si), np.asarray(ti))
+        )
+        n_blocks = n // bn
+        rows.append(
+            (
+                f"micro/merge_pool-p{p}-bn{bn}",
+                us_t / n_blocks,
+                f"sort_us_per_block={us_s / n_blocks:.1f};"
+                f"speedup={us_s / us_t:.2f}x;bit_equal={bit_equal}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

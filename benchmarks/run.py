@@ -2,6 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (plus a roofline summary from
 the dry-run artifacts when present).
+
+``--suite index_build`` runs the index-construction perf suite instead and
+writes ``BENCH_index_build.json`` (build wall time + peak-intermediate
+estimate per mode for n in {1e4, 1e5, 1e6}) — the artifact CI tracks for
+the perf trajectory of ``build_index``.
 """
 
 from __future__ import annotations
@@ -19,13 +24,34 @@ MODULES = (
     "benchmarks.fig8_alpha_beta",
     "benchmarks.fig9_12_competitors",
     "benchmarks.fig14_preprocessing",
+    "benchmarks.micro_merge_pool",
 )
+
+SUITES = {"index_build": "benchmarks.index_build"}
+
+
+def _run_suite(name: str) -> None:
+    import importlib
+
+    if name not in SUITES:
+        raise SystemExit(f"unknown suite {name!r}; available: {sorted(SUITES)}")
+    mod = importlib.import_module(SUITES[name])
+    print("name,us_per_call,derived")
+    for row_name, us, derived in mod.run():
+        print(f"{row_name},{us:.1f},{derived}", flush=True)
 
 
 def main() -> None:
     import importlib
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    argv = sys.argv[1:]
+    if "--suite" in argv:
+        idx = argv.index("--suite")
+        if idx + 1 >= len(argv):
+            raise SystemExit("--suite requires a name (e.g. index_build)")
+        _run_suite(argv[idx + 1])
+        return
+    only = argv[0] if argv else None
     print("name,us_per_call,derived")
     failed = 0
     for modname in MODULES:

@@ -1,43 +1,92 @@
-"""Batched Lloyd K-means in JAX (the paper's Algorithm 2 building block).
+"""Batched K-means in JAX (the paper's Algorithm 2 building block).
 
 SuCo runs ``2 * Ns`` small K-means problems (two half-subspaces per
-subspace), each with only ``sqrt(K)`` centroids (~50).  We therefore batch
-all codebooks into one ``vmap`` so a single XLA program trains the whole
-index — this is the TPU analogue of the paper's "one OpenMP task per
-subspace" parallelism.
+subspace), each with only ``sqrt(K)`` centroids (~50).  All codebooks are
+trained in one batched XLA program — the TPU analogue of the paper's "one
+OpenMP task per subspace" parallelism.
 
-The assignment step can optionally run through the fused Pallas
-``kmeans_assign`` kernel (distance + argmin without materialising the
-``(n, K)`` distance matrix).
+Index-build memory model (three execution paths, one reference semantics):
+
+* **dense** (``block_n=0``, the reference) — full-batch Lloyd; every
+  iteration materialises the ``(B, n, k)`` distance matrix and a
+  ``(B, n, k)`` one-hot update.  Fastest for small n (one fused einsum),
+  but the one-hot alone is ``k`` times the dataset and caps dataset size.
+* **chunked** (``block_n>0``, ``algo="lloyd"``) — the same Lloyd update
+  as a blocked ``lax.scan`` over data chunks of ``block_n`` points that
+  carries per-centroid ``(sums, counts, inertia)`` accumulators: nothing
+  of size ``(n, k)`` is ever live, peak per-iteration memory is
+  O(B * block_n * max(k, s)).  Centroids agree with dense up to fp
+  summation order; over multiple iterations that noise can flip the
+  assignment of points sitting exactly on Voronoi boundaries (exact
+  parity on separated data, <0.1% flips otherwise).  On TPU the whole
+  per-iteration pass runs
+  through the fused Pallas :func:`~repro.kernels.kmeans_assign.ops.
+  kmeans_assign_stats` kernel (distance + argmin + partial-sum
+  accumulation in VMEM); on CPU the jnp ``lax.scan`` is the oracle path.
+* **minibatch** (``algo="minibatch"``) — opt-in web-scale mode: each step
+  assigns one *sampled* chunk of ``block_n`` points and moves centroids
+  with per-centroid learning rates ``counts_step / counts_total``
+  (Sculley-style mini-batch K-means, aggregated form).  O(iters * block_n)
+  assignment work instead of O(iters * n) — the right trade for
+  million-point builds where full Lloyd epochs are wasteful.  Approximate:
+  centroids converge near, not to, the Lloyd fixed point.
+
+The final assignment pass respects ``impl`` ("auto" routes to the fused
+Pallas ``kmeans_assign`` kernels on TPU, pure jnp elsewhere) and is
+chunked whenever ``block_n>0``.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.distances import pairwise_sqdist
 
-__all__ = ["KMeansResult", "kmeans", "kmeans_batched", "assign"]
+__all__ = [
+    "KMeansResult",
+    "kmeans",
+    "kmeans_batched",
+    "assign",
+    "block_batched",
+    "lloyd_stats_scan",
+    "assign_scan",
+]
+
+_ALGOS = ("lloyd", "minibatch")
+_MINIBATCH_DEFAULT_BLOCK = 4096
 
 
 class KMeansResult(NamedTuple):
-    centroids: jax.Array  # (k, s)
-    assignments: jax.Array  # (n,) int32
-    inertia: jax.Array  # () sum of squared distances to the owning centroid
+    centroids: jax.Array  # (k, s) — or (B, k, s) batched
+    assignments: jax.Array  # (n,) int32 — or (B, n) batched
+    inertia: jax.Array  # () — or (B,); sum of squared distances to the
+    # owning centroid.  Lloyd paths report the last update step's inertia
+    # (dense-reference semantics); minibatch reports the final full-data
+    # inertia from the assignment pass.
 
 
 def assign(x: jax.Array, centroids: jax.Array, *, impl: str = "auto") -> jax.Array:
     """``argmin_c ||x - centroid_c||^2`` for every row of ``x``."""
-    if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
+    if _use_pallas(impl):
         from repro.kernels.kmeans_assign import ops as _ops
 
         return _ops.kmeans_assign(x, centroids)
     d2 = pairwise_sqdist(x, centroids, impl="jnp")  # (n, k)
     return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def _use_pallas(impl: str) -> bool:
+    if impl == "pallas":
+        return True
+    if impl == "jnp":
+        return False
+    if impl != "auto":
+        raise ValueError(f"impl must be 'auto'|'jnp'|'pallas', got {impl!r}")
+    return jax.default_backend() == "tpu"
 
 
 def _init_centroids(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
@@ -46,6 +95,11 @@ def _init_centroids(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
     n = x.shape[0]
     idx = jax.random.permutation(key, n)[:k]
     return jnp.take(x, idx, axis=0)
+
+
+# --------------------------------------------------------------------------
+# Dense reference step (the semantics every streaming path must match)
+# --------------------------------------------------------------------------
 
 
 def _lloyd_step(x: jax.Array, centroids: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -63,23 +117,278 @@ def _lloyd_step(x: jax.Array, centroids: jax.Array) -> tuple[jax.Array, jax.Arra
     return new, inertia
 
 
-def kmeans(key: jax.Array, x: jax.Array, k: int, iters: int) -> KMeansResult:
-    """Plain Lloyd with ``iters`` update steps; deterministic given ``key``."""
-    centroids0 = _init_centroids(key, x, k)
+# --------------------------------------------------------------------------
+# Chunked streaming statistics (shared with the distributed engine)
+# --------------------------------------------------------------------------
 
-    def body(c, _):
-        new, inertia = _lloyd_step(x, c)
-        return new, inertia
 
-    centroids, inertias = jax.lax.scan(body, centroids0, None, length=iters)
-    a = assign(x, centroids, impl="jnp")
+def block_batched(
+    xs: jax.Array, block_n: int
+) -> tuple[jax.Array, jax.Array]:
+    """``(B, n, s) -> (blocks (nb, B, bn, s), valid (nb, bn) bool)``.
+
+    Zero-pads n up to a multiple of ``bn = min(block_n, n)`` and exposes
+    the data as scan-ready chunks; ``valid`` masks the padded tail.
+    """
+    b, n, s = xs.shape
+    bn = max(1, min(block_n, n))
+    nb = -(-n // bn)
+    xp = jnp.pad(xs, ((0, 0), (0, nb * bn - n), (0, 0)))
+    blocks = xp.reshape(b, nb, bn, s).transpose(1, 0, 2, 3)
+    valid = (jnp.arange(nb * bn) < n).reshape(nb, bn)
+    return blocks, valid
+
+
+def lloyd_stats_scan(
+    blocks: jax.Array,
+    valid: jax.Array,
+    centroids: jax.Array,
+    *,
+    cast_init: Callable[[tuple], tuple] = lambda t: t,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One Lloyd assignment pass as a blocked scan with carried accumulators.
+
+    ``blocks: (nb, B, bn, s)``, ``valid: (nb, bn)``, ``centroids: (B, k, s)``
+    -> ``(sums (B, k, s) f32, counts (B, k) f32, inertia (B,) f32)``.
+
+    Per chunk only a ``(B, bn, k)`` distance tile and a ``(B, bn, k)``
+    weighted one-hot are live — the O(n * k) full-batch intermediates never
+    exist.  ``cast_init`` lets shard_map callers mark the zero carries as
+    device-varying (VMA) before the scan.
+    """
+    _, b, _, s = blocks.shape
+    k = centroids.shape[1]
+    cf = centroids.astype(jnp.float32)
+
+    def body(carry, inp):
+        sums, counts, inertia = carry
+        xb, vb = inp  # (B, bn, s), (bn,)
+        xf = xb.astype(jnp.float32)
+        d2 = jax.vmap(lambda xx, cc: pairwise_sqdist(xx, cc, impl="jnp"))(xf, cf)
+        a = jnp.argmin(d2, axis=-1)  # (B, bn)
+        w = vb.astype(jnp.float32)  # (bn,)
+        oh = jax.nn.one_hot(a, k, dtype=jnp.float32) * w[None, :, None]
+        sums = sums + jnp.einsum("bnk,bns->bks", oh, xf)
+        counts = counts + jnp.sum(oh, axis=1)
+        inertia = inertia + jnp.sum(jnp.min(d2, axis=-1) * w[None, :], axis=1)
+        return (sums, counts, inertia), None
+
+    init = cast_init(
+        (
+            jnp.zeros((b, k, s), jnp.float32),
+            jnp.zeros((b, k), jnp.float32),
+            jnp.zeros((b,), jnp.float32),
+        )
+    )
+    (sums, counts, inertia), _ = jax.lax.scan(body, init, (blocks, valid))
+    return sums, counts, inertia
+
+
+def assign_scan(
+    blocks: jax.Array,
+    valid: jax.Array,
+    centroids: jax.Array,
+    *,
+    cast_init: Callable[[jax.Array], jax.Array] = lambda t: t,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked final assignment: ``-> (assign (B, nb*bn) int32, inertia (B,))``.
+
+    Assignments for padded rows are junk — the caller slices ``[:, :n]``;
+    the inertia accumulator masks them out.
+    """
+    _, b, _, _ = blocks.shape
+    cf = centroids.astype(jnp.float32)
+
+    def body(inertia, inp):
+        xb, vb = inp
+        d2 = jax.vmap(lambda xx, cc: pairwise_sqdist(xx, cc, impl="jnp"))(
+            xb.astype(jnp.float32), cf
+        )
+        a = jnp.argmin(d2, axis=-1).astype(jnp.int32)  # (B, bn)
+        w = vb.astype(jnp.float32)
+        inertia = inertia + jnp.sum(jnp.min(d2, axis=-1) * w[None, :], axis=1)
+        return inertia, a
+
+    init = cast_init(jnp.zeros((b,), jnp.float32))
+    inertia, a_blocks = jax.lax.scan(body, init, (blocks, valid))  # (nb, B, bn)
+    a = a_blocks.transpose(1, 0, 2).reshape(b, -1)
+    return a, inertia
+
+
+def _stats_batched(
+    xs: jax.Array, centroids: jax.Array, *, block_n: int, impl: str
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Dispatch one batched Lloyd statistics pass: fused Pallas kernel on
+    TPU, blocked jnp scan elsewhere."""
+    if _use_pallas(impl):
+        from repro.kernels.kmeans_assign import ops as _ops
+
+        # impl="pallas": the dispatch decision is already made — forward it
+        # so an explicit off-TPU request runs the kernel (or fails loudly)
+        # instead of silently falling back to the dense jnp oracle.
+        # with_assign=False: Lloyd iterations consume only the statistics,
+        # and an unused pallas output cannot be DCE'd.
+        _, sums, counts, inertia = _ops.kmeans_assign_stats(
+            xs, centroids, bn=block_n, impl="pallas", with_assign=False
+        )
+        return sums, counts, inertia
+    blocks, valid = block_batched(xs, block_n)
+    return lloyd_stats_scan(blocks, valid, centroids)
+
+
+# --------------------------------------------------------------------------
+# Training loops
+# --------------------------------------------------------------------------
+
+
+def _kmeans_core(
+    key: jax.Array,
+    xs: jax.Array,  # (B, n, s)
+    c0: jax.Array,  # (B, k, s)
+    iters: int,
+    algo: str,
+    block_n: int,
+    impl: str,
+) -> KMeansResult:
+    b, n, s = xs.shape
+    k = c0.shape[1]
+    pallas = _use_pallas(impl)
+
+    if algo == "minibatch":
+        bn = max(1, min(block_n or _MINIBATCH_DEFAULT_BLOCK, n))
+
+        def mb_body(carry, t):
+            c, cnts = carry
+            kt = jax.random.fold_in(key, t)
+            idx = jax.random.randint(kt, (bn,), 0, n)
+            xb = jnp.take(xs, idx, axis=1)  # (B, bn, s) — shared sample
+            sums, counts, _ = _stats_batched(xb, c, block_n=bn, impl=impl)
+            cnts = cnts + counts
+            # Aggregated Sculley update: per-centroid learning rate
+            # counts / cnts, i.e. c <- c + (batch_sum - batch_count*c)/cnts.
+            delta = (sums - counts[..., None] * c.astype(jnp.float32)) / jnp.maximum(
+                cnts, 1.0
+            )[..., None]
+            return (
+                (c.astype(jnp.float32) + delta).astype(c.dtype),
+                cnts,
+            ), None
+
+        (c_fin, _), _ = jax.lax.scan(
+            mb_body,
+            (c0, jnp.zeros((b, k), jnp.float32)),
+            jnp.arange(iters, dtype=jnp.int32),
+        )
+        a, inertia = _final_assign(xs, c_fin, block_n=bn, pallas=pallas,
+                                   need_inertia=True)
+        return KMeansResult(c_fin, a, inertia)
+
+    # algo == "lloyd"
+    chunked = block_n > 0
+    if chunked and not pallas:
+        blocks, valid = block_batched(xs, block_n)
+
+    def lloyd_body(c, _):
+        if not chunked:
+            new, inertia = jax.vmap(_lloyd_step)(xs, c)
+            return new, inertia
+        if pallas:
+            sums, counts, inertia = _stats_batched(xs, c, block_n=block_n, impl=impl)
+        else:
+            sums, counts, inertia = lloyd_stats_scan(blocks, valid, c)
+        new = sums / jnp.maximum(counts, 1.0)[..., None]
+        new = jnp.where(counts[..., None] > 0, new, c.astype(jnp.float32))
+        return new.astype(c.dtype), inertia
+
+    centroids, inertias = jax.lax.scan(lloyd_body, c0, None, length=iters)
+    a, _ = _final_assign(xs, centroids, block_n=block_n, pallas=pallas,
+                         need_inertia=False)
     return KMeansResult(centroids, a, inertias[-1])
 
 
-def kmeans_batched(key: jax.Array, xs: jax.Array, k: int, iters: int) -> KMeansResult:
+def _final_assign(
+    xs: jax.Array,
+    centroids: jax.Array,
+    *,
+    block_n: int,
+    pallas: bool,
+    need_inertia: bool,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Final assignment pass -> (assign (B, n) int32, inertia (B,) f32|None).
+
+    Routed through the batched Pallas kernels on TPU (regardless of
+    block_n: they stream internally), the chunked jnp scan when
+    ``block_n>0``, and the dense jnp argmin otherwise.  Lloyd callers pass
+    ``need_inertia=False`` (they report the last update step's inertia) so
+    the TPU path can use the assign-only kernel and skip the dead
+    one-hot/stats accumulation work entirely; minibatch needs the final
+    full-data inertia and takes the fused stats kernel.
+    """
+    b, n, _ = xs.shape
+    if pallas:
+        from repro.kernels.kmeans_assign import ops as _ops
+
+        bn = block_n or 1024
+        if not need_inertia:
+            return _ops.kmeans_assign_batched(xs, centroids, bn=bn, impl="pallas"), None
+        a, _, _, inertia = _ops.kmeans_assign_stats(
+            xs, centroids, bn=bn, impl="pallas"
+        )
+        return a, inertia
+    blocks, valid = block_batched(xs, block_n or n)
+    a, inertia = assign_scan(blocks, valid, centroids)
+    return a[:, :n], inertia
+
+
+def _check_args(algo: str, block_n: int) -> None:
+    if algo not in _ALGOS:
+        raise ValueError(f"algo must be one of {_ALGOS}, got {algo!r}")
+    if block_n < 0:
+        raise ValueError(f"block_n must be >= 0 (0 = dense), got {block_n}")
+
+
+def kmeans(
+    key: jax.Array,
+    x: jax.Array,
+    k: int,
+    iters: int,
+    *,
+    algo: str = "lloyd",
+    block_n: int = 0,
+    impl: str = "auto",
+) -> KMeansResult:
+    """K-means with ``iters`` update steps; deterministic given ``key``.
+
+    ``algo``: "lloyd" (exact full-batch updates) | "minibatch" (sampled
+    chunks + learning-rate updates).  ``block_n``: 0 = dense reference
+    Lloyd; >0 = chunked streaming updates over ``block_n``-point chunks
+    (same update rule; centroids and assignments agree with dense up to
+    fp summation-order noise at Voronoi boundaries).  ``impl`` selects
+    the assignment backend ("auto" = fused Pallas kernels on TPU, jnp
+    elsewhere).
+    """
+    _check_args(algo, block_n)
+    c0 = _init_centroids(key, x, k)
+    res = _kmeans_core(key, x[None], c0[None], iters, algo, block_n, impl)
+    return KMeansResult(res.centroids[0], res.assignments[0], res.inertia[0])
+
+
+def kmeans_batched(
+    key: jax.Array,
+    xs: jax.Array,
+    k: int,
+    iters: int,
+    *,
+    algo: str = "lloyd",
+    block_n: int = 0,
+    impl: str = "auto",
+) -> KMeansResult:
     """``xs: (B, n, s)`` -> centroids ``(B, k, s)``, assignments ``(B, n)``.
 
-    One fused program for all ``B`` codebooks (B = 2*Ns for SuCo).
+    One fused program for all ``B`` codebooks (B = 2*Ns for SuCo); same
+    ``algo``/``block_n``/``impl`` contract as :func:`kmeans`.
     """
+    _check_args(algo, block_n)
     keys = jax.random.split(key, xs.shape[0])
-    return jax.vmap(lambda kk, x: kmeans(kk, x, k, iters))(keys, xs)
+    c0 = jax.vmap(lambda kk, x: _init_centroids(kk, x, k))(keys, xs)
+    return _kmeans_core(key, xs, c0, iters, algo, block_n, impl)

@@ -113,6 +113,8 @@ def merge_topk_pool(
     pool_ids: jax.Array,
     blk_scores: jax.Array,
     blk_ids: jax.Array,
+    *,
+    impl: str = "topk",
 ) -> tuple[jax.Array, jax.Array]:
     """Merge a score block into a carried top-pool, keeping the pool size.
 
@@ -122,10 +124,27 @@ def merge_topk_pool(
     reproduces the dense ``top_k(scores, p)`` selection bit-for-bit.
     Sentinel entries (score -1, id INT32_MAX) sort after every real entry
     (real scores are >= 0) and are expelled as real candidates arrive.
+
+    ``impl="topk"`` (the default) replaces the two-key sort of the
+    ``(m, p+b)`` concat with a single ``lax.top_k`` over the scores —
+    O((p+b) log k) selection instead of a full O((p+b) log (p+b)) sort
+    (see ``benchmarks/micro_merge_pool.py`` for the per-block win).  It is
+    bit-compatible with ``impl="sort"`` under the *streaming invariant*
+    that every in-repo caller satisfies: blocks arrive in ascending-id
+    order (so every real pool id is smaller than every real block id, and
+    both segments are id-ascending within equal scores), which makes
+    ``top_k``'s position tie-break coincide with the (score desc, id asc)
+    order.  Callers merging arbitrarily-ordered blocks must pass
+    ``impl="sort"``.
     """
     p = pool_scores.shape[-1]
     s = jnp.concatenate([pool_scores, blk_scores], axis=-1)
     i = jnp.concatenate([pool_ids, blk_ids], axis=-1)
+    if impl == "topk":
+        vals, pos = jax.lax.top_k(s, p)
+        return vals, jnp.take_along_axis(i, pos, axis=-1)
+    if impl != "sort":
+        raise ValueError(f"impl must be 'topk'|'sort', got {impl!r}")
     neg_sorted, ids_sorted = jax.lax.sort((-s, i), num_keys=2)
     return -neg_sorted[..., :p], ids_sorted[..., :p]
 

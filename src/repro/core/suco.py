@@ -35,6 +35,31 @@ Query-memory model (two execution paths, identical results):
 ``suco_query(mode="auto")`` (the default) selects dense below
 ``STREAMING_MIN_N`` points and streaming at or above it — million-point
 datasets never allocate an (m, n) intermediate.
+
+Index-build memory model (mirrors the query design; see
+:mod:`repro.core.kmeans` for the K-means internals):
+
+* **dense** (``SuCoConfig(build_mode="dense")``) — full-batch Lloyd; each
+  iteration materialises ``(2Ns, n, sqrtK)`` distance and one-hot
+  intermediates.  The reference semantics; fastest for small n.
+* **chunked** (``build_mode="chunked"``) — streaming Lloyd: a blocked
+  ``lax.scan`` over ``block_n``-point chunks carrying per-centroid
+  ``(sums, counts, inertia)`` accumulators, and a chunked final
+  assignment.  Peak per-iteration memory O(2Ns * block_n * max(sqrtK,
+  h_max)).  Same update rule as dense; the chunked accumulators sum in a
+  different fp order, so over multiple Lloyd iterations points sitting
+  exactly on Voronoi boundaries can flip cells (in practice <0.1%; exact
+  parity on separated data).  On TPU the pass is the fused Pallas
+  ``kmeans_assign_stats`` kernel.
+* **minibatch** (``build_mode="minibatch"``) — opt-in approximate mode
+  for million-point builds: each K-means step assigns one sampled
+  ``block_n`` chunk and applies learning-rate centroid updates; the
+  only full-data pass left is the final chunked assignment.
+
+``build_mode="auto"`` (the default) picks dense below ``STREAMING_MIN_N``
+points and chunked at or above it, so large builds never materialise an
+``(n, sqrtK)`` intermediate.  ``minibatch`` is never auto-selected — it
+trades accuracy and must be requested.
 """
 
 from __future__ import annotations
@@ -67,18 +92,29 @@ __all__ = [
 ]
 
 # mode="auto" switches from the dense (m, n) score matrix to the tiled
-# streaming engine at this dataset size (see module docstring).
+# streaming engine at this dataset size (see module docstring); the index
+# build's "auto" switches dense -> chunked Lloyd at the same point.
 STREAMING_MIN_N = 32_768
+
+_BUILD_MODES = ("auto", "dense", "chunked", "minibatch")
 
 
 @dataclasses.dataclass(frozen=True)
 class SuCoConfig:
-    """Static SuCo hyper-parameters (paper defaults: K=50^2, Ns=8, t=20)."""
+    """Static SuCo hyper-parameters (paper defaults: K=50^2, Ns=8, t=20).
+
+    ``build_mode``/``block_n`` select the index-construction memory model
+    (see module docstring): "auto" | "dense" | "chunked" | "minibatch",
+    with ``block_n`` the streaming chunk size (and the minibatch sample
+    size).
+    """
 
     n_subspaces: int = 8
     sqrt_k: int = 50
     kmeans_iters: int = 20
     seed: int = 0
+    build_mode: str = "auto"
+    block_n: int = 4096
 
     @property
     def n_cells(self) -> int:
@@ -113,13 +149,26 @@ class SuCoIndex:
         )
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "sqrt_k", "iters"))
-def _build(x: jax.Array, key: jax.Array, *, spec, sqrt_k: int, iters: int):
+@functools.partial(
+    jax.jit, static_argnames=("spec", "sqrt_k", "iters", "algo", "block_n")
+)
+def _build(
+    x: jax.Array,
+    key: jax.Array,
+    *,
+    spec,
+    sqrt_k: int,
+    iters: int,
+    algo: str = "lloyd",
+    block_n: int = 0,
+):
     ns = spec.n_subspaces
     xp = sub.permute(spec, x)
     h1, h2 = sub.split_halves_padded(spec, xp)  # 2 x (Ns, n, h_max)
     both = jnp.concatenate([h1, h2], axis=0)  # (2Ns, n, h_max)
-    res = kmeans_batched(key, both, sqrt_k, iters)
+    # block_n=0 is the dense reference; >0 streams every K-means pass —
+    # including the final assignment feeding cell_ids — in block_n chunks.
+    res = kmeans_batched(key, both, sqrt_k, iters, algo=algo, block_n=block_n)
     a1, a2 = res.assignments[:ns], res.assignments[ns:]
     cell_ids = (a1 * sqrt_k + a2).astype(jnp.int32)  # (Ns, n)
     counts = jax.vmap(
@@ -129,12 +178,36 @@ def _build(x: jax.Array, key: jax.Array, *, spec, sqrt_k: int, iters: int):
 
 
 def build_index(x: jax.Array, config: SuCoConfig, *, spec: sub.SubspaceSpec | None = None) -> SuCoIndex:
-    """Algorithm 2.  ``x: (n, d)``; deterministic given ``config.seed``."""
+    """Algorithm 2.  ``x: (n, d)``; deterministic given ``config.seed``.
+
+    ``config.build_mode`` picks the construction memory model ("auto"
+    selects chunked at or above ``STREAMING_MIN_N`` points — see module
+    docstring); dense and chunked run the same update rule and agree up
+    to fp summation order (boundary points can differ after many
+    iterations).
+    """
     if spec is None:
         spec = sub.contiguous_spec(x.shape[-1], config.n_subspaces)
+    mode = config.build_mode
+    if mode not in _BUILD_MODES:
+        raise ValueError(f"unknown build_mode {mode!r}, expected one of {_BUILD_MODES}")
+    if mode == "auto":
+        mode = "chunked" if x.shape[0] >= STREAMING_MIN_N else "dense"
+    if mode != "dense" and config.block_n < 1:
+        raise ValueError(
+            f"build_mode={mode!r} requires block_n >= 1, got {config.block_n}"
+        )
+    algo = "minibatch" if mode == "minibatch" else "lloyd"
+    block_n = 0 if mode == "dense" else config.block_n
     key = jax.random.key(config.seed)
     c1, c2, cell_ids, counts = _build(
-        x, key, spec=spec, sqrt_k=config.sqrt_k, iters=config.kmeans_iters
+        x,
+        key,
+        spec=spec,
+        sqrt_k=config.sqrt_k,
+        iters=config.kmeans_iters,
+        algo=algo,
+        block_n=block_n,
     )
     return SuCoIndex(c1, c2, cell_ids, counts, spec=spec, sqrt_k=config.sqrt_k)
 
@@ -372,7 +445,8 @@ def suco_query_streaming(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "alpha", "beta", "metric", "mode", "block_n")
+    jax.jit,
+    static_argnames=("k", "alpha", "beta", "metric", "mode", "block_n", "score_impl"),
 )
 def suco_query(
     x: jax.Array,
@@ -385,19 +459,31 @@ def suco_query(
     metric: Metric = "l2",
     mode: str = "auto",
     block_n: int = 4096,
+    score_impl: str = "auto",
 ) -> QueryResult:
     """Algorithm 4: k-ANN for a batch ``q: (m, d)`` using the SuCo index.
 
     ``mode``: "dense" | "streaming" | "auto" (streaming iff
     n >= ``STREAMING_MIN_N``); both paths return bit-identical results —
-    see the module docstring for the memory model.
+    see the module docstring for the memory model.  ``score_impl``
+    ("auto" | "jnp" | "pallas") overrides the streaming scorer's kernel
+    dispatch (:func:`sc_scores_cells`); the dense path is jnp-only and
+    ignores it.
     """
     n = x.shape[0]
     if mode not in ("auto", "dense", "streaming"):
         raise ValueError(f"unknown mode {mode!r}")
     if mode == "streaming" or (mode == "auto" and n >= STREAMING_MIN_N):
         return suco_query_streaming(
-            x, index, q, k=k, alpha=alpha, beta=beta, metric=metric, block_n=block_n
+            x,
+            index,
+            q,
+            k=k,
+            alpha=alpha,
+            beta=beta,
+            metric=metric,
+            block_n=block_n,
+            score_impl=score_impl,
         )
     c = sub.collision_count(n, alpha)
     scores = suco_scores(index, q, c, metric)  # (m, n)

@@ -42,6 +42,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.suco import SuCoIndex, _cell_ranks_and_cut, activate_cells_sorted
 from repro.core import subspace as sub
 from repro.core.distances import pairwise_sqdist
+from repro.core.kmeans import assign_scan, block_batched, lloyd_stats_scan
 from repro.core.sc_linear import merge_topk_pool
 from repro.distributed.compat import pcast_varying, shard_map_compat
 from repro.kernels.sc_score.ops import sc_scores_cells
@@ -61,6 +62,9 @@ class DistSuCoConfig:
     # (q_chunk, n_local) score block)
     block_n: int = 4096  # data points scored per streaming block;
     # 0 = dense per-shard scoring (the small-n reference path)
+    build_block_n: int = 4096  # points per streaming Lloyd chunk during the
+    # sharded build; 0 = dense per-shard one-hot updates (the reference
+    # path — materialises (2ns_loc, n_loc, sqrt_k) every iteration)
     point_axes: tuple[str, ...] = ("data",)
     model_axis: str = "model"
     seed: int = 0
@@ -124,17 +128,35 @@ def _split_local(x_loc: jax.Array, ns_loc: int, s: int) -> tuple[jax.Array, jax.
 
 
 def build_sharded(mesh: Mesh, x: jax.Array, cfg: DistSuCoConfig) -> SuCoIndex:
-    """Distributed Algorithm 2: K-means via psum'd sufficient statistics."""
+    """Distributed Algorithm 2: K-means via psum'd sufficient statistics.
+
+    ``cfg.build_block_n > 0`` (the default) streams each shard's points
+    through the chunked Lloyd scan (:func:`repro.core.kmeans.
+    lloyd_stats_scan`): every iteration each shard folds its chunks into
+    per-centroid ``(sums, counts)`` accumulators and only those tiny
+    ``(2ns_loc, sqrt_k, h1)`` partials are psum'd — nothing of size
+    ``(n_loc, sqrt_k)`` is ever live, and the collective volume per
+    iteration is independent of n.  ``build_block_n=0`` keeps the dense
+    per-shard one-hot reference path; both produce identical cell_ids.
+    """
     n, d = x.shape
     ns_loc, s = _check(mesh, cfg, d)
     pa = cfg.point_axes
     all_point_axes = pa
     sqrt_k = cfg.sqrt_k
+    if cfg.build_block_n < 0:
+        raise ValueError(
+            f"build_block_n must be >= 0 (0 = dense), got {cfg.build_block_n}"
+        )
 
     def _build(x_loc: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
         a, b, h1 = _split_local(x_loc, ns_loc, s)
         cb = jnp.concatenate([a, b], axis=0)  # (2ns_loc, n_loc, h1)
         n_loc = cb.shape[1]
+        chunked = cfg.build_block_n > 0
+        cast = lambda t: pcast_varying(t, tuple(mesh.axis_names))
+        if chunked:
+            blocks, valid = block_batched(cb, cfg.build_block_n)
 
         # deterministic init: the first sqrt_k points of point-shard 0
         shard_idx = jnp.zeros((), jnp.int32)
@@ -146,21 +168,30 @@ def build_sharded(mesh: Mesh, x: jax.Array, cfg: DistSuCoConfig) -> SuCoIndex:
 
         def lloyd(c, _):
             # c: (2ns_loc, sqrt_k, h1)
-            d2 = jax.vmap(lambda xx, cc: pairwise_sqdist(xx, cc, impl="jnp"))(cb, c)
-            assign = jnp.argmin(d2, axis=-1)  # (2ns, n_loc)
-            oh = jax.nn.one_hot(assign, sqrt_k, dtype=cb.dtype)  # (2ns, n_loc, k)
-            sums = jnp.einsum("bnk,bnh->bkh", oh, cb)
-            cnts = jnp.sum(oh, axis=1)  # (2ns, k)
+            if chunked:
+                sums, cnts, _ = lloyd_stats_scan(blocks, valid, c, cast_init=cast)
+                sums = sums.astype(cb.dtype)
+                cnts = cnts.astype(cb.dtype)
+            else:
+                d2 = jax.vmap(lambda xx, cc: pairwise_sqdist(xx, cc, impl="jnp"))(cb, c)
+                assign = jnp.argmin(d2, axis=-1)  # (2ns, n_loc)
+                oh = jax.nn.one_hot(assign, sqrt_k, dtype=cb.dtype)  # (2ns, n_loc, k)
+                sums = jnp.einsum("bnk,bnh->bkh", oh, cb)
+                cnts = jnp.sum(oh, axis=1)  # (2ns, k)
             sums = jax.lax.psum(sums, all_point_axes)
             cnts = jax.lax.psum(cnts, all_point_axes)
             new = sums / jnp.maximum(cnts, 1.0)[..., None]
             new = jnp.where(cnts[..., None] > 0, new, c)
-            return new, None
+            return new.astype(c.dtype), None
 
         c_fin, _ = jax.lax.scan(lloyd, init, None, length=cfg.kmeans_iters)
 
-        d2 = jax.vmap(lambda xx, cc: pairwise_sqdist(xx, cc, impl="jnp"))(cb, c_fin)
-        assign = jnp.argmin(d2, axis=-1).astype(jnp.int32)  # (2ns, n_loc)
+        if chunked:
+            assign, _ = assign_scan(blocks, valid, c_fin, cast_init=cast)
+            assign = assign[:, :n_loc]  # (2ns, n_loc) int32
+        else:
+            d2 = jax.vmap(lambda xx, cc: pairwise_sqdist(xx, cc, impl="jnp"))(cb, c_fin)
+            assign = jnp.argmin(d2, axis=-1).astype(jnp.int32)  # (2ns, n_loc)
         a1, a2 = assign[:ns_loc], assign[ns_loc:]
         cell_ids = a1 * sqrt_k + a2  # (ns_loc, n_loc)
         counts = jax.vmap(

@@ -1,13 +1,27 @@
-"""Fused K-means assignment Pallas kernel: distance + argmin in one pass.
+"""Fused K-means assignment Pallas kernels: distance + argmin in one pass.
 
 For ``x: (n, s)`` and ``centroids: (k, s)`` produces ``argmin_c ||x - c||^2``
 without materialising the ``(n, k)`` distance matrix in HBM.  The whole
 codebook (sqrt(K) ~ 50 rows) lives in VMEM for every grid step; points
 stream through in ``bn`` blocks.
 
+Three entry points share that structure:
+
+* :func:`kmeans_assign_kernel` — single problem, assignments only.
+* :func:`kmeans_assign_batched_kernel` — ``(B, n, s)`` batched layout (the
+  SuCo build trains ``B = 2*Ns`` codebooks at once); grid ``(B, n/bn)``.
+* :func:`kmeans_stats_kernel` — the streaming-Lloyd workhorse: per grid
+  step it additionally folds the block's one-hot into per-centroid
+  ``(sums, counts, inertia)`` accumulator tiles that revisit across the
+  (innermost) point-block grid dimension — one kernel pass yields the
+  complete Lloyd sufficient statistics with nothing of size ``(n, k)``
+  ever leaving VMEM (the ``sc_score`` revisiting-tile pattern).
+
 Padding contract (enforced by ops.py): pad dims with 0 (no distance effect),
 pad centroid *rows* with a large constant so they never win the argmin, pad
-point rows freely (junk assignments are sliced off).
+point rows freely for assign-only kernels (junk assignments are sliced
+off); the stats kernel additionally takes a ``(1, n)`` weight row that
+zeroes padded points out of the accumulators.
 """
 
 from __future__ import annotations
@@ -53,3 +67,153 @@ def kmeans_assign_kernel(
         out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
         interpret=interpret,
     )(x, centroids)
+
+
+def _sqdist_block(x_ref, c_ref):
+    """VMEM distance tile: ``(bn, s), (k, s) -> (bn, k)`` fp32."""
+    xb = x_ref[0].astype(jnp.float32)
+    cb = c_ref[0].astype(jnp.float32)
+    xn = jnp.sum(xb * xb, axis=1, keepdims=True)  # (bn, 1)
+    cn = jnp.sum(cb * cb, axis=1, keepdims=True).T  # (1, k)
+    cross = jax.lax.dot_general(
+        xb,
+        cb,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return xn + cn - 2.0 * cross
+
+
+def _batched_kernel(x_ref, c_ref, out_ref):
+    d2 = _sqdist_block(x_ref, c_ref)  # (bn, k)
+    out_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)[None, :, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def kmeans_assign_batched_kernel(
+    x: jax.Array, centroids: jax.Array, *, bn: int = 1024, interpret: bool = False
+) -> jax.Array:
+    """``(B, n, s), (B, k, s) -> (B, n, 1)`` batched fused distance+argmin.
+
+    Caller pre-pads: n % bn == 0; s, k already VMEM-friendly.  One codebook
+    per outer grid step; each codebook's points stream in ``bn`` blocks.
+    """
+    b, n, s = x.shape
+    k = centroids.shape[1]
+    grid = (b, n // bn)
+    return pl.pallas_call(
+        _batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, s), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, k, s), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, 1), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, 1), jnp.int32),
+        interpret=interpret,
+    )(x, centroids)
+
+
+def _accumulate_stats(x_ref, c_ref, w_ref, sums_ref, counts_ref, inertia_ref):
+    """Shared stats body: distance + argmin + weighted one-hot fold into the
+    revisiting accumulator tiles.  Returns the block's argmin row."""
+    j = pl.program_id(1)  # point-block index (innermost -> accumulators revisit)
+
+    @pl.when(j == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        inertia_ref[...] = jnp.zeros_like(inertia_ref)
+
+    d2 = _sqdist_block(x_ref, c_ref)  # (bn, k)
+    k = d2.shape[1]
+    a = jnp.argmin(d2, axis=1)  # (bn,)
+    w = w_ref[...].astype(jnp.float32)[0]  # (bn,) 0/1 point weights
+    # One-hot on the VPU (2D iota — TPU disallows 1D), weighted so padded
+    # points vanish from every accumulator.
+    oh = (a[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)).astype(
+        jnp.float32
+    ) * w[:, None]  # (bn, k)
+    xb = x_ref[0].astype(jnp.float32)  # (bn, s)
+    sums_ref[...] += jax.lax.dot_general(
+        oh,
+        xb,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[None]  # (1, k, s)
+    counts_ref[...] += jnp.sum(oh, axis=0)[None, :]  # (1, k)
+    inertia_ref[...] += jnp.sum(jnp.min(d2, axis=1) * w)[None, None]  # (1, 1)
+    return a
+
+
+def _stats_kernel(x_ref, c_ref, w_ref, assign_ref, sums_ref, counts_ref, inertia_ref):
+    a = _accumulate_stats(x_ref, c_ref, w_ref, sums_ref, counts_ref, inertia_ref)
+    assign_ref[...] = a.astype(jnp.int32)[None, :, None]
+
+
+def _stats_only_kernel(x_ref, c_ref, w_ref, sums_ref, counts_ref, inertia_ref):
+    _accumulate_stats(x_ref, c_ref, w_ref, sums_ref, counts_ref, inertia_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "with_assign", "interpret"))
+def kmeans_stats_kernel(
+    x: jax.Array,
+    centroids: jax.Array,
+    weights: jax.Array,
+    *,
+    bn: int = 1024,
+    with_assign: bool = True,
+    interpret: bool = False,
+) -> tuple[jax.Array | None, jax.Array, jax.Array, jax.Array]:
+    """Fused Lloyd sufficient statistics for ``B`` batched codebooks.
+
+    ``x: (B, n, s)``, ``centroids: (B, k, s)``, ``weights: (1, n)`` (0 for
+    padded points) -> ``(assign (B, n, 1) int32 | None, sums (B, k, s)
+    f32, counts (B, k) f32, inertia (B, 1) f32)``.
+
+    Grid ``(B, n/bn)`` with the point-block axis innermost so the
+    ``sums/counts/inertia`` output tiles revisit: each block's weighted
+    one-hot is folded on the MXU while the block is already resident for
+    the argmin — the ``(n, k)`` one-hot/distance matrices never exist
+    outside a single ``(bn, k)`` VMEM tile.  ``with_assign=False`` drops
+    the ``(B, n)`` assignment output entirely — Lloyd iterations only
+    need the statistics, and XLA cannot DCE an unused pallas_call output,
+    so keeping it would write B*n*4 bytes of dead HBM traffic per
+    iteration.  Caller pre-pads n % bn == 0.
+    """
+    b, n, s = x.shape
+    k = centroids.shape[1]
+    grid = (b, n // bn)
+    in_specs = [
+        pl.BlockSpec((1, bn, s), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((1, k, s), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+    ]
+    stats_specs = (
+        pl.BlockSpec((1, k, s), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+    )
+    stats_shapes = (
+        jax.ShapeDtypeStruct((b, k, s), jnp.float32),
+        jax.ShapeDtypeStruct((b, k), jnp.float32),
+        jax.ShapeDtypeStruct((b, 1), jnp.float32),
+    )
+    if not with_assign:
+        sums, counts, inertia = pl.pallas_call(
+            _stats_only_kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=stats_specs,
+            out_shape=stats_shapes,
+            interpret=interpret,
+        )(x, centroids, weights)
+        return None, sums, counts, inertia
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((1, bn, 1), lambda i, j: (i, j, 0)),) + stats_specs,
+        out_shape=(jax.ShapeDtypeStruct((b, n, 1), jnp.int32),) + stats_shapes,
+        interpret=interpret,
+    )(x, centroids, weights)

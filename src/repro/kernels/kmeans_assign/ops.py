@@ -1,4 +1,14 @@
-"""jit'd wrapper for kmeans_assign: padding + kernel dispatch."""
+"""jit'd wrappers for the kmeans_assign kernel family: padding + dispatch.
+
+Three entry points, all with the same padding contract (dims zero-padded,
+centroid rows padded far away, point rows padded then masked/sliced):
+
+* :func:`kmeans_assign`         — ``(n, s)`` single-problem assignments.
+* :func:`kmeans_assign_batched` — ``(B, n, s)`` batched assignments (the
+  SuCo ``2*Ns``-codebook layout) without vmap-of-pallas.
+* :func:`kmeans_assign_stats`   — fused assignments + per-centroid
+  ``(sums, counts, inertia)`` Lloyd statistics in one streaming pass.
+"""
 
 from __future__ import annotations
 
@@ -7,14 +17,31 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.kmeans_assign.kernel import kmeans_assign_kernel
-from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+from repro.kernels.kmeans_assign.kernel import (
+    kmeans_assign_batched_kernel,
+    kmeans_assign_kernel,
+    kmeans_stats_kernel,
+)
+from repro.kernels.kmeans_assign.ref import (
+    kmeans_assign_batched_ref,
+    kmeans_assign_ref,
+    kmeans_stats_ref,
+)
 
 _CENTROID_PAD = 1.0e6  # padded centroids sit ~1e12 away -> never win argmin
 
 
 def _round_up(v: int, mult: int) -> int:
     return -(-v // mult) * mult
+
+
+def _route_to_ref(impl: str, interpret: bool) -> bool:
+    """True when the jnp oracle should run instead of the kernel."""
+    if impl not in ("auto", "jnp", "pallas"):
+        raise ValueError(f"impl must be 'auto'|'jnp'|'pallas', got {impl!r}")
+    return impl == "jnp" or (
+        impl == "auto" and jax.default_backend() != "tpu" and not interpret
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
@@ -35,4 +62,83 @@ def kmeans_assign(
     return out[:n, 0]
 
 
-__all__ = ["kmeans_assign", "kmeans_assign_ref"]
+def _pad_batched(x: jax.Array, centroids: jax.Array, bn: int):
+    """Shared batched padding: returns (xp, cp, bn_, n, k, s).
+
+    ``bn`` is a caller-supplied chunk size (e.g. SuCoConfig.block_n) and
+    may be arbitrary; the kernel block size ``bn_`` is rounded up to a
+    lane multiple (128) so the n-axis block shapes lower on real TPUs —
+    the weights row makes bn the *minor* dim of one input.
+    """
+    _, n, s = x.shape
+    k = centroids.shape[1]
+    sp = _round_up(s, 128)
+    kp = _round_up(k, 8)
+    bn_ = min(_round_up(bn, 128), _round_up(n, 128))
+    np_ = _round_up(n, bn_)
+    xp = jnp.pad(x, ((0, 0), (0, np_ - n), (0, sp - s)))
+    cp = jnp.pad(centroids, ((0, 0), (0, 0), (0, sp - s)))
+    cp = jnp.pad(cp, ((0, 0), (0, kp - k), (0, 0)), constant_values=_CENTROID_PAD)
+    return xp, cp, bn_, n, k, s
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "impl", "interpret"))
+def kmeans_assign_batched(
+    x: jax.Array,
+    centroids: jax.Array,
+    *,
+    bn: int = 1024,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """``(B, n, s), (B, k, s) -> (B, n)`` int32 batched fused distance+argmin.
+
+    ``impl``: "jnp" | "pallas" | "auto" (pallas iff running on TPU).
+    """
+    if _route_to_ref(impl, interpret):
+        return kmeans_assign_batched_ref(x, centroids)
+    xp, cp, bn_, n, _, _ = _pad_batched(x, centroids, bn)
+    out = kmeans_assign_batched_kernel(xp, cp, bn=bn_, interpret=interpret)
+    return out[:, :n, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "impl", "with_assign", "interpret"))
+def kmeans_assign_stats(
+    x: jax.Array,
+    centroids: jax.Array,
+    *,
+    bn: int = 1024,
+    impl: str = "auto",
+    with_assign: bool = True,
+    interpret: bool = False,
+) -> tuple[jax.Array | None, jax.Array, jax.Array, jax.Array]:
+    """Fused Lloyd statistics: ``(B, n, s), (B, k, s) ->``
+    ``(assign (B, n) int32 | None, sums (B, k, s) f32, counts (B, k) f32,
+    inertia (B,) f32)`` — one streaming pass, no ``(n, k)`` intermediate.
+
+    ``impl``: "jnp" | "pallas" | "auto" (pallas iff running on TPU; the
+    jnp oracle is dense and only for small-n validation).
+    ``with_assign=False`` skips the ``(B, n)`` assignment output — use it
+    for Lloyd iterations, which consume only the statistics.
+    """
+    if _route_to_ref(impl, interpret):
+        a, sums, counts, inertia = kmeans_stats_ref(x, centroids)
+        return (a if with_assign else None), sums, counts, inertia
+    xp, cp, bn_, n, k, s = _pad_batched(x, centroids, bn)
+    np_ = xp.shape[1]
+    w = (jnp.arange(np_, dtype=jnp.int32) < n).astype(jnp.float32)[None, :]
+    a, sums, counts, inertia = kmeans_stats_kernel(
+        xp, cp, w, bn=bn_, with_assign=with_assign, interpret=interpret
+    )
+    a_out = a[:, :n, 0] if with_assign else None
+    return a_out, sums[:, :k, :s], counts[:, :k], inertia[:, 0]
+
+
+__all__ = [
+    "kmeans_assign",
+    "kmeans_assign_batched",
+    "kmeans_assign_stats",
+    "kmeans_assign_ref",
+    "kmeans_assign_batched_ref",
+    "kmeans_stats_ref",
+]

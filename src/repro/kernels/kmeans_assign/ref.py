@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the kmeans_assign kernel."""
+"""Pure-jnp oracles for the kmeans_assign kernel family."""
 
 from __future__ import annotations
 
@@ -16,3 +16,38 @@ def kmeans_assign_ref(x: jax.Array, centroids: jax.Array) -> jax.Array:
         - 2.0 * jnp.einsum("ns,ks->nk", xf, cf, preferred_element_type=jnp.float32)
     )
     return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def kmeans_assign_batched_ref(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    """``(B, n, s), (B, k, s) -> (B, n)`` int32 nearest-centroid ids."""
+    return jax.vmap(kmeans_assign_ref)(x, centroids)
+
+
+def kmeans_stats_ref(
+    x: jax.Array, centroids: jax.Array, weights: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Dense oracle for the fused Lloyd-statistics kernel.
+
+    ``x: (B, n, s)``, ``centroids: (B, k, s)``, ``weights: (n,)`` (or None
+    for all-ones) -> ``(assign (B, n) int32, sums (B, k, s) f32,
+    counts (B, k) f32, inertia (B,) f32)``.  Deliberately materialises the
+    ``(B, n, k)`` one-hot — it is the *reference semantics* the streaming
+    paths must reproduce, not a production path.
+    """
+    b, n, s = x.shape
+    k = centroids.shape[1]
+    xf = x.astype(jnp.float32)
+    cf = centroids.astype(jnp.float32)
+    d2 = (
+        jnp.sum(xf * xf, axis=2)[:, :, None]
+        + jnp.sum(cf * cf, axis=2)[:, None, :]
+        - 2.0 * jnp.einsum("bns,bks->bnk", xf, cf, preferred_element_type=jnp.float32)
+    )
+    a = jnp.argmin(d2, axis=2)  # (B, n)
+    w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    oh = jax.nn.one_hot(a, k, dtype=jnp.float32) * w[None, :, None]  # (B, n, k)
+    sums = jnp.einsum("bnk,bns->bks", oh, xf, preferred_element_type=jnp.float32)
+    counts = jnp.sum(oh, axis=1)  # (B, k)
+    best = jnp.min(d2, axis=2)  # (B, n)
+    inertia = jnp.sum(best * w[None, :], axis=1)  # (B,)
+    return a.astype(jnp.int32), sums, counts, inertia

@@ -24,7 +24,41 @@ import json
 import re
 from collections import defaultdict
 
-__all__ = ["analyze_hlo", "HloStats"]
+__all__ = ["analyze_hlo", "HloStats", "jaxpr_peak_intermediate"]
+
+
+def jaxpr_peak_intermediate(jaxpr) -> int:
+    """Largest intermediate array (in elements) anywhere in a jaxpr tree,
+    excluding top-level inputs/constants.
+
+    A deterministic, device-free stand-in for peak memory used by the
+    streaming-engine memory-bound tests (``tests/test_streaming.py``,
+    ``tests/test_kmeans_streaming.py``) and the index-build benchmark
+    suite (``benchmarks/index_build.py``).
+    """
+    import numpy as _np
+
+    seen = set()
+    best = 0
+
+    def walk(jx):
+        nonlocal best
+        if id(jx) in seen:
+            return
+        seen.add(id(jx))
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "shape"):
+                    best = max(best, int(_np.prod(aval.shape, dtype=_np.int64)))
+            for p in eqn.params.values():
+                for sub in (p if isinstance(p, (list, tuple)) else (p,)):
+                    inner = getattr(sub, "jaxpr", sub)
+                    if hasattr(inner, "eqns"):
+                        walk(inner)
+
+    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return best
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,

@@ -53,6 +53,34 @@ _SCRIPT = textwrap.dedent(
     assert np.array_equal(np.asarray(ids_d), np.asarray(ids_b)), "engine streaming ids"
     assert np.array_equal(np.asarray(dists_d), np.asarray(dists_b)), "engine streaming dists"
 
+    # chunked vs dense sharded *build*, mechanism check at 1 Lloyd iteration:
+    # exact cell_ids/counts, centroids to fp tolerance (build_block_n=300 does
+    # not divide n_loc=512 — the padded tail must not leak).  A single
+    # iteration isolates the accumulator correctness; more iterations let
+    # Lloyd chaotically amplify benign summation-order noise at Voronoi
+    # boundaries, which the full-run check below bounds statistically.
+    cfg1 = dataclasses.replace(cfg, kmeans_iters=1)
+    idx_bd = build_sharded(mesh, x, dataclasses.replace(cfg1, build_block_n=0))
+    idx_bc = build_sharded(mesh, x, dataclasses.replace(cfg1, build_block_n=300))
+    assert np.array_equal(np.asarray(idx_bd.cell_ids), np.asarray(idx_bc.cell_ids)), \
+        "chunked build cell_ids"
+    assert np.array_equal(np.asarray(idx_bd.cell_counts), np.asarray(idx_bc.cell_counts)), \
+        "chunked build cell_counts"
+    np.testing.assert_allclose(np.asarray(idx_bd.centroids1), np.asarray(idx_bc.centroids1),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(idx_bd.centroids2), np.asarray(idx_bc.centroids2),
+                               rtol=1e-5, atol=1e-5)
+
+    # full-depth chunked build: near-total agreement with dense (only
+    # boundary points may flip) and equal recall quality
+    fd = build_sharded(mesh, x, dataclasses.replace(cfg, build_block_n=0))
+    fc = build_sharded(mesh, x, dataclasses.replace(cfg, build_block_n=300))
+    agree = np.mean(np.asarray(fd.cell_ids) == np.asarray(fc.cell_ids))
+    assert agree >= 0.995, f"chunked build diverged from dense: {agree}"
+    ids_fc, _ = query_sharded(mesh, cfg, x, fc, q)
+    r_fc = recall(np.asarray(ids_fc), ds.gt_ids)
+    assert r_fc >= 0.85, f"chunked-build recall too low: {r_fc}"
+
     # shard_index round-trip of a locally built index
     lcfg = SuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=6)
     li = build_index(jnp.asarray(ds.x), lcfg)

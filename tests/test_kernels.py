@@ -12,8 +12,16 @@ except ImportError:  # network-less env: vendored deterministic shim
 
 from repro.kernels.pairwise_l2.ops import pairwise_sqdist
 from repro.kernels.pairwise_l2.ref import pairwise_sqdist_ref
-from repro.kernels.kmeans_assign.ops import kmeans_assign
-from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+from repro.kernels.kmeans_assign.ops import (
+    kmeans_assign,
+    kmeans_assign_batched,
+    kmeans_assign_stats,
+)
+from repro.kernels.kmeans_assign.ref import (
+    kmeans_assign_batched_ref,
+    kmeans_assign_ref,
+    kmeans_stats_ref,
+)
 from repro.kernels.gather_rerank.ops import gather_rerank
 from repro.kernels.gather_rerank.ref import gather_rerank_ref
 from repro.kernels.linear_attn.kernel import linear_attn_kernel
@@ -69,6 +77,65 @@ def test_kmeans_assign_sweep(n, k, s, seed):
     got = kmeans_assign(x, c, interpret=True)
     want = kmeans_assign_ref(x, c)
     assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    n=st.integers(1, 200),
+    k=st.integers(1, 60),
+    s=st.integers(1, 30),
+    seed=st.integers(0, 99),
+)
+def test_kmeans_assign_batched_sweep(b, n, k, s, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, n, s)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(b, k, s)), jnp.float32)
+    got = kmeans_assign_batched(x, c, bn=64, impl="pallas", interpret=True)
+    want = kmeans_assign_batched_ref(x, c)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    n=st.integers(1, 200),
+    k=st.integers(1, 40),
+    s=st.integers(1, 30),
+    seed=st.integers(0, 99),
+)
+def test_kmeans_stats_sweep(b, n, k, s, seed):
+    """The fused stats kernel (distance + argmin + partial-sum accumulation)
+    must reproduce the dense oracle including n % bn != 0 padding."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, n, s)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(b, k, s)), jnp.float32)
+    a, sums, counts, inertia = kmeans_assign_stats(
+        x, c, bn=64, impl="pallas", interpret=True
+    )
+    aw, sw, cw, iw = kmeans_stats_ref(x, c)
+    assert (np.asarray(a) == np.asarray(aw)).all()
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(sw), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(cw), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(inertia), np.asarray(iw), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_kmeans_stats_without_assign():
+    """The stats-only variant (used by Lloyd iterations) must drop the
+    assignment output and keep the statistics bit-identical."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(3, 150, 10)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(3, 12, 10)), jnp.float32)
+    a1, s1, c1, i1 = kmeans_assign_stats(x, c, bn=64, impl="pallas", interpret=True)
+    a0, s0, c0, i0 = kmeans_assign_stats(
+        x, c, bn=64, impl="pallas", with_assign=False, interpret=True
+    )
+    assert a1 is not None and a0 is None
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s0))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c0))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
 
 
 # --------------------------- gather_rerank ----------------------------------

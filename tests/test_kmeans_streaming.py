@@ -1,0 +1,286 @@
+"""Streaming index-construction engine: chunked Lloyd parity with the dense
+reference, minibatch K-means, build-mode routing, the O(block_n) build
+memory claim, and the top_k-based pool merge."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    STREAMING_MIN_N,
+    SuCoConfig,
+    build_index,
+    merge_topk_pool,
+    suco_query,
+)
+from repro.core.kmeans import kmeans, kmeans_batched
+from repro.data import make_dataset
+
+
+def _mixture(n, s, k_true, seed=0, spread=8.0):
+    """Well-separated gaussian mixture: argmin flips from fp summation-order
+    noise are vanishingly unlikely, so dense/chunked parity is exact."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k_true, s)) * spread
+    who = rng.integers(0, k_true, n)
+    return jnp.asarray(centers[who] + rng.normal(size=(n, s)), jnp.float32)
+
+
+# ------------------------- chunked Lloyd parity -----------------------------
+
+
+@pytest.mark.parametrize("block_n", [512, 333, 4096, 1])
+def test_chunked_lloyd_matches_dense(block_n):
+    """block_n=333 does not divide n=3777 — the padded tail must not leak;
+    block_n=1 is the degenerate one-point-chunk case."""
+    n = 3777 if block_n != 1 else 97
+    x = _mixture(n, 12, 9)
+    key = jax.random.key(0)
+    dense = kmeans(key, x, 16, 8)
+    chunk = kmeans(key, x, 16, 8, block_n=block_n)
+    np.testing.assert_array_equal(
+        np.asarray(dense.assignments), np.asarray(chunk.assignments)
+    )
+    np.testing.assert_allclose(
+        np.asarray(dense.centroids), np.asarray(chunk.centroids), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        float(dense.inertia), float(chunk.inertia), rtol=1e-5
+    )
+
+
+def test_chunked_lloyd_empty_clusters():
+    """Duplicate-heavy data collapses centroids: empty clusters must keep the
+    previous centroid on both paths, chunks owning no member of some cluster
+    must contribute zero, and nothing may go NaN."""
+    rng = np.random.default_rng(1)
+    base = rng.normal(size=(5, 6)).astype(np.float32) * 10
+    x = jnp.asarray(base[rng.integers(0, 5, 400)])  # only 5 distinct points
+    key = jax.random.key(3)
+    dense = kmeans(key, x, 12, 6)  # k=12 >> 5 distinct values -> empties
+    chunk = kmeans(key, x, 12, 6, block_n=64)
+    assert np.isfinite(np.asarray(chunk.centroids)).all()
+    np.testing.assert_array_equal(
+        np.asarray(dense.assignments), np.asarray(chunk.assignments)
+    )
+    np.testing.assert_allclose(
+        np.asarray(dense.centroids), np.asarray(chunk.centroids), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_chunked_lloyd_batched_parity():
+    xs = jnp.stack([_mixture(1000, 8, 7, seed=i) for i in range(6)])
+    key = jax.random.key(1)
+    dense = kmeans_batched(key, xs, 10, 6)
+    chunk = kmeans_batched(key, xs, 10, 6, block_n=256)
+    np.testing.assert_array_equal(
+        np.asarray(dense.assignments), np.asarray(chunk.assignments)
+    )
+    np.testing.assert_allclose(
+        np.asarray(dense.centroids), np.asarray(chunk.centroids), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_kmeans_validates_args():
+    x = _mixture(100, 4, 3)
+    key = jax.random.key(0)
+    with pytest.raises(ValueError, match="algo"):
+        kmeans(key, x, 4, 2, algo="bogus")
+    with pytest.raises(ValueError, match="block_n"):
+        kmeans(key, x, 4, 2, block_n=-1)
+    with pytest.raises(ValueError, match="impl"):
+        kmeans(key, x, 4, 2, impl="cuda")
+
+
+# ----------------------------- minibatch ------------------------------------
+
+
+def test_minibatch_deterministic_and_converges():
+    xs = jnp.stack([_mixture(2000, 8, 6, seed=i) for i in range(4)])
+    key = jax.random.key(2)
+    lloyd = kmeans_batched(key, xs, 8, 8)
+    mb1 = kmeans_batched(key, xs, 8, 48, algo="minibatch", block_n=512)
+    mb2 = kmeans_batched(key, xs, 8, 48, algo="minibatch", block_n=512)
+    np.testing.assert_array_equal(np.asarray(mb1.centroids), np.asarray(mb2.centroids))
+    np.testing.assert_array_equal(
+        np.asarray(mb1.assignments), np.asarray(mb2.assignments)
+    )
+    assert mb1.assignments.shape == lloyd.assignments.shape
+    assert mb1.centroids.shape == lloyd.centroids.shape
+    # Approximate mode: within a modest factor of the Lloyd fixed point.
+    assert np.all(np.asarray(mb1.inertia) <= 1.5 * np.asarray(lloyd.inertia) + 1e-3)
+
+
+# --------------------------- build-mode routing ------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    ds = make_dataset("gaussian_mixture", 4000, 48, m=8, k=10, seed=0)
+    return ds, jnp.asarray(ds.x)
+
+
+def test_build_chunked_matches_dense(small_ds):
+    _, x = small_ds
+    base = SuCoConfig(n_subspaces=8, sqrt_k=24, kmeans_iters=8, seed=0)
+    dense = build_index(x, dataclasses.replace(base, build_mode="dense"))
+    for bn in (512, 333):  # 333 does not divide n=4000
+        chunk = build_index(
+            x, dataclasses.replace(base, build_mode="chunked", block_n=bn)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(dense.cell_ids), np.asarray(chunk.cell_ids)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(dense.cell_counts), np.asarray(chunk.cell_counts)
+        )
+        np.testing.assert_allclose(
+            np.asarray(dense.centroids1), np.asarray(chunk.centroids1),
+            rtol=1e-5, atol=1e-5,
+        )
+        np.testing.assert_allclose(
+            np.asarray(dense.centroids2), np.asarray(chunk.centroids2),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def test_build_minibatch_quality(small_ds):
+    ds, x = small_ds
+    q = jnp.asarray(ds.queries)
+    cfg = SuCoConfig(
+        n_subspaces=8, sqrt_k=24, kmeans_iters=24, seed=0,
+        build_mode="minibatch", block_n=512,
+    )
+    idx = build_index(x, cfg)
+    res = suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02)
+    got = np.asarray(res.ids)
+    rec = np.mean([len(set(got[i]) & set(ds.gt_ids[i])) / 10 for i in range(len(got))])
+    assert rec >= 0.9, f"minibatch-built index recall too low: {rec}"
+
+
+def test_build_mode_validation(small_ds):
+    _, x = small_ds
+    with pytest.raises(ValueError, match="build_mode"):
+        build_index(x, SuCoConfig(build_mode="bogus"))
+    with pytest.raises(ValueError, match="block_n"):
+        build_index(x, SuCoConfig(build_mode="chunked", block_n=0))
+
+
+def test_assign_ops_validate_impl():
+    from repro.kernels.kmeans_assign.ops import kmeans_assign_stats
+
+    x = jnp.zeros((1, 8, 4), jnp.float32)
+    c = jnp.zeros((1, 2, 4), jnp.float32)
+    with pytest.raises(ValueError, match="impl"):
+        kmeans_assign_stats(x, c, impl="jnpp")
+
+
+def test_build_auto_dispatch_threshold(small_ds):
+    """auto == dense below STREAMING_MIN_N (and this dataset is below it)."""
+    _, x = small_ds
+    assert x.shape[0] < STREAMING_MIN_N
+    base = SuCoConfig(n_subspaces=4, sqrt_k=16, kmeans_iters=3, seed=0)
+    auto = build_index(x, base)
+    dense = build_index(x, dataclasses.replace(base, build_mode="dense"))
+    np.testing.assert_array_equal(np.asarray(auto.cell_ids), np.asarray(dense.cell_ids))
+
+
+# --------------------------- score_impl plumbing ----------------------------
+
+
+def test_suco_query_exposes_score_impl(small_ds):
+    ds, x = small_ds
+    q = jnp.asarray(ds.queries)
+    idx = build_index(x, SuCoConfig(n_subspaces=4, sqrt_k=16, kmeans_iters=3, seed=0))
+    auto = suco_query(x, idx, q, k=10, alpha=0.05, beta=0.02, mode="streaming")
+    jnp_ = suco_query(
+        x, idx, q, k=10, alpha=0.05, beta=0.02, mode="streaming", score_impl="jnp"
+    )
+    np.testing.assert_array_equal(np.asarray(auto.ids), np.asarray(jnp_.ids))
+    np.testing.assert_array_equal(np.asarray(auto.dists), np.asarray(jnp_.dists))
+
+
+# ------------------------------ pool merge ----------------------------------
+
+
+def test_merge_topk_pool_topk_equals_sort():
+    """Under the streaming invariant (ascending block ids) the top_k merge is
+    bit-identical to the two-key sort merge at every step of the scan."""
+    rng = np.random.default_rng(0)
+    m, n, p, bn = 5, 2000, 64, 128
+    scores = jnp.asarray(rng.integers(0, 5, size=(m, n)), jnp.int32)  # many ties
+    int_max = np.iinfo(np.int32).max
+    pools = {
+        impl: (
+            jnp.full((m, p), -1, jnp.int32),
+            jnp.full((m, p), int_max, jnp.int32),
+        )
+        for impl in ("sort", "topk")
+    }
+    for start in range(0, n, bn):
+        blk = scores[:, start:start + bn]
+        ids = jnp.broadcast_to(
+            jnp.arange(start, start + blk.shape[1], dtype=jnp.int32), blk.shape
+        )
+        for impl in pools:
+            pools[impl] = merge_topk_pool(*pools[impl], blk, ids, impl=impl)
+        np.testing.assert_array_equal(
+            np.asarray(pools["sort"][0]), np.asarray(pools["topk"][0])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(pools["sort"][1]), np.asarray(pools["topk"][1])
+        )
+    want_s, want_i = jax.lax.top_k(scores, p)
+    np.testing.assert_array_equal(np.asarray(pools["topk"][0]), np.asarray(want_s))
+    np.testing.assert_array_equal(np.asarray(pools["topk"][1]), np.asarray(want_i))
+
+
+def test_merge_topk_pool_rejects_bad_impl():
+    z = jnp.zeros((1, 4), jnp.int32)
+    with pytest.raises(ValueError, match="impl"):
+        merge_topk_pool(z, z, z, z, impl="bogus")
+
+
+# ------------------------------ memory model --------------------------------
+
+from repro.launch.hlo_analysis import jaxpr_peak_intermediate as _max_intermediate_size
+
+
+def test_build_chunked_never_materialises_n_by_k():
+    """The acceptance bound: every live intermediate of the chunked build is
+    O(2Ns * block_n * max(sqrtK, h_max)) per chunk plus the O(n * d)
+    data views themselves — in particular nothing of size (n, sqrtK)
+    exists, while the dense build provably allocates one."""
+    n, d, ns, sqrt_k, bn = 20_000, 16, 4, 32, 512
+    x = _mixture(n, d, 10, seed=1)
+    base = SuCoConfig(n_subspaces=ns, sqrt_k=sqrt_k, kmeans_iters=2, seed=0)
+
+    chunk_jaxpr = jax.make_jaxpr(
+        lambda xx: build_index(
+            xx, dataclasses.replace(base, build_mode="chunked", block_n=bn)
+        ).cell_ids
+    )(x)
+    dense_jaxpr = jax.make_jaxpr(
+        lambda xx: build_index(
+            xx, dataclasses.replace(base, build_mode="dense")
+        ).cell_ids
+    )(x)
+
+    h_max = (d // ns + 1) // 2  # 2
+    n_pad = -(-n // bn) * bn
+    codebooks = 2 * ns
+    allowed = max(
+        codebooks * n_pad * h_max,  # the blocked data views (O(n*d), data-sized)
+        n * d,  # the permuted input itself
+        2 * codebooks * bn * max(sqrt_k, h_max),  # per-chunk distance + one-hot
+        ns * sqrt_k * sqrt_k,  # cell_counts
+    )
+    got = _max_intermediate_size(chunk_jaxpr)
+    assert got <= allowed, f"chunked build intermediate {got} > allowed {allowed}"
+    assert got < codebooks * n * sqrt_k, (
+        f"chunked build materialised an (n, k)-sized array: {got}"
+    )
+    assert _max_intermediate_size(dense_jaxpr) >= codebooks * n * sqrt_k

@@ -179,31 +179,7 @@ def test_rerank_candidates_matches_rerank(small):
 
 # ------------------------------ memory model --------------------------------
 
-
-def _max_intermediate_size(jaxpr) -> int:
-    """Largest intermediate array (in elements) anywhere in a jaxpr tree,
-    excluding top-level inputs/constants."""
-    seen = set()
-    best = 0
-
-    def walk(jx):
-        nonlocal best
-        if id(jx) in seen:
-            return
-        seen.add(id(jx))
-        for eqn in jx.eqns:
-            for v in eqn.outvars:
-                aval = getattr(v, "aval", None)
-                if aval is not None and hasattr(aval, "shape"):
-                    best = max(best, int(np.prod(aval.shape, dtype=np.int64)))
-            for p in eqn.params.values():
-                for sub in (p if isinstance(p, (list, tuple)) else (p,)):
-                    inner = getattr(sub, "jaxpr", sub)
-                    if hasattr(inner, "eqns"):
-                        walk(inner)
-
-    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
-    return best
+from repro.launch.hlo_analysis import jaxpr_peak_intermediate as _max_intermediate_size
 
 
 def test_streaming_never_materialises_m_by_n():
