@@ -7,6 +7,12 @@ the dry-run artifacts when present).
 writes ``BENCH_index_build.json`` (build wall time + peak-intermediate
 estimate per mode for n in {1e4, 1e5, 1e6}) — the artifact CI tracks for
 the perf trajectory of ``build_index``.
+
+``--suite serve`` runs the query-serving suite (warmed SuCoEngine behind
+the continuous micro-batching AnnServer) and writes ``BENCH_serve.json``
+(QPS + p50/p99 latency per traffic mix, zero-retrace-after-warmup
+asserted).  ``--suite serve --toy`` is the CI smoke form: shrunk sizes,
+writes ``BENCH_serve.toy.json``.
 """
 
 from __future__ import annotations
@@ -27,17 +33,23 @@ MODULES = (
     "benchmarks.micro_merge_pool",
 )
 
-SUITES = {"index_build": "benchmarks.index_build"}
+SUITES = {"index_build": "benchmarks.index_build", "serve": "benchmarks.serve"}
 
 
-def _run_suite(name: str) -> None:
+def _run_suite(name: str, extra: list[str]) -> None:
     import importlib
+    import inspect
 
     if name not in SUITES:
         raise SystemExit(f"unknown suite {name!r}; available: {sorted(SUITES)}")
     mod = importlib.import_module(SUITES[name])
+    kwargs = {}
+    if "--toy" in extra:
+        if "toy" not in inspect.signature(mod.run).parameters:
+            raise SystemExit(f"suite {name!r} does not support --toy")
+        kwargs["toy"] = True
     print("name,us_per_call,derived")
-    for row_name, us, derived in mod.run():
+    for row_name, us, derived in mod.run(**kwargs):
         print(f"{row_name},{us:.1f},{derived}", flush=True)
 
 
@@ -49,7 +61,7 @@ def main() -> None:
         idx = argv.index("--suite")
         if idx + 1 >= len(argv):
             raise SystemExit("--suite requires a name (e.g. index_build)")
-        _run_suite(argv[idx + 1])
+        _run_suite(argv[idx + 1], argv[idx + 2:])
         return
     only = argv[0] if argv else None
     print("name,us_per_call,derived")

@@ -1,0 +1,164 @@
+"""Serving perf suite: the warmed SuCoEngine behind the continuous
+micro-batching AnnServer.
+
+Run via ``python -m benchmarks.run --suite serve`` — emits
+``BENCH_serve.json`` so the query-serving trajectory (QPS, p50/p99 latency
+per traffic mix) is tracked from PR 3 on, next to the index-build artifact.
+
+Per traffic mix the driver submits bursts of heterogeneous ``(query, k)``
+requests, steps the server until drained, and records:
+
+* ``qps``, ``p50_ms`` / ``p99_ms`` / ``mean_ms`` — per-request latency from
+  admission to host-side materialisation;
+* ``retraces_after_warmup`` — the serving invariant: the engine pre-compiles
+  one executable per (bucket, k) in the mix, so the jit cache size must be
+  flat across every step (the JSON records it per step; any growth is a
+  retrace on the hot path and fails the suite's own assertion).
+
+``--toy`` (CI smoke) shrinks the dataset/mixes and writes
+``BENCH_serve.toy.json`` so the tracked artifact is never clobbered by a
+smoke run.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+
+from benchmarks.common import Row
+from repro.core import EnginePolicy, SuCoConfig, SuCoEngine, batch_bucket
+from repro.data import GENERATORS
+from repro.serve.ann import AnnRequest, AnnServer, latency_summary
+
+OUT_PATH = Path("BENCH_serve.json")
+TOY_OUT_PATH = Path("BENCH_serve.toy.json")
+
+# Traffic mixes: bursts of single-query requests; sizes are the burst
+# lengths the admission queue sees between steps, ks the per-request k mix.
+MIXES = (
+    dict(name="steady_b8", sizes=(8,), ks=(10,), bursts=24),
+    dict(name="mixed_batch", sizes=(1, 2, 5, 8, 16), ks=(10,), bursts=20),
+    dict(name="mixed_batch_k", sizes=(1, 4, 16), ks=(5, 10), bursts=20),
+)
+
+FULL = dict(n=48_000, d=32, sqrt_k=16, n_subspaces=8, kmeans_iters=3,
+            max_batch=16, mixes=MIXES)
+TOY = dict(n=4_000, d=16, sqrt_k=8, n_subspaces=4, kmeans_iters=2,
+           max_batch=8,
+           mixes=tuple(dict(m, bursts=4) for m in MIXES))
+
+
+def _run_mix(engine: SuCoEngine, mix: dict, max_batch: int, rng) -> dict:
+    server = AnnServer(engine, max_batch=max_batch)
+    compile_start = engine.compile_count
+    x = np.asarray(engine.x)
+    rid = 0
+    for b in range(mix["bursts"]):
+        size = int(mix["sizes"][b % len(mix["sizes"])])
+        for _ in range(size):
+            q = x[rng.integers(0, x.shape[0])] + rng.normal(
+                scale=0.01, size=x.shape[1]
+            ).astype(np.float32)
+            server.submit(AnnRequest(rid, q, k=int(rng.choice(mix["ks"]))))
+            rid += 1
+        server.run_until_drained()
+    done = server.completed
+    rec = dict(
+        name=mix["name"],
+        sizes=list(mix["sizes"]),
+        ks=list(mix["ks"]),
+        steps=len(server.steps),
+        compile_count_per_step=[s.compile_count for s in server.steps],
+        compile_count_start=compile_start,
+        compile_count_end=engine.compile_count,
+        retraces_after_warmup=engine.compile_count - compile_start,
+        **latency_summary(done),
+    )
+    return rec
+
+
+def collect(*, toy: bool = False, out_path: Path | None = None) -> dict:
+    scale = TOY if toy else FULL
+    if out_path is None:
+        out_path = TOY_OUT_PATH if toy else OUT_PATH
+    x = np.asarray(
+        GENERATORS["gaussian_mixture"](scale["n"], scale["d"], 0)
+    ).astype(np.float32)
+    policy = EnginePolicy(alpha=0.05, beta=0.01)
+    config = SuCoConfig(
+        n_subspaces=scale["n_subspaces"], sqrt_k=scale["sqrt_k"],
+        kmeans_iters=scale["kmeans_iters"], seed=0,
+    )
+    t0 = time.perf_counter()
+    engine = SuCoEngine.build(x, config, policy=policy)
+    build_s = time.perf_counter() - t0
+
+    # Warm every (bucket, k) the mixes can produce: micro-batches are capped
+    # at max_batch, so the bucket set is bucket(1..max_batch) x union(ks).
+    all_ks = sorted({k for m in scale["mixes"] for k in m["ks"]})
+    t0 = time.perf_counter()
+    warm_compiles = engine.warmup(
+        batch_sizes=range(1, scale["max_batch"] + 1), ks=all_ks
+    )
+    warmup_s = time.perf_counter() - t0
+
+    rng = np.random.default_rng(0)
+    mixes = [_run_mix(engine, m, scale["max_batch"], rng) for m in scale["mixes"]]
+    for m in mixes:
+        assert m["retraces_after_warmup"] == 0, (
+            f"mix {m['name']} retraced {m['retraces_after_warmup']} times "
+            "after warmup — the engine bucketing failed to cover the traffic"
+        )
+    payload = dict(
+        meta=dict(
+            schema="suco-serve-v1",
+            backend=jax.default_backend(),
+            toy=toy,
+            n=scale["n"],
+            d=scale["d"],
+            engine=dict(
+                mode=engine.mode,
+                alpha=policy.alpha,
+                beta=policy.beta,
+                block_n=policy.block_n,
+                batch_buckets=list(policy.batch_buckets),
+                max_batch=scale["max_batch"],
+            ),
+            build_s=round(build_s, 3),
+            warmup_s=round(warmup_s, 3),
+            warm_compiles=warm_compiles,
+            executables=engine.compile_count,
+        ),
+        mixes=mixes,
+    )
+    out_path.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def run(*, toy: bool = False) -> list[Row]:
+    payload = collect(toy=toy)
+    rows: list[Row] = []
+    for m in payload["mixes"]:
+        us = 1e6 / m["qps"] if m["qps"] else float("nan")
+        derived = (
+            f"qps={m['qps']:.1f};p50_ms={m['p50_ms']:.2f};"
+            f"p99_ms={m['p99_ms']:.2f};steps={m['steps']};"
+            f"retraces={m['retraces_after_warmup']}"
+        )
+        rows.append((f"serve/{m['name']}", us, derived))
+    meta = payload["meta"]
+    rows.append((
+        "serve/warmup",
+        meta["warmup_s"] * 1e6,
+        f"executables={meta['executables']};mode={meta['engine']['mode']}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,17 +1,26 @@
-"""ANN search demo: theory-driven parameter choice, SC-Linear vs SuCo vs
-competitors, L1 and L2 metrics.
+"""ANN search demo: theory-driven parameter choice, SC-Linear vs the
+SuCoEngine serving subsystem vs competitors, L1 and L2 metrics, and the
+persisted-index artifact round trip.
 
     PYTHONPATH=src python examples/ann_search_demo.py
 """
 
+import tempfile
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.baselines import IVFFlat, HNSWLite
-from repro.core import SuCoConfig, build_index, contiguous_spec, sc_linear_query, suco_query
+from repro.core import (
+    EnginePolicy,
+    SuCoConfig,
+    SuCoEngine,
+    contiguous_spec,
+    sc_linear_query,
+)
 from repro.core.theory import subspace_statistics, suggest_parameters
 from repro.data import exact_knn, make_dataset, recall
 
@@ -36,21 +45,37 @@ def main() -> None:
     print(f"recall={recall(np.asarray(res.ids), ds.gt_ids):.4f} "
           f"({(time.perf_counter()-t0)*1e3:.0f} ms incl. compile)")
 
-    print("\n== SuCo (Algorithms 2-4) ==")
-    index = build_index(x, SuCoConfig(n_subspaces=sugg["n_subspaces"], sqrt_k=32,
-                                      kmeans_iters=8))
-    res = suco_query(x, index, q, k=10, alpha=alpha, beta=beta)
-    jax.block_until_ready(res.ids)
+    print("\n== SuCoEngine (Algorithms 2-4 as a serving subsystem) ==")
+    config = SuCoConfig(n_subspaces=sugg["n_subspaces"], sqrt_k=32, kmeans_iters=8)
+    engine = SuCoEngine.build(x, config, policy=EnginePolicy(alpha=alpha, beta=beta))
+    engine.warmup(batch_sizes=(q.shape[0],), ks=(10,))  # pre-compile the bucket
     t0 = time.perf_counter()
-    res = suco_query(x, index, q, k=10, alpha=alpha, beta=beta)
+    res = engine.query(q, k=10)
     jax.block_until_ready(res.ids)
     dt = time.perf_counter() - t0
     print(f"recall={recall(np.asarray(res.ids), ds.gt_ids):.4f} "
-          f"query {dt*1e3:.1f} ms, index {index.memory_bytes()/1e6:.1f} MB")
+          f"query {dt*1e3:.1f} ms (warmed, mode={engine.mode}), "
+          f"index {engine.index.memory_bytes()/1e6:.1f} MB, "
+          f"executables {engine.compile_count}")
+
+    print("\n== index persistence (save/load artifact) ==")
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "suco_index.npz"
+        engine.save(path, config)
+        served = SuCoEngine.from_artifact(
+            path, x, policy=EnginePolicy(alpha=alpha, beta=beta)
+        )
+        res2 = served.query(q, k=10)
+        same = bool(np.array_equal(np.asarray(res.ids), np.asarray(res2.ids)))
+        print(f"artifact {path.stat().st_size/1e6:.1f} MB, "
+              f"loaded engine bit-identical: {same}")
 
     print("\n== L1 metric (Table 5) ==")
     gt_l1, _ = exact_knn(ds.x, ds.queries, 10, metric="l1")
-    res = suco_query(x, index, q, k=10, alpha=alpha, beta=beta, metric="l1")
+    l1_engine = SuCoEngine(
+        x, engine.index, EnginePolicy(alpha=alpha, beta=beta, metric="l1")
+    )
+    res = l1_engine.query(q, k=10)
     print(f"recall(L1)={recall(np.asarray(res.ids), gt_l1):.4f}")
 
     print("\n== competitors ==")

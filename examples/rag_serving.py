@@ -1,11 +1,11 @@
 """End-to-end serving driver: retrieval-augmented generation.
 
 A small LM embeds a synthetic document corpus (mean-pooled hidden states),
-SuCo indexes the embeddings, and batched requests flow through
-retrieve -> prompt-augment -> prefill -> continuous-batching decode.
-
-This is the paper's technique deployed as the retrieval layer of an LLM
-serving stack — the framework's primary end-to-end driver.
+a SuCoEngine serves the embedding index, and batched requests flow through
+the continuous micro-batching AnnServer (retrieve) -> prompt-augment ->
+prefill -> continuous-batching decode.  Both stages share the same
+admission-queue serving design; the retrieval side is the paper's
+technique deployed as the retrieval layer of an LLM serving stack.
 
     PYTHONPATH=src python examples/rag_serving.py
 """
@@ -17,9 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import reduced_config
-from repro.core import SuCoConfig, build_index, suco_query
+from repro.core import EnginePolicy, SuCoConfig, SuCoEngine
 from repro.launch.serve import Request, Server
 from repro.models import Model, backbone
+from repro.serve.ann import AnnRequest, AnnServer, latency_summary
 
 
 def embed(model: Model, params, tokens: jnp.ndarray) -> jnp.ndarray:
@@ -44,11 +45,14 @@ def main() -> None:
     ).reshape(n_docs, cfg.d_model)
     print(f"embedded {n_docs} docs in {time.perf_counter()-t0:.1f}s -> {emb.shape}")
 
-    # --- SuCo index over document embeddings
-    index = build_index(jnp.asarray(emb), SuCoConfig(n_subspaces=8, sqrt_k=16,
-                                                     kmeans_iters=6))
-    print(f"SuCo index: {index.memory_bytes()/1e3:.0f} KB for "
-          f"{emb.nbytes/1e3:.0f} KB of embeddings")
+    # --- SuCoEngine over document embeddings: the persistent retrieval stage
+    engine = SuCoEngine.build(
+        jnp.asarray(emb),
+        SuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=6),
+        policy=EnginePolicy(alpha=0.1, beta=0.05),
+    )
+    print(f"SuCo index: {engine.index.memory_bytes()/1e3:.0f} KB for "
+          f"{emb.nbytes/1e3:.0f} KB of embeddings (mode={engine.mode})")
 
     # --- requests: queries are noisy copies of random docs
     n_req = 6
@@ -57,12 +61,23 @@ def main() -> None:
     queries[:, -2:] = rng.integers(0, cfg.vocab_size, (n_req, 2))
     q_emb = embed(model, params, jnp.asarray(queries))
 
-    res = suco_query(jnp.asarray(emb), index, q_emb, k=3, alpha=0.1, beta=0.05)
-    hit = np.mean([int(t) in set(map(int, ids)) for t, ids in zip(target, res.ids)])
-    print(f"retrieval hit-rate (true doc in top-3): {hit:.2f}")
+    # --- retrieval via the continuous micro-batching ANN server
+    engine.warmup(batch_sizes=(1, 3), ks=(3,))
+    ann = AnnServer(engine, max_batch=3)
+    ann.submit_many(
+        [AnnRequest(i, np.asarray(q_emb[i]), k=3) for i in range(n_req)]
+    )
+    done = ann.run_until_drained()
+    lat = latency_summary(done)
+    hit = np.mean([int(target[r.rid]) in set(map(int, r.ids)) for r in done])
+    print(f"retrieval hit-rate (true doc in top-3): {hit:.2f} "
+          f"({lat['qps']:.0f} qps, p99 {lat['p99_ms']:.1f} ms, "
+          f"{len(ann.steps)} micro-batches, "
+          f"executables {engine.compile_count})")
 
     # --- augment prompts with the top doc and serve
-    top_docs = docs[np.asarray(res.ids[:, 0])]
+    by_rid = {r.rid: r for r in done}
+    top_docs = docs[np.asarray([by_rid[i].ids[0] for i in range(n_req)])]
     prompts = np.concatenate([top_docs, queries], axis=1)  # (n_req, 48)
     reqs = [Request(i, prompts[i]) for i in range(n_req)]
     server = Server(model, params, n_slots=3, max_seq=prompts.shape[1] + 12)

@@ -5,6 +5,7 @@ Public API:
   sc_scores_from_subspaces, sc_linear_query       (Algorithm 1, SC-Linear)
   SuCoConfig, SuCoIndex, build_index, suco_query  (Algorithms 2-4, SuCo)
   activate_cells_sorted, dynamic_activation_lax   (Algorithm 3)
+  SuCoEngine, EnginePolicy, load_index_artifact   (persistent batched serving)
   theory                                          (Theorems 1-2)
 """
 
@@ -23,10 +24,17 @@ from repro.core.sc_linear import (
     sc_scores_from_subspaces,
 )
 from repro.core.suco import (
+    DEFAULT_BATCH_BUCKETS,
+    INDEX_ARTIFACT_VERSION,
     STREAMING_MIN_N,
+    EnginePolicy,
+    EngineStats,
     SuCoConfig,
+    SuCoEngine,
     SuCoIndex,
+    batch_bucket,
     build_index,
+    load_index_artifact,
     suco_cell_ranks,
     suco_query,
     suco_query_streaming,
@@ -48,9 +56,16 @@ __all__ = [
     "rerank_candidates",
     "merge_topk_pool",
     "STREAMING_MIN_N",
+    "DEFAULT_BATCH_BUCKETS",
+    "INDEX_ARTIFACT_VERSION",
+    "EnginePolicy",
+    "EngineStats",
     "SuCoConfig",
+    "SuCoEngine",
     "SuCoIndex",
+    "batch_bucket",
     "build_index",
+    "load_index_artifact",
     "suco_cell_ranks",
     "suco_query",
     "suco_query_streaming",

@@ -39,15 +39,34 @@ def _sqdist_jnp(q: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.maximum(d2, 0.0)
 
 
+def _sqdist_rowwise(q: jax.Array, x: jax.Array) -> jax.Array:
+    """``(m, d), (n, d) -> (m, n)`` squared L2 via the broadcast difference.
+
+    The reduction runs over ``d`` only, so each output element's fp
+    summation order is independent of the batch sizes ``m``/``n`` — unlike
+    the matmul identity, whose tiling (and therefore last-ulp results)
+    varies with shape.  The serving stack relies on this: a query batch
+    zero-padded to a SuCoEngine bucket must return bit-identical distances
+    to the unpadded computation.  O(m*n*d) intermediate — only for small
+    ``n`` (centroid tables, candidate pools), never the full dataset.
+    """
+    diff = q[:, None, :].astype(jnp.float32) - x[None, :, :].astype(jnp.float32)
+    return jnp.sum(diff * diff, axis=-1)
+
+
 def pairwise_sqdist(q: jax.Array, x: jax.Array, *, impl: str = "auto") -> jax.Array:
     """Pairwise squared L2 distances ``(m, d), (n, d) -> (m, n)``.
 
-    ``impl``: "jnp" | "pallas" | "auto" (pallas iff running on TPU).
+    ``impl``: "jnp" | "pallas" | "auto" (pallas iff running on TPU) |
+    "rowwise" (batch-padding-invariant broadcast form, see
+    :func:`_sqdist_rowwise`).
     """
     if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
         from repro.kernels.pairwise_l2 import ops as _ops
 
         return _ops.pairwise_sqdist(q, x)
+    if impl == "rowwise":
+        return _sqdist_rowwise(q, x)
     return _sqdist_jnp(q, x)
 
 

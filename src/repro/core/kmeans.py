@@ -54,10 +54,16 @@ __all__ = [
     "block_batched",
     "lloyd_stats_scan",
     "assign_scan",
+    "init_centroids_pp",
 ]
 
 _ALGOS = ("lloyd", "minibatch")
+_INITS = ("auto", "random", "kmeans++")
 _MINIBATCH_DEFAULT_BLOCK = 4096
+# kmeans++ seeds from a uniform sample of this many points (capped at n):
+# enough for D^2 sampling to separate the modes, independent of dataset size.
+_PP_SAMPLE_PER_K = 32
+_PP_SAMPLE_MIN = 2048
 
 
 class KMeansResult(NamedTuple):
@@ -67,6 +73,9 @@ class KMeansResult(NamedTuple):
     # owning centroid.  Lloyd paths report the last update step's inertia
     # (dense-reference semantics); minibatch reports the final full-data
     # inertia from the assignment pass.
+    cell_counts: jax.Array | None = None  # (B//2, pair_sqrt_k**2) int32 when
+    # requested via ``pair_sqrt_k`` (SuCo IMI occupancy fused into the final
+    # assignment scan); None otherwise.
 
 
 def assign(x: jax.Array, centroids: jax.Array, *, impl: str = "auto") -> jax.Array:
@@ -95,6 +104,68 @@ def _init_centroids(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
     n = x.shape[0]
     idx = jax.random.permutation(key, n)[:k]
     return jnp.take(x, idx, axis=0)
+
+
+def init_centroids_pp(
+    key: jax.Array, x: jax.Array, k: int, *, sample_n: int = 0
+) -> jax.Array:
+    """kmeans++-style D^2 seeding (Arthur & Vassilvitskii) over a sample.
+
+    ``sample_n > 0`` seeds from that many uniformly sampled rows instead of
+    all of ``x`` — the streaming-friendly form: minibatch never touches the
+    full dataset before its final assignment pass, and the seeding keeps
+    that property.  O(sample_n * k) work; deterministic given ``key``.
+    """
+    n = x.shape[0]
+    k_sub, k_first, k_pick = jax.random.split(key, 3)
+    if 0 < sample_n < n:
+        idx = jax.random.permutation(k_sub, n)[:sample_n]
+        xs = jnp.take(x, idx, axis=0)
+    else:
+        xs = x
+    xf = xs.astype(jnp.float32)
+    c0 = xf[jax.random.randint(k_first, (), 0, xs.shape[0])]
+    cents = jnp.zeros((k, x.shape[1]), jnp.float32).at[0].set(c0)
+    d2 = jnp.sum((xf - c0) ** 2, axis=-1)
+
+    def body(carry, inp):
+        cents, d2 = carry
+        i, kt = inp
+        # Sample the next seed with prob ∝ D^2; all-zero D^2 (every sampled
+        # row already a centroid, duplicate-heavy data) falls back to uniform.
+        logits = jnp.log(jnp.maximum(d2, jnp.finfo(jnp.float32).tiny))
+        logits = jnp.where(jnp.sum(d2) > 0, logits, jnp.zeros_like(d2))
+        c = xf[jax.random.categorical(kt, logits)]
+        cents = cents.at[i].set(c)
+        d2 = jnp.minimum(d2, jnp.sum((xf - c) ** 2, axis=-1))
+        return (cents, d2), None
+
+    (cents, _), _ = jax.lax.scan(
+        body,
+        (cents, d2),
+        (jnp.arange(1, k), jax.random.split(k_pick, k - 1)),
+    )
+    return cents.astype(x.dtype)
+
+
+def _init_batched(
+    key: jax.Array, xs: jax.Array, k: int, init: str, algo: str
+) -> jax.Array:
+    """``(B, n, s) -> (B, k, s)`` initial centroids for every problem.
+
+    ``init="auto"`` resolves to kmeans++ for minibatch (whose few sampled
+    steps cannot recover from a bad random seed the way full Lloyd epochs
+    can) and random for lloyd (the paper's choice)."""
+    mode = init
+    if mode == "auto":
+        mode = "kmeans++" if algo == "minibatch" else "random"
+    keys = jax.random.split(key, xs.shape[0])
+    if mode == "random":
+        return jax.vmap(lambda kk, x: _init_centroids(kk, x, k))(keys, xs)
+    sample_n = min(xs.shape[1], max(_PP_SAMPLE_PER_K * k, _PP_SAMPLE_MIN))
+    return jax.vmap(
+        lambda kk, x: init_centroids_pp(kk, x, k, sample_n=sample_n)
+    )(keys, xs)
 
 
 # --------------------------------------------------------------------------
@@ -189,17 +260,31 @@ def assign_scan(
     valid: jax.Array,
     centroids: jax.Array,
     *,
-    cast_init: Callable[[jax.Array], jax.Array] = lambda t: t,
-) -> tuple[jax.Array, jax.Array]:
-    """Chunked final assignment: ``-> (assign (B, nb*bn) int32, inertia (B,))``.
+    cast_init: Callable = lambda t: t,
+    pair_sqrt_k: int = 0,
+) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+    """Chunked final assignment:
+    ``-> (assign (B, nb*bn) int32, inertia (B,), cell_counts | None)``.
 
     Assignments for padded rows are junk — the caller slices ``[:, :n]``;
     the inertia accumulator masks them out.
+
+    ``pair_sqrt_k > 0`` treats the batch as SuCo's paired half-subspace
+    layout — rows ``[:B//2]`` are first halves, ``[B//2:]`` second halves
+    of the same subspaces — and additionally accumulates the IMI cell
+    occupancy ``bincount(a1 * pair_sqrt_k + a2)`` per chunk into a carried
+    ``(B//2, pair_sqrt_k**2) int32`` accumulator: the histogram that used
+    to be a second full pass over ``cell_ids`` rides the assignment scan
+    for free.
     """
     _, b, _, _ = blocks.shape
     cf = centroids.astype(jnp.float32)
+    if pair_sqrt_k and b % 2:
+        raise ValueError(f"pair_sqrt_k needs an even batch, got B={b}")
+    ns = b // 2
 
-    def body(inertia, inp):
+    def body(carry, inp):
+        inertia, counts = carry
         xb, vb = inp
         d2 = jax.vmap(lambda xx, cc: pairwise_sqdist(xx, cc, impl="jnp"))(
             xb.astype(jnp.float32), cf
@@ -207,12 +292,22 @@ def assign_scan(
         a = jnp.argmin(d2, axis=-1).astype(jnp.int32)  # (B, bn)
         w = vb.astype(jnp.float32)
         inertia = inertia + jnp.sum(jnp.min(d2, axis=-1) * w[None, :], axis=1)
-        return inertia, a
+        if pair_sqrt_k:
+            cells = a[:ns] * pair_sqrt_k + a[ns:]  # (ns, bn)
+            rows = jnp.arange(ns, dtype=jnp.int32)[:, None]
+            wb = jnp.broadcast_to(vb.astype(jnp.int32), cells.shape)
+            counts = counts.at[rows, cells].add(wb)
+        return (inertia, counts), a
 
-    init = cast_init(jnp.zeros((b,), jnp.float32))
-    inertia, a_blocks = jax.lax.scan(body, init, (blocks, valid))  # (nb, B, bn)
-    a = a_blocks.transpose(1, 0, 2).reshape(b, -1)
-    return a, inertia
+    counts0 = (
+        jnp.zeros((ns, pair_sqrt_k * pair_sqrt_k), jnp.int32)
+        if pair_sqrt_k
+        else jnp.zeros((), jnp.int32)
+    )
+    init = cast_init((jnp.zeros((b,), jnp.float32), counts0))
+    (inertia, counts), a_blocks = jax.lax.scan(body, init, (blocks, valid))
+    a = a_blocks.transpose(1, 0, 2).reshape(b, -1)  # (B, nb*bn)
+    return a, inertia, counts if pair_sqrt_k else None
 
 
 def _stats_batched(
@@ -249,6 +344,7 @@ def _kmeans_core(
     algo: str,
     block_n: int,
     impl: str,
+    pair_sqrt_k: int = 0,
 ) -> KMeansResult:
     b, n, s = xs.shape
     k = c0.shape[1]
@@ -279,9 +375,10 @@ def _kmeans_core(
             (c0, jnp.zeros((b, k), jnp.float32)),
             jnp.arange(iters, dtype=jnp.int32),
         )
-        a, inertia = _final_assign(xs, c_fin, block_n=bn, pallas=pallas,
-                                   need_inertia=True)
-        return KMeansResult(c_fin, a, inertia)
+        a, inertia, counts = _final_assign(xs, c_fin, block_n=bn, pallas=pallas,
+                                           need_inertia=True,
+                                           pair_sqrt_k=pair_sqrt_k)
+        return KMeansResult(c_fin, a, inertia, counts)
 
     # algo == "lloyd"
     chunked = block_n > 0
@@ -301,9 +398,9 @@ def _kmeans_core(
         return new.astype(c.dtype), inertia
 
     centroids, inertias = jax.lax.scan(lloyd_body, c0, None, length=iters)
-    a, _ = _final_assign(xs, centroids, block_n=block_n, pallas=pallas,
-                         need_inertia=False)
-    return KMeansResult(centroids, a, inertias[-1])
+    a, _, counts = _final_assign(xs, centroids, block_n=block_n, pallas=pallas,
+                                 need_inertia=False, pair_sqrt_k=pair_sqrt_k)
+    return KMeansResult(centroids, a, inertias[-1], counts)
 
 
 def _final_assign(
@@ -313,8 +410,10 @@ def _final_assign(
     block_n: int,
     pallas: bool,
     need_inertia: bool,
-) -> tuple[jax.Array, jax.Array | None]:
-    """Final assignment pass -> (assign (B, n) int32, inertia (B,) f32|None).
+    pair_sqrt_k: int = 0,
+) -> tuple[jax.Array, jax.Array | None, jax.Array | None]:
+    """Final assignment pass
+    -> (assign (B, n) int32, inertia (B,) f32|None, cell_counts|None).
 
     Routed through the batched Pallas kernels on TPU (regardless of
     block_n: they stream internally), the chunked jnp scan when
@@ -323,6 +422,11 @@ def _final_assign(
     the TPU path can use the assign-only kernel and skip the dead
     one-hot/stats accumulation work entirely; minibatch needs the final
     full-data inertia and takes the fused stats kernel.
+
+    ``pair_sqrt_k > 0`` fuses the SuCo IMI occupancy histogram into the
+    scan (see :func:`assign_scan`); the Pallas kernels do not accumulate
+    it, so the TPU path returns None and the caller falls back to a
+    bincount over the assignments.
     """
     b, n, _ = xs.shape
     if pallas:
@@ -330,21 +434,25 @@ def _final_assign(
 
         bn = block_n or 1024
         if not need_inertia:
-            return _ops.kmeans_assign_batched(xs, centroids, bn=bn, impl="pallas"), None
+            a = _ops.kmeans_assign_batched(xs, centroids, bn=bn, impl="pallas")
+            return a, None, None
         a, _, _, inertia = _ops.kmeans_assign_stats(
             xs, centroids, bn=bn, impl="pallas"
         )
-        return a, inertia
+        return a, inertia, None
     blocks, valid = block_batched(xs, block_n or n)
-    a, inertia = assign_scan(blocks, valid, centroids)
-    return a[:, :n], inertia
+    a, inertia, counts = assign_scan(blocks, valid, centroids,
+                                     pair_sqrt_k=pair_sqrt_k)
+    return a[:, :n], inertia, counts
 
 
-def _check_args(algo: str, block_n: int) -> None:
+def _check_args(algo: str, block_n: int, init: str = "auto") -> None:
     if algo not in _ALGOS:
         raise ValueError(f"algo must be one of {_ALGOS}, got {algo!r}")
     if block_n < 0:
         raise ValueError(f"block_n must be >= 0 (0 = dense), got {block_n}")
+    if init not in _INITS:
+        raise ValueError(f"init must be one of {_INITS}, got {init!r}")
 
 
 def kmeans(
@@ -356,6 +464,7 @@ def kmeans(
     algo: str = "lloyd",
     block_n: int = 0,
     impl: str = "auto",
+    init: str = "auto",
 ) -> KMeansResult:
     """K-means with ``iters`` update steps; deterministic given ``key``.
 
@@ -365,10 +474,18 @@ def kmeans(
     (same update rule; centroids and assignments agree with dense up to
     fp summation-order noise at Voronoi boundaries).  ``impl`` selects
     the assignment backend ("auto" = fused Pallas kernels on TPU, jnp
-    elsewhere).
+    elsewhere).  ``init``: "random" | "kmeans++" (sampled D^2 seeding) |
+    "auto" (kmeans++ for minibatch, random for lloyd).
     """
-    _check_args(algo, block_n)
-    c0 = _init_centroids(key, x, k)
+    _check_args(algo, block_n, init)
+    mode = init
+    if mode == "auto":
+        mode = "kmeans++" if algo == "minibatch" else "random"
+    if mode == "random":
+        c0 = _init_centroids(key, x, k)
+    else:
+        sample_n = min(x.shape[0], max(_PP_SAMPLE_PER_K * k, _PP_SAMPLE_MIN))
+        c0 = init_centroids_pp(key, x, k, sample_n=sample_n)
     res = _kmeans_core(key, x[None], c0[None], iters, algo, block_n, impl)
     return KMeansResult(res.centroids[0], res.assignments[0], res.inertia[0])
 
@@ -382,13 +499,18 @@ def kmeans_batched(
     algo: str = "lloyd",
     block_n: int = 0,
     impl: str = "auto",
+    init: str = "auto",
+    pair_sqrt_k: int = 0,
 ) -> KMeansResult:
     """``xs: (B, n, s)`` -> centroids ``(B, k, s)``, assignments ``(B, n)``.
 
     One fused program for all ``B`` codebooks (B = 2*Ns for SuCo); same
-    ``algo``/``block_n``/``impl`` contract as :func:`kmeans`.
+    ``algo``/``block_n``/``impl``/``init`` contract as :func:`kmeans`.
+    ``pair_sqrt_k > 0`` additionally returns the fused IMI cell occupancy
+    ``KMeansResult.cell_counts`` from the final-assignment scan (jnp paths
+    only; the Pallas final assignment leaves it None — see
+    :func:`assign_scan`).
     """
-    _check_args(algo, block_n)
-    keys = jax.random.split(key, xs.shape[0])
-    c0 = jax.vmap(lambda kk, x: _init_centroids(kk, x, k))(keys, xs)
-    return _kmeans_core(key, xs, c0, iters, algo, block_n, impl)
+    _check_args(algo, block_n, init)
+    c0 = _init_batched(key, xs, k, init, algo)
+    return _kmeans_core(key, xs, c0, iters, algo, block_n, impl, pair_sqrt_k)

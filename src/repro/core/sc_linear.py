@@ -80,7 +80,10 @@ def rerank_candidates(
 
     def one(qi: jax.Array, cand_i: jax.Array, cs_i: jax.Array) -> QueryResult:
         xc = jnp.take(x, cand_i, axis=0)  # (p, d)
-        d = pairwise_dist(qi[None], xc, metric)[0]  # (p,)
+        # impl="rowwise": per-element reduction order is independent of the
+        # batch size, so zero-padded serving batches (SuCoEngine buckets)
+        # rerank bit-identically to the unpadded computation.
+        d = pairwise_dist(qi[None], xc, metric, impl="rowwise")[0]  # (p,)
         neg, pos = jax.lax.top_k(-d, k)
         ids = jnp.take(cand_i, pos)
         return QueryResult(ids.astype(jnp.int32), -neg, jnp.take(cs_i, pos))

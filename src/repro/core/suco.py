@@ -60,6 +60,22 @@ Index-build memory model (mirrors the query design; see
 points and chunked at or above it, so large builds never materialise an
 ``(n, sqrtK)`` intermediate.  ``minibatch`` is never auto-selected — it
 trades accuracy and must be requested.
+
+Serving (the persistent subsystem on top of the algorithms):
+
+* :meth:`SuCoIndex.save` / :meth:`SuCoIndex.load` persist the index as a
+  version-stamped npz artifact (bit-identical round trips; unknown
+  versions raise) — :func:`load_index_artifact` also recovers the build
+  config.
+* :class:`SuCoEngine` owns ``(data, index, EnginePolicy)`` for its
+  lifetime and serves ``query(q, k)`` through jitted executables keyed by
+  ``(padded batch bucket, k)`` (:func:`batch_bucket`): after
+  :meth:`SuCoEngine.warmup` covers the traffic mix, no request can
+  retrace.  The dense/streaming/score_impl dispatch lives in the policy,
+  not on the call; :func:`suco_query` stays as the bit-identical
+  back-compat wrapper for one-shot use.  The continuous micro-batching
+  server over the engine is :mod:`repro.serve.ann`; the sharded
+  counterpart is :class:`repro.distributed.engine.ShardedSuCoEngine`.
 """
 
 from __future__ import annotations
@@ -67,10 +83,11 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import subspace as sub
 from repro.core.distances import Metric, pairwise_dist
@@ -89,6 +106,13 @@ __all__ = [
     "suco_query",
     "suco_query_streaming",
     "STREAMING_MIN_N",
+    "INDEX_ARTIFACT_VERSION",
+    "load_index_artifact",
+    "EnginePolicy",
+    "EngineStats",
+    "SuCoEngine",
+    "batch_bucket",
+    "DEFAULT_BATCH_BUCKETS",
 ]
 
 # mode="auto" switches from the dense (m, n) score matrix to the tiled
@@ -97,6 +121,11 @@ __all__ = [
 STREAMING_MIN_N = 32_768
 
 _BUILD_MODES = ("auto", "dense", "chunked", "minibatch")
+
+# SuCoIndex.save/load artifact contract: a plain .npz, tagged and
+# version-stamped so a serving process refuses artifacts it cannot trust.
+_ARTIFACT_MAGIC = "suco-index"
+INDEX_ARTIFACT_VERSION = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +177,47 @@ class SuCoIndex:
             for a in (self.centroids1, self.centroids2, self.cell_ids, self.cell_counts)
         )
 
+    def save(self, path, config: SuCoConfig | None = None) -> None:
+        """Persist the index as a version-stamped ``.npz`` artifact.
+
+        The artifact holds the four index arrays byte-exactly, the
+        :class:`~repro.core.subspace.SubspaceSpec`, and (when given) the
+        build :class:`SuCoConfig` — everything a serving process needs to
+        reconstruct the index without the original build.  Round trips are
+        bit-identical.  Written via an open file handle so the exact
+        ``path`` is honoured (``np.savez`` alone appends ``.npz``).
+        """
+        payload: dict[str, np.ndarray] = {
+            "artifact": np.asarray(_ARTIFACT_MAGIC),
+            "version": np.asarray(INDEX_ARTIFACT_VERSION, np.int32),
+            "centroids1": np.asarray(self.centroids1),
+            "centroids2": np.asarray(self.centroids2),
+            "cell_ids": np.asarray(self.cell_ids),
+            "cell_counts": np.asarray(self.cell_counts),
+            "sqrt_k": np.asarray(self.sqrt_k, np.int32),
+            "spec_d": np.asarray(self.spec.d, np.int32),
+            "spec_n_subspaces": np.asarray(self.spec.n_subspaces, np.int32),
+            "spec_perm": np.asarray(self.spec.perm, np.int32),
+            "spec_bounds": np.asarray(self.spec.bounds, np.int32),
+        }
+        if config is not None:
+            payload.update(
+                config_n_subspaces=np.asarray(config.n_subspaces, np.int32),
+                config_sqrt_k=np.asarray(config.sqrt_k, np.int32),
+                config_kmeans_iters=np.asarray(config.kmeans_iters, np.int32),
+                config_seed=np.asarray(config.seed, np.int32),
+                config_build_mode=np.asarray(config.build_mode),
+                config_block_n=np.asarray(config.block_n, np.int32),
+            )
+        with open(path, "wb") as f:
+            np.savez(f, **payload)
+
+    @classmethod
+    def load(cls, path) -> "SuCoIndex":
+        """Load an index artifact written by :meth:`save` (bit-identical)."""
+        index, _ = load_index_artifact(path)
+        return index
+
 
 @functools.partial(
     jax.jit, static_argnames=("spec", "sqrt_k", "iters", "algo", "block_n")
@@ -168,12 +238,19 @@ def _build(
     both = jnp.concatenate([h1, h2], axis=0)  # (2Ns, n, h_max)
     # block_n=0 is the dense reference; >0 streams every K-means pass —
     # including the final assignment feeding cell_ids — in block_n chunks.
-    res = kmeans_batched(key, both, sqrt_k, iters, algo=algo, block_n=block_n)
+    # pair_sqrt_k fuses the IMI occupancy histogram into that final
+    # assignment scan, so cell_counts costs no extra pass over the data.
+    res = kmeans_batched(
+        key, both, sqrt_k, iters, algo=algo, block_n=block_n, pair_sqrt_k=sqrt_k
+    )
     a1, a2 = res.assignments[:ns], res.assignments[ns:]
     cell_ids = (a1 * sqrt_k + a2).astype(jnp.int32)  # (Ns, n)
-    counts = jax.vmap(
-        lambda c: jnp.bincount(c, length=sqrt_k * sqrt_k).astype(jnp.int32)
-    )(cell_ids)
+    if res.cell_counts is not None:
+        counts = res.cell_counts
+    else:  # Pallas final assignment (TPU) does not fuse the histogram
+        counts = jax.vmap(
+            lambda c: jnp.bincount(c, length=sqrt_k * sqrt_k).astype(jnp.int32)
+        )(cell_ids)
     return res.centroids[:ns], res.centroids[ns:], cell_ids, counts
 
 
@@ -210,6 +287,50 @@ def build_index(x: jax.Array, config: SuCoConfig, *, spec: sub.SubspaceSpec | No
         block_n=block_n,
     )
     return SuCoIndex(c1, c2, cell_ids, counts, spec=spec, sqrt_k=config.sqrt_k)
+
+
+def load_index_artifact(path) -> tuple[SuCoIndex, SuCoConfig | None]:
+    """Load a ``SuCoIndex.save`` artifact -> ``(index, build config | None)``.
+
+    Validates the artifact tag and version before touching any payload;
+    an unknown version (or a foreign npz) raises ``ValueError`` instead of
+    silently deserialising garbage into a serving process.
+    """
+    with np.load(path, allow_pickle=False) as z:
+        names = set(z.files)
+        if "artifact" not in names or str(z["artifact"][()]) != _ARTIFACT_MAGIC:
+            raise ValueError(f"{path!s} is not a {_ARTIFACT_MAGIC} artifact")
+        version = int(z["version"][()])
+        if version != INDEX_ARTIFACT_VERSION:
+            raise ValueError(
+                f"unsupported {_ARTIFACT_MAGIC} artifact version {version} "
+                f"(this build reads version {INDEX_ARTIFACT_VERSION})"
+            )
+        spec = sub.SubspaceSpec(
+            d=int(z["spec_d"][()]),
+            n_subspaces=int(z["spec_n_subspaces"][()]),
+            perm=tuple(int(p) for p in z["spec_perm"]),
+            bounds=tuple(int(b) for b in z["spec_bounds"]),
+        )
+        index = SuCoIndex(
+            centroids1=jnp.asarray(z["centroids1"]),
+            centroids2=jnp.asarray(z["centroids2"]),
+            cell_ids=jnp.asarray(z["cell_ids"]),
+            cell_counts=jnp.asarray(z["cell_counts"]),
+            spec=spec,
+            sqrt_k=int(z["sqrt_k"][()]),
+        )
+        config = None
+        if "config_n_subspaces" in names:
+            config = SuCoConfig(
+                n_subspaces=int(z["config_n_subspaces"][()]),
+                sqrt_k=int(z["config_sqrt_k"][()]),
+                kmeans_iters=int(z["config_kmeans_iters"][()]),
+                seed=int(z["config_seed"][()]),
+                build_mode=str(z["config_build_mode"][()]),
+                block_n=int(z["config_block_n"][()]),
+            )
+    return index, config
 
 
 # --------------------------------------------------------------------------
@@ -316,8 +437,15 @@ def _centroid_dists(
     ``(Ns, m, sqrtK)`` for each half."""
     qp = sub.permute(index.spec, q)
     qh1, qh2 = sub.split_halves_padded(index.spec, qp)  # (Ns, m, h_max)
-    d1 = jax.vmap(lambda qq, cc: pairwise_dist(qq, cc, metric))(qh1, index.centroids1)
-    d2 = jax.vmap(lambda qq, cc: pairwise_dist(qq, cc, metric))(qh2, index.centroids2)
+    # impl="rowwise": centroid distances must be invariant to batch padding
+    # (they order the Dynamic-Activation prefix) so a SuCoEngine bucket
+    # activates exactly the cells the unpadded batch would.
+    d1 = jax.vmap(
+        lambda qq, cc: pairwise_dist(qq, cc, metric, impl="rowwise")
+    )(qh1, index.centroids1)
+    d2 = jax.vmap(
+        lambda qq, cc: pairwise_dist(qq, cc, metric, impl="rowwise")
+    )(qh2, index.centroids2)
     return d1, d2
 
 
@@ -489,3 +617,213 @@ def suco_query(
     scores = suco_scores(index, q, c, metric)  # (m, n)
     n_candidates = max(k, int(beta * n))
     return rerank(x, q, scores, k, n_candidates, metric)
+
+
+# --------------------------------------------------------------------------
+# SuCoEngine: the persistent, batched serving subsystem
+# --------------------------------------------------------------------------
+
+# Padded batch-size buckets: every request batch is zero-padded up to the
+# smallest bucket that fits, so the engine compiles one executable per
+# (bucket, k) instead of one per observed batch size.
+DEFAULT_BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def batch_bucket(m: int, buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS) -> int:
+    """The padded batch size serving ``m`` queries: the smallest configured
+    bucket >= m, growing by powers of two above the largest bucket (so an
+    oversized burst costs one extra executable, not a failure).  Shared by
+    the local and sharded engines — one bucketing policy across the stack."""
+    if m < 1:
+        raise ValueError(f"batch size must be >= 1, got {m}")
+    for b in sorted(buckets):
+        if m <= b:
+            return int(b)
+    b = int(max(buckets))
+    while b < m:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class EnginePolicy:
+    """Query-serving policy owned by :class:`SuCoEngine`.
+
+    What used to travel on every ``suco_query`` call (alpha/beta/metric,
+    dense-vs-streaming mode, the scorer kernel impl, the streaming chunk
+    size) is fixed once per engine; per-request inputs shrink to
+    ``(queries, k)``.  ``mode="auto"`` resolves against the dataset size
+    a single time at engine construction — requests never re-decide it.
+    """
+
+    alpha: float = 0.05
+    beta: float = 0.02
+    metric: Metric = "l2"
+    mode: str = "auto"  # "auto" | "dense" | "streaming"
+    score_impl: str = "auto"  # streaming scorer kernel dispatch
+    block_n: int = 4096  # streaming chunk size
+    batch_buckets: tuple[int, ...] = DEFAULT_BATCH_BUCKETS
+
+
+class EngineStats(NamedTuple):
+    executables: int  # compiled (bucket, k) query executables (jit cache)
+    batches: int  # query() calls served
+    queries: int  # individual queries served (pre-padding)
+    padded_queries: int  # wasted padding rows across all batches
+    buckets: tuple[tuple[int, int], ...]  # (bucket, k) pairs seen
+
+
+class SuCoEngine:
+    """Owns the SuCo index lifecycle end to end: build-or-load, pre-compiled
+    bucketed query executables, and batched serving.
+
+    The engine pins ``(x, index, policy)`` for its lifetime and exposes
+    ``query(q, k)``: the batch is zero-padded to a policy bucket
+    (:func:`batch_bucket`) and dispatched to a jitted executable keyed by
+    ``(bucket, k)`` — after :meth:`warmup` covers the live traffic mix, a
+    request can never trigger a retrace (``compile_count`` stays flat).
+    Padding is sound because every query path is per-row independent
+    (vmapped scoring, per-row top-k/merge), so the first ``m`` rows of a
+    padded batch are bit-identical to the unpadded computation — and to
+    ``suco_query``, the back-compat wrapper over the same kernels.
+    """
+
+    def __init__(
+        self,
+        x: jax.Array,
+        index: SuCoIndex,
+        policy: EnginePolicy = EnginePolicy(),
+    ):
+        self.x = jnp.asarray(x)
+        self.index = index
+        self.policy = policy
+        if self.x.shape[-1] != index.spec.d:
+            raise ValueError(
+                f"data dim {self.x.shape[-1]} != index spec d={index.spec.d}"
+            )
+        mode = policy.mode
+        if mode == "auto":
+            mode = "streaming" if self.x.shape[0] >= STREAMING_MIN_N else "dense"
+        if mode not in ("dense", "streaming"):
+            raise ValueError(f"unknown engine mode {policy.mode!r}")
+        self._mode = mode
+        self._batches = 0
+        self._queries = 0
+        self._padded = 0
+        self._buckets_seen: set[tuple[int, int]] = set()
+        self._jit = jax.jit(self._raw_query, static_argnames=("k",))
+
+    # ---- lifecycle -------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        x: jax.Array,
+        config: SuCoConfig = SuCoConfig(),
+        *,
+        spec: sub.SubspaceSpec | None = None,
+        policy: EnginePolicy = EnginePolicy(),
+    ) -> "SuCoEngine":
+        """Build the index (Algorithm 2) and wrap it in an engine."""
+        x = jnp.asarray(x)
+        return cls(x, build_index(x, config, spec=spec), policy)
+
+    @classmethod
+    def from_artifact(
+        cls, path, x: jax.Array, policy: EnginePolicy = EnginePolicy()
+    ) -> "SuCoEngine":
+        """Serve a persisted index (:meth:`SuCoIndex.save`) over ``x``."""
+        index, _ = load_index_artifact(path)
+        return cls(x, index, policy)
+
+    def save(self, path, config: SuCoConfig | None = None) -> None:
+        """Persist this engine's index artifact (see :meth:`SuCoIndex.save`)."""
+        self.index.save(path, config)
+
+    # ---- query -----------------------------------------------------------
+
+    def _raw_query(self, x: jax.Array, index: SuCoIndex, q: jax.Array, *, k: int):
+        # one implementation, two entry points: routing through suco_query
+        # keeps the wrapper's bit-identical contract true by construction
+        p = self.policy
+        return suco_query(
+            x, index, q, k=k, alpha=p.alpha, beta=p.beta, metric=p.metric,
+            mode=self._mode, block_n=p.block_n, score_impl=p.score_impl,
+        )
+
+    def query(self, q: jax.Array, k: int) -> QueryResult:
+        """Serve a batch ``q: (m, d)`` (or a single ``(d,)`` query) -> top-k.
+
+        Pads to the policy bucket, dispatches the ``(bucket, k)``
+        executable, slices the padding back off.  Results are bit-identical
+        to ``suco_query`` on the unpadded batch.
+        """
+        q = jnp.asarray(q)
+        single = q.ndim == 1
+        if single:
+            q = q[None]
+        if q.ndim != 2 or q.shape[-1] != self.index.spec.d:
+            raise ValueError(
+                f"queries must be (m, {self.index.spec.d}) or "
+                f"({self.index.spec.d},), got {q.shape}"
+            )
+        if not 1 <= k <= self.x.shape[0]:
+            raise ValueError(f"k={k} must be in [1, n={self.x.shape[0]}]")
+        m = q.shape[0]
+        b = batch_bucket(m, self.policy.batch_buckets)
+        if b != m:
+            q = jnp.pad(q, ((0, b - m), (0, 0)))
+        res = self._jit(self.x, self.index, q, k=k)
+        self._batches += 1
+        self._queries += m
+        self._padded += b - m
+        self._buckets_seen.add((b, k))
+        if single:
+            return QueryResult(res.ids[0], res.dists[0], res.scores[0])
+        if b != m:
+            res = QueryResult(res.ids[:m], res.dists[:m], res.scores[:m])
+        return res
+
+    def warmup(
+        self,
+        batch_sizes: Sequence[int] = (1,),
+        ks: Sequence[int] = (10,),
+    ) -> int:
+        """Pre-compile one executable per (bucket, k) covering the given
+        traffic mix; returns the number of fresh compiles.  After a warmup
+        that covers the live mix, ``compile_count`` stays flat forever."""
+        before = self.compile_count
+        d = self.index.spec.d
+        for b in sorted({batch_bucket(m, self.policy.batch_buckets)
+                         for m in batch_sizes}):
+            for k in sorted(set(ks)):
+                probe = jnp.zeros((b, d), self.x.dtype)
+                jax.block_until_ready(self._jit(self.x, self.index, probe, k=k).ids)
+                self._buckets_seen.add((b, k))
+        return self.compile_count - before
+
+    # ---- introspection ---------------------------------------------------
+
+    @property
+    def mode(self) -> str:
+        """The resolved execution mode ("dense" | "streaming")."""
+        return self._mode
+
+    @property
+    def n_points(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def compile_count(self) -> int:
+        """Number of compiled query executables (the jit cache size) — the
+        serving invariant is that this is flat after warmup."""
+        return self._jit._cache_size()
+
+    def stats(self) -> EngineStats:
+        return EngineStats(
+            executables=self.compile_count,
+            batches=self._batches,
+            queries=self._queries,
+            padded_queries=self._padded,
+            buckets=tuple(sorted(self._buckets_seen)),
+        )

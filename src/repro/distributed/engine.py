@@ -39,7 +39,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.suco import SuCoIndex, _cell_ranks_and_cut, activate_cells_sorted
+from repro.core.suco import (
+    DEFAULT_BATCH_BUCKETS,
+    SuCoIndex,
+    _cell_ranks_and_cut,
+    activate_cells_sorted,
+    batch_bucket,
+    load_index_artifact,
+)
 from repro.core import subspace as sub
 from repro.core.distances import pairwise_sqdist
 from repro.core.kmeans import assign_scan, block_batched, lloyd_stats_scan
@@ -47,7 +54,14 @@ from repro.core.sc_linear import merge_topk_pool
 from repro.distributed.compat import pcast_varying, shard_map_compat
 from repro.kernels.sc_score.ops import sc_scores_cells
 
-__all__ = ["DistSuCoConfig", "index_shardings", "shard_index", "build_sharded", "query_sharded"]
+__all__ = [
+    "DistSuCoConfig",
+    "index_shardings",
+    "shard_index",
+    "build_sharded",
+    "query_sharded",
+    "ShardedSuCoEngine",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,16 +201,22 @@ def build_sharded(mesh: Mesh, x: jax.Array, cfg: DistSuCoConfig) -> SuCoIndex:
         c_fin, _ = jax.lax.scan(lloyd, init, None, length=cfg.kmeans_iters)
 
         if chunked:
-            assign, _ = assign_scan(blocks, valid, c_fin, cast_init=cast)
+            # pair_sqrt_k fuses the IMI occupancy histogram into the
+            # assignment scan — no second pass over cell_ids (PR 3).
+            assign, _, counts = assign_scan(
+                blocks, valid, c_fin, cast_init=cast, pair_sqrt_k=sqrt_k
+            )
             assign = assign[:, :n_loc]  # (2ns, n_loc) int32
         else:
             d2 = jax.vmap(lambda xx, cc: pairwise_sqdist(xx, cc, impl="jnp"))(cb, c_fin)
             assign = jnp.argmin(d2, axis=-1).astype(jnp.int32)  # (2ns, n_loc)
+            counts = None
         a1, a2 = assign[:ns_loc], assign[ns_loc:]
         cell_ids = a1 * sqrt_k + a2  # (ns_loc, n_loc)
-        counts = jax.vmap(
-            lambda cc: jnp.bincount(cc, length=sqrt_k * sqrt_k).astype(jnp.int32)
-        )(cell_ids)
+        if counts is None:
+            counts = jax.vmap(
+                lambda cc: jnp.bincount(cc, length=sqrt_k * sqrt_k).astype(jnp.int32)
+            )(cell_ids)
         counts = jax.lax.psum(counts, all_point_axes)
         return c_fin[:ns_loc], c_fin[ns_loc:], cell_ids, counts
 
@@ -381,3 +401,156 @@ def query_sharded(
     """Convenience wrapper: builds and invokes the sharded query step."""
     fn = make_query_fn(mesh, cfg, x.shape[0], x.shape[1], q.shape[0])
     return fn(x, index.centroids1, index.centroids2, index.cell_ids, index.cell_counts, q)
+
+
+# --------------------------------------------------------------------------
+# ShardedSuCoEngine: the multi-device serving counterpart of SuCoEngine
+# --------------------------------------------------------------------------
+
+
+def _bucket_mq(m: int, buckets: Sequence[int], q_chunk: int) -> int:
+    b = batch_bucket(m, buckets)
+    if b > q_chunk:
+        b = -(-b // q_chunk) * q_chunk
+    return b
+
+
+class ShardedSuCoEngine:
+    """Sharded serving engine — :class:`repro.core.suco.SuCoEngine` across a
+    mesh.
+
+    Shares the single-host engine's two serving contracts: the **artifact
+    format** (``SuCoIndex.save``/``load`` npz — an index persisted by a
+    single-host build loads straight onto the mesh via
+    :func:`shard_index`) and the **bucketing policy**
+    (:func:`repro.core.suco.batch_bucket`, additionally rounded up to a
+    ``q_chunk`` multiple, the sharded query step's scan granularity).  One
+    compiled query executable per bucket; after :meth:`warmup` covers the
+    traffic mix, ``compile_count`` stays flat.  ``k`` is part of the
+    engine's ``DistSuCoConfig`` (per-shard candidate pools are sized from
+    it), so heterogeneous-k traffic runs one sharded engine per k.
+    """
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        cfg: DistSuCoConfig,
+        x: jax.Array,
+        index: SuCoIndex,
+        *,
+        batch_buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS,
+    ):
+        self.mesh = mesh
+        self.cfg = cfg
+        self._sh = index_shardings(mesh, cfg)
+        self.x = jax.device_put(x, self._sh["x"])
+        self.index = shard_index(mesh, cfg, index)
+        self.batch_buckets = tuple(batch_buckets)
+        self._fns: dict[int, object] = {}
+
+    # ---- lifecycle -------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        mesh: Mesh,
+        cfg: DistSuCoConfig,
+        x: jax.Array,
+        *,
+        batch_buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS,
+    ) -> "ShardedSuCoEngine":
+        """Distributed Algorithm 2 (:func:`build_sharded`) -> engine."""
+        sh = index_shardings(mesh, cfg)
+        x = jax.device_put(x, sh["x"])
+        return cls(mesh, cfg, x, build_sharded(mesh, x, cfg),
+                   batch_buckets=batch_buckets)
+
+    @classmethod
+    def from_artifact(
+        cls,
+        path,
+        mesh: Mesh,
+        cfg: DistSuCoConfig,
+        x: jax.Array,
+        *,
+        batch_buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS,
+    ) -> "ShardedSuCoEngine":
+        """Serve a ``SuCoIndex.save`` artifact across the mesh."""
+        index, _ = load_index_artifact(path)
+        return cls(mesh, cfg, x, index, batch_buckets=batch_buckets)
+
+    def save(self, path, config=None) -> None:
+        """Persist the index artifact (gathers the sharded arrays)."""
+        local = jax.device_put(self.index, jax.devices()[0])
+        local.save(path, config)
+
+    # ---- bucketing -------------------------------------------------------
+
+    def bucket_mq(self, m: int) -> int:
+        """The padded query-batch size serving ``m`` queries: the shared
+        :func:`batch_bucket` policy, rounded up to a ``q_chunk`` multiple
+        when the bucket exceeds one chunk (``make_query_fn`` scans the
+        batch in ``q_chunk`` slices)."""
+        return _bucket_mq(m, self.batch_buckets, self.cfg.q_chunk)
+
+    @staticmethod
+    def aot_query_fn(
+        mesh: Mesh,
+        cfg: DistSuCoConfig,
+        n: int,
+        d: int,
+        m: int,
+        *,
+        batch_buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS,
+    ):
+        """Ahead-of-time form of the serving path: ``-> (query fn, mq)``.
+
+        Applies the engine's bucketing policy to ``m`` and returns the
+        jitted sharded query step a live engine would dispatch that bucket
+        to, plus the padded batch size ``mq`` — so compile-only drivers
+        (the 1B dry-run) lower exactly the executable production serves,
+        without materialising any data.
+        """
+        mq = _bucket_mq(m, batch_buckets, cfg.q_chunk)
+        return make_query_fn(mesh, cfg, n, d, mq), mq
+
+    # ---- query -----------------------------------------------------------
+
+    def _fn_for(self, mq: int):
+        fn = self._fns.get(mq)
+        if fn is None:
+            n, d = self.x.shape
+            fn = make_query_fn(self.mesh, self.cfg, n, d, mq)
+            self._fns[mq] = fn
+        return fn
+
+    def _invoke(self, b: int, q_padded: jax.Array) -> tuple[jax.Array, jax.Array]:
+        q_padded = jax.device_put(q_padded, self._sh["queries"])
+        idx = self.index
+        return self._fn_for(b)(
+            self.x, idx.centroids1, idx.centroids2, idx.cell_ids,
+            idx.cell_counts, q_padded,
+        )
+
+    def query(self, q: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """``q: (m, d) -> (ids (m, k), dists (m, k))`` global top-k."""
+        q = jnp.asarray(q)
+        m = q.shape[0]
+        b = self.bucket_mq(m)
+        if b != m:
+            q = jnp.pad(q, ((0, b - m), (0, 0)))
+        ids, dists = self._invoke(b, q)
+        return ids[:m], dists[:m]
+
+    def warmup(self, batch_sizes: Sequence[int] = (1,)) -> int:
+        """Pre-compile one executable per bucket covering the traffic mix."""
+        before = self.compile_count
+        d = self.x.shape[1]
+        for b in sorted({self.bucket_mq(m) for m in batch_sizes}):
+            jax.block_until_ready(self._invoke(b, jnp.zeros((b, d), self.x.dtype))[0])
+        return self.compile_count - before
+
+    @property
+    def compile_count(self) -> int:
+        """Number of compiled sharded query executables (one per bucket)."""
+        return len(self._fns)

@@ -23,7 +23,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.engine import DistSuCoConfig, index_shardings, make_query_fn
+from repro.distributed.engine import DistSuCoConfig, ShardedSuCoEngine, index_shardings
 from repro.launch.dryrun import RESULTS_DIR, collective_bytes
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
@@ -42,7 +42,6 @@ def suco_cell(*, multi_pod: bool, build: bool = False) -> dict:
     )
     sh = index_shardings(mesh, cfg)
     x = jax.ShapeDtypeStruct((N_POINTS, DIM), jnp.float32)
-    q = jax.ShapeDtypeStruct((N_QUERIES, DIM), jnp.float32)
     h1 = (DIM // cfg.n_subspaces + 1) // 2
     c_shape = jax.ShapeDtypeStruct((cfg.n_subspaces, cfg.sqrt_k, h1), jnp.float32)
     ids_shape = jax.ShapeDtypeStruct((cfg.n_subspaces, N_POINTS), jnp.int32)
@@ -51,7 +50,11 @@ def suco_cell(*, multi_pod: bool, build: bool = False) -> dict:
     del build  # the build step is exercised at test scale; query is the
     # serving hot path we dry-run at 1B
     t0 = time.time()
-    qfn = make_query_fn(mesh, cfg, N_POINTS, DIM, N_QUERIES)
+    # the engine's AOT path: same bucketing policy production serving uses,
+    # so the lowered executable is exactly the one a ShardedSuCoEngine
+    # would dispatch a 256-query batch to
+    qfn, mq = ShardedSuCoEngine.aot_query_fn(mesh, cfg, N_POINTS, DIM, N_QUERIES)
+    q = jax.ShapeDtypeStruct((mq, DIM), jnp.float32)
     lowered = qfn.lower(x, c_shape, c_shape, ids_shape, cnt_shape, q)
     t_lower = time.time() - t0
     t0 = time.time()

@@ -1,12 +1,28 @@
-"""Serving layer: continuous-batching server + decode caches.
+"""Serving layer: continuous-batching servers + decode caches.
 
-The implementations live in repro.launch.serve (driver + Server) and
-repro.models.decode / repro.models.prefill (cache mechanics); re-exported
-here as the public serving API.
+Two backends share the admission-queue / step-boundary batching design:
+
+* LLM decode — ``repro.launch.serve`` (driver + ``Server``) over
+  ``repro.models.decode`` / ``repro.models.prefill`` cache mechanics;
+* k-ANN — :mod:`repro.serve.ann` (``AnnServer``) over the persistent
+  batched :class:`~repro.core.suco.SuCoEngine`.
+
+Both are re-exported here as the public serving API.
 """
 
 from repro.launch.serve import Request, Server
 from repro.models.decode import decode_step, init_cache
 from repro.models.prefill import prefill
+from repro.serve.ann import AnnRequest, AnnServer, StepRecord, latency_summary
 
-__all__ = ["Request", "Server", "decode_step", "init_cache", "prefill"]
+__all__ = [
+    "Request",
+    "Server",
+    "decode_step",
+    "init_cache",
+    "prefill",
+    "AnnRequest",
+    "AnnServer",
+    "StepRecord",
+    "latency_summary",
+]

@@ -1,0 +1,199 @@
+"""Continuous micro-batching ANN server over a :class:`~repro.core.suco.SuCoEngine`.
+
+The LLM serving driver (:mod:`repro.launch.serve`) admits new sequences into
+fixed decode slots at step boundaries; this is the same design with the ANN
+engine as the backend.  Heterogeneous ``(query, k)`` requests enter an
+admission queue; at every step boundary the scheduler forms one micro-batch
+of same-``k`` requests (k is a compile-time shape, so mixed-k traffic
+resolves into alternating steps, FIFO within each k), the engine pads the
+batch to a policy bucket (:func:`repro.core.suco.batch_bucket`) and runs the
+pre-compiled ``(bucket, k)`` executable.  Per-request latency is accounted
+from admission to result materialisation, and every step records the
+engine's compile count — flat-after-warmup is the serving invariant the
+benchmark suite asserts.
+
+CPU-scale usage:
+  PYTHONPATH=src python -m repro.serve.ann --n 20000 --d 32 --requests 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.suco import EnginePolicy, SuCoConfig, SuCoEngine, batch_bucket
+
+__all__ = ["AnnRequest", "StepRecord", "AnnServer", "latency_summary"]
+
+
+@dataclasses.dataclass
+class AnnRequest:
+    """One k-ANN request: a single query vector and its own ``k``."""
+
+    rid: int
+    query: np.ndarray  # (d,)
+    k: int
+    t_submit: float = 0.0  # admission-queue entry
+    t_start: float = 0.0  # micro-batch dispatch
+    t_done: float = 0.0  # results materialised on host
+    ids: np.ndarray | None = None  # (k,) int32
+    dists: np.ndarray | None = None  # (k,)
+    error: str | None = None  # rejection reason (bad shape / k out of range)
+
+    @property
+    def done(self) -> bool:
+        return self.ids is not None
+
+    @property
+    def latency_s(self) -> float:
+        """Admission-to-result latency (queueing + padding + execution)."""
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass(frozen=True)
+class StepRecord:
+    """Per-step accounting: what ran and whether the engine recompiled."""
+
+    n_requests: int
+    k: int
+    bucket: int
+    step_s: float
+    compile_count: int  # engine executables after this step
+
+
+class AnnServer:
+    """Continuous micro-batching over a warmed :class:`SuCoEngine`.
+
+    Mirrors :class:`repro.launch.serve.Server`'s slot design: ``max_batch``
+    is the slot count, the queue refills the batch at each step boundary.
+    Requests with different ``k`` cannot share an executable, so a step
+    serves the FIFO-first ``k`` and defers the rest — arrival order is
+    preserved within every ``k`` class and across deferrals.
+    """
+
+    def __init__(
+        self,
+        engine: SuCoEngine,
+        max_batch: int = 64,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.clock = clock
+        self.queue: deque[AnnRequest] = deque()
+        self.completed: list[AnnRequest] = []
+        self.steps: list[StepRecord] = []
+
+    def submit(self, req: AnnRequest) -> None:
+        req.t_submit = self.clock()
+        self.queue.append(req)
+
+    def submit_many(self, reqs: Sequence[AnnRequest]) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    def step(self) -> list[AnnRequest]:
+        """Run one micro-batch; returns the requests it completed."""
+        if not self.queue:
+            return []
+        k = self.queue[0].k
+        batch: list[AnnRequest] = []
+        deferred: deque[AnnRequest] = deque()
+        while self.queue and len(batch) < self.max_batch:
+            r = self.queue.popleft()
+            (batch if r.k == k else deferred).append(r)
+        self.queue = deferred + self.queue  # deferrals keep their queue rank
+
+        t0 = self.clock()
+        for r in batch:
+            r.t_start = t0
+        try:
+            res = self.engine.query(np.stack([r.query for r in batch]), k=k)
+            ids = np.asarray(res.ids)  # materialise: blocks until done
+            dists = np.asarray(res.dists)
+            t1 = self.clock()
+            for i, r in enumerate(batch):
+                r.ids, r.dists, r.t_done = ids[i], dists[i], t1
+        except ValueError as e:
+            # A malformed request (wrong dim, k out of range) must not sink
+            # the healthy requests batched with it: the whole micro-batch is
+            # completed-with-error and the server keeps draining.
+            t1 = self.clock()
+            for r in batch:
+                r.error, r.t_done = str(e), t1
+        self.completed.extend(batch)
+        self.steps.append(
+            StepRecord(
+                n_requests=len(batch),
+                k=k,
+                bucket=batch_bucket(len(batch), self.engine.policy.batch_buckets),
+                step_s=t1 - t0,
+                compile_count=self.engine.compile_count,
+            )
+        )
+        return batch
+
+    def run_until_drained(self) -> list[AnnRequest]:
+        while self.queue:
+            self.step()
+        return self.completed
+
+
+def latency_summary(requests: Sequence[AnnRequest]) -> dict:
+    """QPS + latency percentiles for a completed request set."""
+    done = [r for r in requests if r.done]
+    if not done:
+        return dict(n_requests=0)
+    lat = np.asarray([r.latency_s for r in done])
+    wall = max(r.t_done for r in done) - min(r.t_submit for r in done)
+    return dict(
+        n_requests=len(done),
+        qps=len(done) / wall if wall > 0 else float("inf"),
+        p50_ms=float(np.percentile(lat, 50) * 1e3),
+        p99_ms=float(np.percentile(lat, 99) * 1e3),
+        mean_ms=float(lat.mean() * 1e3),
+        max_ms=float(lat.max() * 1e3),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.data import make_dataset
+
+    ds = make_dataset("gaussian_mixture", args.n, args.d, m=1, k=10, seed=args.seed)
+    engine = SuCoEngine.build(
+        ds.x,
+        SuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=4, seed=args.seed),
+        policy=EnginePolicy(alpha=0.05, beta=0.02),
+    )
+    rng = np.random.default_rng(args.seed)
+    # cover every bucket a <= max_batch micro-batch can land in
+    engine.warmup(batch_sizes=range(1, args.max_batch + 1), ks=(5, 10))
+    server = AnnServer(engine, max_batch=args.max_batch)
+    server.submit_many(
+        AnnRequest(i, ds.x[rng.integers(0, args.n)], k=int(rng.choice([5, 10])))
+        for i in range(args.requests)
+    )
+    done = server.run_until_drained()
+    s = latency_summary(done)
+    print(
+        f"[ann-serve] {s['n_requests']} requests in {len(server.steps)} steps: "
+        f"{s['qps']:.1f} qps, p50 {s['p50_ms']:.1f} ms, p99 {s['p99_ms']:.1f} ms, "
+        f"executables {engine.compile_count}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -104,6 +104,26 @@ _SCRIPT = textwrap.dedent(
         for i in range(16)
     ])
     assert overlap2 >= 0.95, f"elastic reshard changed results: {overlap2}"
+
+    # ShardedSuCoEngine: bucketed serving over the same artifact format —
+    # warmed buckets never retrace, partial batches pad-and-slice, and a
+    # persisted single-host artifact serves the mesh bit-identically.
+    import tempfile, os as _os
+    from repro.distributed.engine import ShardedSuCoEngine
+    eng = ShardedSuCoEngine(mesh, cfg, jnp.asarray(ds.x), idx)
+    n_warm = eng.warmup(batch_sizes=(1, 16))
+    ids_e, _ = eng.query(q)  # m=16: warmed bucket
+    assert eng.compile_count == n_warm, "sharded engine retraced after warmup"
+    assert np.array_equal(np.asarray(ids_e), np.asarray(ids)), "engine != query_sharded"
+    ids_p, _ = eng.query(jnp.asarray(ds.queries[:3]))  # padded partial batch
+    assert np.array_equal(np.asarray(ids_p), np.asarray(ids[:3])), "padded batch"
+    with tempfile.TemporaryDirectory() as td:
+        pth = _os.path.join(td, "idx.npz")
+        eng.save(pth)
+        eng2 = ShardedSuCoEngine.from_artifact(pth, mesh, cfg, jnp.asarray(ds.x))
+        ids_a, _ = eng2.query(q)
+        assert np.array_equal(np.asarray(ids_a), np.asarray(ids)), "artifact round trip"
+
     print("DISTRIBUTED_OK", r, overlap, r2, overlap2)
     """
 )

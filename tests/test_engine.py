@@ -1,0 +1,236 @@
+"""SuCoEngine subsystem: index persistence (bit-identical round trips,
+version gating), bucketed executable compilation (jit cache stats), the
+suco_query back-compat contract, and the continuous micro-batching ANN
+server."""
+
+import dataclasses
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    INDEX_ARTIFACT_VERSION,
+    EnginePolicy,
+    SuCoConfig,
+    SuCoEngine,
+    SuCoIndex,
+    batch_bucket,
+    build_index,
+    load_index_artifact,
+    suco_query,
+)
+from repro.data import make_dataset
+from repro.serve.ann import AnnRequest, AnnServer, latency_summary
+
+CFG = SuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=4, seed=0)
+POLICY = EnginePolicy(alpha=0.05, beta=0.02, batch_buckets=(4, 16))
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("gaussian_mixture", 4000, 32, m=20, k=10, seed=0)
+
+
+@pytest.fixture(scope="module")
+def index(ds):
+    return build_index(jnp.asarray(ds.x), CFG)
+
+
+# ------------------------------ persistence ---------------------------------
+
+
+def test_save_load_round_trip_bit_identical(ds, index, tmp_path):
+    path = tmp_path / "index.npz"
+    index.save(path, CFG)
+    loaded, config = load_index_artifact(path)
+    assert config == CFG
+    assert loaded.spec == index.spec
+    assert loaded.sqrt_k == index.sqrt_k
+    for name in ("centroids1", "centroids2", "cell_ids", "cell_counts"):
+        a, b = getattr(index, name), getattr(loaded, name)
+        assert a.dtype == b.dtype, name
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+    # the loaded index answers queries bit-identically
+    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
+    r1 = suco_query(x, index, q, k=10, alpha=0.05, beta=0.02)
+    r2 = suco_query(x, loaded, q, k=10, alpha=0.05, beta=0.02)
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_array_equal(np.asarray(r1.dists), np.asarray(r2.dists))
+
+
+def test_save_without_config_loads_none(index, tmp_path):
+    path = tmp_path / "bare.npz"
+    index.save(path)
+    loaded, config = load_index_artifact(path)
+    assert config is None
+    assert loaded.n_points == index.n_points
+    # SuCoIndex.load is the config-less convenience form
+    again = SuCoIndex.load(path)
+    np.testing.assert_array_equal(
+        np.asarray(again.cell_ids), np.asarray(loaded.cell_ids)
+    )
+
+
+def test_version_mismatch_raises(index, tmp_path):
+    path = tmp_path / "stale.npz"
+    index.save(path)
+    blob = dict(np.load(path))
+    blob["version"] = np.asarray(INDEX_ARTIFACT_VERSION + 1, np.int32)
+    with open(path, "wb") as f:
+        np.savez(f, **blob)
+    with pytest.raises(ValueError, match="version"):
+        SuCoIndex.load(path)
+
+
+def test_foreign_npz_rejected(tmp_path):
+    path = tmp_path / "foreign.npz"
+    with open(path, "wb") as f:
+        np.savez(f, weights=np.zeros(3))
+    with pytest.raises(ValueError, match="artifact"):
+        load_index_artifact(path)
+
+
+# ------------------------------- bucketing ----------------------------------
+
+
+def test_batch_bucket_policy():
+    buckets = (4, 16)
+    assert [batch_bucket(m, buckets) for m in (1, 4, 5, 16)] == [4, 4, 16, 16]
+    # above the largest bucket: next power-of-two multiple, never a failure
+    assert batch_bucket(17, buckets) == 32
+    assert batch_bucket(100, buckets) == 128
+    with pytest.raises(ValueError, match="batch size"):
+        batch_bucket(0, buckets)
+
+
+def test_engine_compiles_exactly_one_executable_per_bucket_k(ds, index):
+    engine = SuCoEngine(jnp.asarray(ds.x), index, POLICY)
+    assert engine.compile_count == 0  # jit cache stats: nothing yet
+    n = engine.warmup(batch_sizes=(1, 3, 4), ks=(10,))
+    assert n == 1  # all three sizes share bucket 4
+    assert engine.compile_count == 1
+    # served sizes inside a warmed bucket never retrace
+    for m in (1, 2, 4):
+        engine.query(jnp.asarray(ds.queries[:m]), k=10)
+    assert engine.compile_count == 1
+    # a second batch size -> exactly one more executable
+    engine.query(jnp.asarray(ds.queries[:9]), k=10)  # bucket 16
+    assert engine.compile_count == 2
+    engine.query(jnp.asarray(ds.queries[:16]), k=10)
+    assert engine.compile_count == 2
+    # a second k on a warmed bucket -> exactly one more executable
+    engine.query(jnp.asarray(ds.queries[:4]), k=5)
+    assert engine.compile_count == 3
+    stats = engine.stats()
+    assert stats.executables == 3
+    assert (4, 10) in stats.buckets and (16, 10) in stats.buckets
+
+
+def test_engine_mode_resolved_once(ds, index):
+    engine = SuCoEngine(jnp.asarray(ds.x), index, POLICY)
+    assert engine.mode == "dense"  # n=4000 < STREAMING_MIN_N
+    forced = SuCoEngine(
+        jnp.asarray(ds.x), index, dataclasses.replace(POLICY, mode="streaming")
+    )
+    assert forced.mode == "streaming"
+    with pytest.raises(ValueError, match="mode"):
+        SuCoEngine(jnp.asarray(ds.x), index, dataclasses.replace(POLICY, mode="bogus"))
+
+
+def test_engine_rejects_bad_requests(ds, index):
+    engine = SuCoEngine(jnp.asarray(ds.x), index, POLICY)
+    with pytest.raises(ValueError, match="k="):
+        engine.query(jnp.asarray(ds.queries[:2]), k=ds.x.shape[0] + 1)
+    with pytest.raises(ValueError, match="queries"):
+        engine.query(jnp.zeros((2, 7), jnp.float32), k=5)
+
+
+# ---------------------------- back-compat parity ----------------------------
+
+
+def test_engine_bit_identical_to_suco_query(ds, index):
+    """The acceptance contract: every padded engine path returns exactly
+    what the suco_query wrapper returns on the unpadded batch — dense and
+    (forced) streaming modes both."""
+    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
+    for mode in ("dense", "streaming"):
+        engine = SuCoEngine(x, index, dataclasses.replace(POLICY, mode=mode))
+        for m in (1, 3, 4, 16, 20):  # exact-bucket, padded, and oversize
+            got = engine.query(q[:m], k=10)
+            want = suco_query(
+                x, index, q[:m], k=10, alpha=POLICY.alpha, beta=POLICY.beta,
+                mode=mode,
+            )
+            np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids))
+            np.testing.assert_array_equal(
+                np.asarray(got.dists), np.asarray(want.dists)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(got.scores), np.asarray(want.scores)
+            )
+
+
+def test_engine_single_query_form(ds, index):
+    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
+    engine = SuCoEngine(x, index, POLICY)
+    got = engine.query(q[0], k=7)
+    assert got.ids.shape == (7,)
+    want = engine.query(q[:1], k=7)
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids[0]))
+
+
+def test_engine_from_artifact(ds, index, tmp_path):
+    path = tmp_path / "serve.npz"
+    index.save(path)
+    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
+    engine = SuCoEngine.from_artifact(path, x, POLICY)
+    got = engine.query(q, k=10)
+    want = suco_query(x, index, q, k=10, alpha=POLICY.alpha, beta=POLICY.beta)
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids))
+
+
+# ------------------------------- ANN server ---------------------------------
+
+
+def test_ann_server_heterogeneous_requests(ds, index):
+    engine = SuCoEngine(jnp.asarray(ds.x), index, POLICY)
+    engine.warmup(batch_sizes=(1, 4), ks=(5, 10))
+    warm = engine.compile_count
+    server = AnnServer(engine, max_batch=4)
+    ks = [10, 10, 5, 10, 5, 10]
+    server.submit_many(
+        [AnnRequest(i, ds.queries[i], k=k) for i, k in enumerate(ks)]
+    )
+    done = server.run_until_drained()
+    assert len(done) == len(ks)
+    assert engine.compile_count == warm, "server retraced after warmup"
+    # same-k micro-batches, FIFO within each k; every result matches the
+    # direct engine path for that single query
+    for r in done:
+        assert r.done and r.ids.shape == (r.k,)
+        assert r.t_submit <= r.t_start <= r.t_done
+        want = engine.query(ds.queries[r.rid], k=r.k)
+        np.testing.assert_array_equal(r.ids, np.asarray(want.ids))
+    # step accounting: compile count flat, buckets within policy
+    assert [s.compile_count for s in server.steps] == [warm] * len(server.steps)
+    assert all(s.n_requests <= 4 for s in server.steps)
+    summary = latency_summary(done)
+    assert summary["n_requests"] == len(ks)
+    assert summary["p99_ms"] >= summary["p50_ms"] >= 0.0
+
+
+def test_ann_server_malformed_request_does_not_sink_healthy_ones(ds, index):
+    """A bad request completes-with-error; requests in other micro-batches
+    still drain and succeed."""
+    engine = SuCoEngine(jnp.asarray(ds.x), index, POLICY)
+    server = AnnServer(engine, max_batch=4)
+    server.submit(AnnRequest(0, ds.queries[0], k=ds.x.shape[0] + 1))  # bad k
+    server.submit(AnnRequest(1, ds.queries[1], k=10))
+    done = server.run_until_drained()
+    assert len(done) == 2 and not server.queue
+    by_rid = {r.rid: r for r in done}
+    assert not by_rid[0].done and "k=" in by_rid[0].error
+    assert by_rid[1].done and by_rid[1].error is None
+    assert latency_summary(done)["n_requests"] == 1  # only the healthy one

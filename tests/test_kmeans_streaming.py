@@ -284,3 +284,115 @@ def test_build_chunked_never_materialises_n_by_k():
         f"chunked build materialised an (n, k)-sized array: {got}"
     )
     assert _max_intermediate_size(dense_jaxpr) >= codebooks * n * sqrt_k
+
+
+# --------------------------- kmeans++ seeding -------------------------------
+
+
+def test_kmeanspp_never_starts_worse_than_random():
+    """Satellite acceptance: on every seed dataset generator, the kmeans++
+    D^2 seeding's starting inertia (before any Lloyd/minibatch update) is
+    never worse than random init's.  The guarantee is an expectation (a
+    single draw is a coin flip on structureless data), so the comparison
+    averages over 8 keys — deterministic given the fixed key set."""
+    from repro.core.kmeans import _init_centroids, init_centroids_pp
+    from repro.data import GENERATORS
+
+    def start_inertia(x, c):
+        d2 = jnp.sum((x[:, None, :] - c[None]) ** 2, axis=-1)
+        return float(jnp.sum(jnp.min(d2, axis=-1)))
+
+    k = 12
+    for gen in GENERATORS:
+        x = jnp.asarray(np.asarray(GENERATORS[gen](3000, 16, 0), np.float32))
+        rand, pp = [], []
+        for seed in range(8):
+            key = jax.random.key(seed)
+            rand.append(start_inertia(x, _init_centroids(key, x, k)))
+            pp.append(start_inertia(x, init_centroids_pp(key, x, k)))
+        assert np.mean(pp) <= np.mean(rand) * (1 + 1e-6), (
+            f"{gen}: kmeans++ mean start {np.mean(pp)} worse than "
+            f"random {np.mean(rand)}"
+        )
+
+
+def test_kmeanspp_is_minibatch_default_and_deterministic():
+    """init="auto" resolves to kmeans++ for minibatch; explicit forms agree."""
+    xs = jnp.stack([_mixture(1500, 8, 6, seed=i) for i in range(3)])
+    key = jax.random.key(5)
+    auto = kmeans_batched(key, xs, 8, 12, algo="minibatch", block_n=256)
+    pp = kmeans_batched(
+        key, xs, 8, 12, algo="minibatch", block_n=256, init="kmeans++"
+    )
+    np.testing.assert_array_equal(np.asarray(auto.centroids), np.asarray(pp.centroids))
+    rand = kmeans_batched(
+        key, xs, 8, 12, algo="minibatch", block_n=256, init="random"
+    )
+    assert not np.array_equal(np.asarray(auto.centroids), np.asarray(rand.centroids))
+    # lloyd's auto stays random init (the paper's choice), unchanged results
+    ll_auto = kmeans_batched(key, xs, 8, 4, block_n=256)
+    ll_rand = kmeans_batched(key, xs, 8, 4, block_n=256, init="random")
+    np.testing.assert_array_equal(
+        np.asarray(ll_auto.centroids), np.asarray(ll_rand.centroids)
+    )
+    with pytest.raises(ValueError, match="init"):
+        kmeans(key, xs[0], 8, 2, init="bogus")
+
+
+def test_kmeanspp_sampled_subset():
+    """sample_n caps the seeding working set without breaking determinism."""
+    from repro.core.kmeans import init_centroids_pp
+
+    x = _mixture(5000, 8, 6, seed=2)
+    key = jax.random.key(0)
+    a = init_centroids_pp(key, x, 8, sample_n=512)
+    b = init_centroids_pp(key, x, 8, sample_n=512)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.shape == (8, 8) and a.dtype == x.dtype
+
+
+# ------------------------- fused cell-count histogram -----------------------
+
+
+def test_assign_scan_pair_counts_match_bincount():
+    """The IMI occupancy histogram fused into the final-assignment scan is
+    exactly the bincount of a1 * sqrt_k + a2 — including non-divisible
+    block_n, where the padded tail must not count."""
+    from repro.core.kmeans import assign_scan, block_batched
+
+    sqrt_k = 6
+    xs = jnp.stack([_mixture(1111, 5, 4, seed=i) for i in range(4)])  # B=4=2*2
+    key = jax.random.key(7)
+    res = kmeans_batched(key, xs, sqrt_k, 3)
+    for bn in (256, 123, 1111):
+        blocks, valid = block_batched(xs, bn)
+        a, _, counts = assign_scan(blocks, valid, res.centroids, pair_sqrt_k=sqrt_k)
+        a = np.asarray(a[:, :1111])
+        want = np.stack([
+            np.bincount(a[i] * sqrt_k + a[i + 2], minlength=sqrt_k * sqrt_k)
+            for i in range(2)
+        ])
+        np.testing.assert_array_equal(np.asarray(counts), want)
+        assert counts.dtype == jnp.int32
+    with pytest.raises(ValueError, match="even batch"):
+        blocks, valid = block_batched(xs[:3], 256)
+        assign_scan(blocks, valid, res.centroids[:3], pair_sqrt_k=sqrt_k)
+
+
+def test_kmeans_batched_pair_counts_threaded():
+    """kmeans_batched(pair_sqrt_k=...) returns the fused histogram for both
+    lloyd and minibatch, matching a bincount over the assignments."""
+    sqrt_k = 5
+    xs = jnp.stack([_mixture(900, 6, 4, seed=i) for i in range(6)])
+    key = jax.random.key(1)
+    for kw in (dict(block_n=200), dict(algo="minibatch", block_n=128), dict()):
+        res = kmeans_batched(key, xs, sqrt_k, 4, pair_sqrt_k=sqrt_k, **kw)
+        assert res.cell_counts is not None, kw
+        a = np.asarray(res.assignments)
+        want = np.stack([
+            np.bincount(a[i] * sqrt_k + a[i + 3], minlength=sqrt_k * sqrt_k)
+            for i in range(3)
+        ])
+        np.testing.assert_array_equal(np.asarray(res.cell_counts), want, err_msg=str(kw))
+    # default: no histogram requested, None returned
+    assert kmeans_batched(key, xs, sqrt_k, 2).cell_counts is None
