@@ -11,8 +11,11 @@ the perf trajectory of ``build_index``.
 ``--suite serve`` runs the query-serving suite (warmed SuCoEngine behind
 the continuous micro-batching AnnServer) and writes ``BENCH_serve.json``
 (QPS + p50/p99 latency per traffic mix, zero-retrace-after-warmup
-asserted).  ``--suite serve --toy`` is the CI smoke form: shrunk sizes,
-writes ``BENCH_serve.toy.json``.
+asserted).  ``--suite serve_async`` is the pipelined-serving slice of the
+same collection: sync-vs-async replay per mix, the traffic-driven bucket
+autoscale consumption path, and the heterogeneous-k sharded pool — the
+zero-retrace invariant asserted on all three.  ``--toy`` is the CI smoke
+form for either: shrunk sizes, writes ``BENCH_serve.toy.json``.
 """
 
 from __future__ import annotations
@@ -33,7 +36,12 @@ MODULES = (
     "benchmarks.micro_merge_pool",
 )
 
-SUITES = {"index_build": "benchmarks.index_build", "serve": "benchmarks.serve"}
+# suite name -> "module" (entry point `run`) or "module:function"
+SUITES = {
+    "index_build": "benchmarks.index_build",
+    "serve": "benchmarks.serve",
+    "serve_async": "benchmarks.serve:run_async",
+}
 
 
 def _run_suite(name: str, extra: list[str]) -> None:
@@ -42,14 +50,15 @@ def _run_suite(name: str, extra: list[str]) -> None:
 
     if name not in SUITES:
         raise SystemExit(f"unknown suite {name!r}; available: {sorted(SUITES)}")
-    mod = importlib.import_module(SUITES[name])
+    modname, _, fn_name = SUITES[name].partition(":")
+    fn = getattr(importlib.import_module(modname), fn_name or "run")
     kwargs = {}
     if "--toy" in extra:
-        if "toy" not in inspect.signature(mod.run).parameters:
+        if "toy" not in inspect.signature(fn).parameters:
             raise SystemExit(f"suite {name!r} does not support --toy")
         kwargs["toy"] = True
     print("name,us_per_call,derived")
-    for row_name, us, derived in mod.run(**kwargs):
+    for row_name, us, derived in fn(**kwargs):
         print(f"{row_name},{us:.1f},{derived}", flush=True)
 
 

@@ -6,6 +6,9 @@ network-less environment.
 * Puts ``tests/`` on ``sys.path`` so the vendored
   ``tests/_hypothesis_fallback.py`` shim is importable from test modules
   regardless of pytest's rootdir/import mode.
+* Registers the ``slow`` marker: nightly-sized cases (e.g. the
+  streaming-scale recall guarantee) that the full local run includes but
+  CI deselects with ``-m "not slow"``.
 """
 
 from __future__ import annotations
@@ -18,3 +21,11 @@ for _p in (_ROOT / "src", _ROOT / "tests"):
     p = str(_p)
     if p not in sys.path:
         sys.path.insert(0, p)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: nightly-sized case — run locally/nightly, deselected in CI "
+        'via -m "not slow"',
+    )

@@ -2,10 +2,10 @@
 
 A small LM embeds a synthetic document corpus (mean-pooled hidden states),
 a SuCoEngine serves the embedding index, and batched requests flow through
-the continuous micro-batching AnnServer (retrieve) -> prompt-augment ->
-prefill -> continuous-batching decode.  Both stages share the same
-admission-queue serving design; the retrieval side is the paper's
-technique deployed as the retrieval layer of an LLM serving stack.
+the pipelined continuous micro-batching AsyncAnnServer (retrieve) ->
+prompt-augment -> prefill -> continuous-batching decode.  Both stages
+share the same admission-queue serving design; the retrieval side is the
+paper's technique deployed as the retrieval layer of an LLM serving stack.
 
     PYTHONPATH=src python examples/rag_serving.py
 """
@@ -20,7 +20,7 @@ from repro.configs import reduced_config
 from repro.core import EnginePolicy, SuCoConfig, SuCoEngine
 from repro.launch.serve import Request, Server
 from repro.models import Model, backbone
-from repro.serve.ann import AnnRequest, AnnServer, latency_summary
+from repro.serve.ann import AnnRequest, AsyncAnnServer, latency_summary
 
 
 def embed(model: Model, params, tokens: jnp.ndarray) -> jnp.ndarray:
@@ -61,9 +61,13 @@ def main() -> None:
     queries[:, -2:] = rng.integers(0, cfg.vocab_size, (n_req, 2))
     q_emb = embed(model, params, jnp.asarray(queries))
 
-    # --- retrieval via the continuous micro-batching ANN server
+    # --- retrieval via the pipelined continuous micro-batching ANN server:
+    # with several micro-batches queued, dispatch of batch t+1 overlaps the
+    # device executing batch t.  Prefer the synchronous AnnServer when the
+    # queue rarely holds more than one batch (interactive single requests)
+    # — there pipelining only defers materialisation without overlap.
     engine.warmup(batch_sizes=(1, 3), ks=(3,))
-    ann = AnnServer(engine, max_batch=3)
+    ann = AsyncAnnServer(engine, max_batch=3, depth=2)
     ann.submit_many(
         [AnnRequest(i, np.asarray(q_emb[i]), k=3) for i in range(n_req)]
     )

@@ -32,9 +32,11 @@ from repro.core.suco import (
     SuCoConfig,
     SuCoEngine,
     SuCoIndex,
+    autoscale_buckets,
     batch_bucket,
     build_index,
     load_index_artifact,
+    padding_waste,
     suco_cell_ranks,
     suco_query,
     suco_query_streaming,
@@ -63,9 +65,11 @@ __all__ = [
     "SuCoConfig",
     "SuCoEngine",
     "SuCoIndex",
+    "autoscale_buckets",
     "batch_bucket",
     "build_index",
     "load_index_artifact",
+    "padding_waste",
     "suco_cell_ranks",
     "suco_query",
     "suco_query_streaming",

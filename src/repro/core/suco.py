@@ -80,10 +80,11 @@ Serving (the persistent subsystem on top of the algorithms):
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import math
-from typing import NamedTuple, Sequence
+from typing import Iterable, Mapping, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -112,6 +113,8 @@ __all__ = [
     "EngineStats",
     "SuCoEngine",
     "batch_bucket",
+    "autoscale_buckets",
+    "padding_waste",
     "DEFAULT_BATCH_BUCKETS",
 ]
 
@@ -645,6 +648,84 @@ def batch_bucket(m: int, buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS) -> int:
     return b
 
 
+def padding_waste(
+    histogram: Mapping[int, int], buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS
+) -> int:
+    """Expected padded-row waste of serving ``histogram`` with ``buckets``.
+
+    ``histogram`` maps observed micro-batch size -> occurrence count; every
+    batch of size m is padded to :func:`batch_bucket`\\ ``(m, buckets)``, so
+    the waste is ``sum(count * (bucket(m) - m))`` — the number of all-zero
+    query rows the engine computes and throws away.
+    """
+    return sum(
+        int(c) * (batch_bucket(int(m), buckets) - int(m))
+        for m, c in histogram.items()
+        if c
+    )
+
+
+def autoscale_buckets(
+    histogram: Mapping[int, int],
+    max_buckets: int = 8,
+    *,
+    fallback: Sequence[int] = DEFAULT_BATCH_BUCKETS,
+) -> tuple[int, ...]:
+    """Propose a batch-bucket set for an observed traffic histogram.
+
+    Picks at most ``max_buckets`` bucket sizes minimising the expected
+    padding waste (:func:`padding_waste`) of replaying the histogram, by
+    exact dynamic programming over the distinct observed sizes: an optimal
+    bucket boundary always coincides with some observed size (lowering a
+    bucket to the largest size it serves never increases waste), so the
+    search space is subsets of the observed sizes that contain the maximum
+    — the proposal therefore always covers the observed max batch, and
+    oversize bursts still fall through to ``batch_bucket``'s power-of-two
+    overflow rule.  An empty histogram returns ``fallback`` unchanged.
+    """
+    if max_buckets < 1:
+        raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
+    hist = {int(m): int(c) for m, c in histogram.items() if int(c) > 0}
+    if not hist:
+        return tuple(sorted(set(fallback)))
+    if min(hist) < 1:
+        raise ValueError(f"batch sizes must be >= 1, got {sorted(hist)[0]}")
+    sizes = sorted(hist)
+    u = len(sizes)
+    n_b = min(max_buckets, u)
+    # prefix sums -> O(1) segment waste: serving sizes[i..j] with bucket
+    # sizes[j] wastes sizes[j]*sum(cnt) - sum(cnt*size) over the segment.
+    pc = [0] * (u + 1)
+    pm = [0] * (u + 1)
+    for i, s in enumerate(sizes):
+        pc[i + 1] = pc[i] + hist[s]
+        pm[i + 1] = pm[i] + hist[s] * s
+
+    def seg(i: int, j: int) -> int:  # waste of sizes[i..j] under bucket sizes[j]
+        return sizes[j] * (pc[j + 1] - pc[i]) - (pm[j + 1] - pm[i])
+
+    inf = float("inf")
+    dp = [[inf] * u for _ in range(n_b + 1)]
+    parent: list[list[int]] = [[-1] * u for _ in range(n_b + 1)]
+    for j in range(u):
+        dp[1][j] = seg(0, j)
+    for t in range(2, n_b + 1):
+        for j in range(t - 1, u):
+            for i in range(t - 2, j):
+                c = dp[t - 1][i] + seg(i + 1, j)
+                if c < dp[t][j]:
+                    dp[t][j] = c
+                    parent[t][j] = i
+    best_t = min(range(1, n_b + 1), key=lambda t: (dp[t][u - 1], t))
+    chosen = []
+    t, j = best_t, u - 1
+    while j >= 0 and t >= 1:
+        chosen.append(sizes[j])
+        j = parent[t][j]
+        t -= 1
+    return tuple(sorted(chosen))
+
+
 @dataclasses.dataclass(frozen=True)
 class EnginePolicy:
     """Query-serving policy owned by :class:`SuCoEngine`.
@@ -654,6 +735,11 @@ class EnginePolicy:
     size) is fixed once per engine; per-request inputs shrink to
     ``(queries, k)``.  ``mode="auto"`` resolves against the dataset size
     a single time at engine construction — requests never re-decide it.
+
+    The policy also accumulates a traffic histogram (``observe``, fed by
+    every engine query) from which :meth:`autoscale_buckets` proposes a
+    waste-minimising bucket set; the histogram is observational state, not
+    configuration — it never participates in equality or hashing.
     """
 
     alpha: float = 0.05
@@ -663,6 +749,38 @@ class EnginePolicy:
     score_impl: str = "auto"  # streaming scorer kernel dispatch
     block_n: int = 4096  # streaming chunk size
     batch_buckets: tuple[int, ...] = DEFAULT_BATCH_BUCKETS
+    traffic: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter, init=False, repr=False, compare=False
+    )
+
+    def observe(self, batch_sizes: Iterable[int]) -> None:
+        """Record observed micro-batch sizes into the traffic histogram."""
+        for m in batch_sizes:
+            m = int(m)
+            if m < 1:
+                raise ValueError(f"batch size must be >= 1, got {m}")
+            self.traffic[m] += 1
+
+    def autoscale_buckets(self, max_buckets: int | None = None) -> tuple[int, ...]:
+        """Bucket-set proposal from the observed traffic
+        (:func:`autoscale_buckets`); the configured buckets when nothing
+        has been observed yet."""
+        if max_buckets is None:
+            max_buckets = max(len(self.batch_buckets), 1)
+        return autoscale_buckets(
+            self.traffic, max_buckets, fallback=self.batch_buckets
+        )
+
+    def autoscaled(self, max_buckets: int | None = None) -> "EnginePolicy":
+        """A new policy serving the observed traffic with minimal padding
+        waste (same alpha/beta/metric/mode).  The histogram is carried
+        forward so a consumer can still warm exactly the observed sizes
+        (``SuCoEngine.warmup(batch_sizes=None)``)."""
+        new = dataclasses.replace(
+            self, batch_buckets=self.autoscale_buckets(max_buckets)
+        )
+        new.traffic.update(self.traffic)
+        return new
 
 
 class EngineStats(NamedTuple):
@@ -692,10 +810,14 @@ class SuCoEngine:
         self,
         x: jax.Array,
         index: SuCoIndex,
-        policy: EnginePolicy = EnginePolicy(),
+        policy: EnginePolicy | None = None,
     ):
         self.x = jnp.asarray(x)
         self.index = index
+        # None -> a fresh default policy per engine (policies carry a mutable
+        # traffic histogram, so a shared module-level default would bleed
+        # observations across engines).
+        policy = EnginePolicy() if policy is None else policy
         self.policy = policy
         if self.x.shape[-1] != index.spec.d:
             raise ValueError(
@@ -722,7 +844,7 @@ class SuCoEngine:
         config: SuCoConfig = SuCoConfig(),
         *,
         spec: sub.SubspaceSpec | None = None,
-        policy: EnginePolicy = EnginePolicy(),
+        policy: EnginePolicy | None = None,
     ) -> "SuCoEngine":
         """Build the index (Algorithm 2) and wrap it in an engine."""
         x = jnp.asarray(x)
@@ -730,11 +852,19 @@ class SuCoEngine:
 
     @classmethod
     def from_artifact(
-        cls, path, x: jax.Array, policy: EnginePolicy = EnginePolicy()
+        cls, path, x: jax.Array, policy: EnginePolicy | None = None
     ) -> "SuCoEngine":
         """Serve a persisted index (:meth:`SuCoIndex.save`) over ``x``."""
         index, _ = load_index_artifact(path)
         return cls(x, index, policy)
+
+    def autoscaled(self, max_buckets: int | None = None) -> "SuCoEngine":
+        """A new engine over the same ``(x, index)`` whose bucket set is the
+        autoscale proposal for this engine's observed traffic
+        (:meth:`EnginePolicy.autoscale_buckets`).  The new engine starts
+        with an empty jit cache — re-run :meth:`warmup` (its no-argument
+        form warms exactly the observed traffic) before serving."""
+        return SuCoEngine(self.x, self.index, self.policy.autoscaled(max_buckets))
 
     def save(self, path, config: SuCoConfig | None = None) -> None:
         """Persist this engine's index artifact (see :meth:`SuCoIndex.save`)."""
@@ -778,6 +908,7 @@ class SuCoEngine:
         self._queries += m
         self._padded += b - m
         self._buckets_seen.add((b, k))
+        self.policy.observe((m,))  # feed the autoscaler's traffic histogram
         if single:
             return QueryResult(res.ids[0], res.dists[0], res.scores[0])
         if b != m:
@@ -786,12 +917,20 @@ class SuCoEngine:
 
     def warmup(
         self,
-        batch_sizes: Sequence[int] = (1,),
+        batch_sizes: Sequence[int] | None = (1,),
         ks: Sequence[int] = (10,),
     ) -> int:
         """Pre-compile one executable per (bucket, k) covering the given
         traffic mix; returns the number of fresh compiles.  After a warmup
-        that covers the live mix, ``compile_count`` stays flat forever."""
+        that covers the live mix, ``compile_count`` stays flat forever.
+
+        ``batch_sizes=None`` warms the *observed* traffic: the sizes in the
+        policy's accumulated histogram (falling back to ``(1,)`` when no
+        traffic has been recorded) — the consumption path for
+        :meth:`autoscaled` engines, whose bucket set was proposed from the
+        same histogram."""
+        if batch_sizes is None:
+            batch_sizes = tuple(sorted(self.policy.traffic)) or (1,)
         before = self.compile_count
         d = self.index.spec.d
         for b in sorted({batch_bucket(m, self.policy.batch_buckets)

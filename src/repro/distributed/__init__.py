@@ -1,5 +1,7 @@
 from repro.distributed.engine import (
     DistSuCoConfig,
+    ShardedEnginePool,
+    ShardedSuCoEngine,
     build_sharded,
     index_shardings,
     make_query_fn,
@@ -10,6 +12,8 @@ from repro.distributed.elastic import reshard_index, index_to_host, index_from_h
 
 __all__ = [
     "DistSuCoConfig",
+    "ShardedEnginePool",
+    "ShardedSuCoEngine",
     "build_sharded",
     "index_shardings",
     "make_query_fn",

@@ -61,6 +61,7 @@ __all__ = [
     "build_sharded",
     "query_sharded",
     "ShardedSuCoEngine",
+    "ShardedEnginePool",
 ]
 
 
@@ -554,3 +555,152 @@ class ShardedSuCoEngine:
     def compile_count(self) -> int:
         """Number of compiled sharded query executables (one per bucket)."""
         return len(self._fns)
+
+
+# --------------------------------------------------------------------------
+# ShardedEnginePool: per-k engines for heterogeneous-k sharded traffic
+# --------------------------------------------------------------------------
+
+
+class ShardedEnginePool:
+    """Per-``k`` pool of :class:`ShardedSuCoEngine` over one placed dataset.
+
+    A sharded engine bakes ``k`` into its config (per-shard candidate
+    pools are sized ``max(k, beta * n_local)``), so heterogeneous-``k``
+    traffic cannot share one engine without retracing or serialising on a
+    single ``k``.  The pool places ``(x, index)`` on the mesh exactly once
+    and keeps one engine per ``k`` — all sharing the placed arrays (a
+    ``device_put`` onto the sharding they already carry is a no-op), the
+    artifact format, and the bucketing policy — so each request binds to
+    the pre-warmed ``(bucket, k)`` executable of its ``k``'s engine.
+    After :meth:`warmup` covers the traffic mix, the pool-wide
+    ``compile_count`` stays flat: the zero-retrace invariant holds across
+    every ``k``.
+    """
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        cfg: DistSuCoConfig,
+        x: jax.Array,
+        index: SuCoIndex,
+        *,
+        ks: Sequence[int] = (),
+        batch_buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS,
+    ):
+        self.mesh = mesh
+        self.cfg = cfg
+        self._sh = index_shardings(mesh, cfg)
+        self.x = jax.device_put(x, self._sh["x"])
+        self.index = shard_index(mesh, cfg, index)
+        self.batch_buckets = tuple(batch_buckets)
+        self._engines: dict[int, ShardedSuCoEngine] = {}
+        for k in ks:
+            self.engine_for(k)
+
+    # ---- lifecycle -------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        mesh: Mesh,
+        cfg: DistSuCoConfig,
+        x: jax.Array,
+        *,
+        ks: Sequence[int] = (),
+        batch_buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS,
+    ) -> "ShardedEnginePool":
+        """Distributed Algorithm 2 (:func:`build_sharded`) -> pool."""
+        sh = index_shardings(mesh, cfg)
+        x = jax.device_put(x, sh["x"])
+        return cls(mesh, cfg, x, build_sharded(mesh, x, cfg), ks=ks,
+                   batch_buckets=batch_buckets)
+
+    @classmethod
+    def from_artifact(
+        cls,
+        path,
+        mesh: Mesh,
+        cfg: DistSuCoConfig,
+        x: jax.Array,
+        *,
+        ks: Sequence[int] = (),
+        batch_buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS,
+    ) -> "ShardedEnginePool":
+        """Serve a ``SuCoIndex.save`` artifact across the mesh, per-k pooled."""
+        index, _ = load_index_artifact(path)
+        return cls(mesh, cfg, x, index, ks=ks, batch_buckets=batch_buckets)
+
+    def save(self, path, config=None) -> None:
+        """Persist the shared index artifact (gathers the sharded arrays)."""
+        local = jax.device_put(self.index, jax.devices()[0])
+        local.save(path, config)
+
+    # ---- binding ---------------------------------------------------------
+
+    @property
+    def ks(self) -> tuple[int, ...]:
+        """The ``k`` values with live engines."""
+        return tuple(sorted(self._engines))
+
+    def engine_for(self, k: int) -> ShardedSuCoEngine:
+        """The pool member serving ``k`` (created on first use: a cold
+        engine compiles on its first query, so pre-declare the traffic's
+        ``k`` mix via ``ks=``/:meth:`warmup` to keep serving retrace-free)."""
+        eng = self._engines.get(k)
+        if eng is None:
+            if not 1 <= k <= self.x.shape[0]:
+                raise ValueError(f"k={k} must be in [1, n={self.x.shape[0]}]")
+            eng = ShardedSuCoEngine(
+                self.mesh,
+                dataclasses.replace(self.cfg, k=k),
+                self.x,
+                self.index,
+                batch_buckets=self.batch_buckets,
+            )
+            self._engines[k] = eng
+        return eng
+
+    # ---- query -----------------------------------------------------------
+
+    def query(self, q: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+        """``q: (m, d), k -> (ids (m, k), dists (m, k))`` global top-k via
+        the per-``k`` engine's bucketed executable."""
+        return self.engine_for(k).query(q)
+
+    def warmup(
+        self,
+        batch_sizes: Sequence[int] = (1,),
+        ks: Sequence[int] | None = None,
+    ) -> int:
+        """Pre-compile one executable per (bucket, k) over the traffic mix;
+        returns the number of fresh compiles.  ``ks=None`` warms the
+        engines already in the pool."""
+        ks = self.ks if ks is None else ks
+        return sum(self.engine_for(k).warmup(batch_sizes) for k in sorted(set(ks)))
+
+    @property
+    def compile_count(self) -> int:
+        """Pool-wide compiled executables (sum of per-k jit caches) — the
+        zero-retrace serving invariant is that this is flat after warmup."""
+        return sum(e.compile_count for e in self._engines.values())
+
+    @staticmethod
+    def aot_query_fn(
+        mesh: Mesh,
+        cfg: DistSuCoConfig,
+        n: int,
+        d: int,
+        m: int,
+        k: int,
+        *,
+        batch_buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS,
+    ):
+        """Ahead-of-time form of one pool binding: the jitted sharded query
+        step a live pool would dispatch an ``(m, k)`` request to, plus the
+        padded batch size — :meth:`ShardedSuCoEngine.aot_query_fn` with
+        ``k`` bound the way :meth:`engine_for` binds it."""
+        return ShardedSuCoEngine.aot_query_fn(
+            mesh, dataclasses.replace(cfg, k=k), n, d, m,
+            batch_buckets=batch_buckets,
+        )

@@ -23,7 +23,12 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.engine import DistSuCoConfig, ShardedSuCoEngine, index_shardings
+from repro.distributed.engine import (
+    DistSuCoConfig,
+    ShardedEnginePool,
+    ShardedSuCoEngine,
+    index_shardings,
+)
 from repro.launch.dryrun import RESULTS_DIR, collective_bytes
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
@@ -33,7 +38,8 @@ DIM = 128
 N_QUERIES = 256
 
 
-def suco_cell(*, multi_pod: bool, build: bool = False) -> dict:
+def suco_cell(*, multi_pod: bool, build: bool = False,
+              pool_ks: tuple[int, ...] = (10,)) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     pa = ("pod", "data") if multi_pod else ("data",)
     cfg = DistSuCoConfig(
@@ -77,8 +83,23 @@ def suco_cell(*, multi_pod: bool, build: bool = False) -> dict:
                     "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
     except Exception as e:  # pragma: no cover
         cost_rec = {"error": str(e)}
+    # Heterogeneous-k serving lowers one executable per pool binding: prove
+    # each (bucket, k != cfg.k) binding lowers independently through the
+    # ShardedEnginePool AOT path (lower-only — the k=cfg.k compile above
+    # already prices the full pipeline).
+    pool_rec = []
+    for k in pool_ks:
+        t0 = time.time()
+        pfn, pmq = ShardedEnginePool.aot_query_fn(mesh, cfg, N_POINTS, DIM,
+                                                  N_QUERIES, k)
+        pq = jax.ShapeDtypeStruct((pmq, DIM), jnp.float32)
+        pfn.lower(x, c_shape, c_shape, ids_shape, cnt_shape, pq)
+        pool_rec.append({"k": int(k), "mq": int(pmq),
+                         "lower_s": round(time.time() - t0, 2)})
+
     hlo = compiled.as_text()
     return {
+        "pool": pool_rec,
         "arch": "suco-engine-1b",
         "shape": "serve_q256",
         "multi_pod": multi_pod,
@@ -101,6 +122,8 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--ks", type=int, nargs="*", default=[10],
+                    help="extra per-k pool bindings to lower (besides cfg.k)")
     args = ap.parse_args()
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     meshes = (False, True) if args.both_meshes else (args.multi_pod,)
@@ -112,7 +135,7 @@ def main() -> None:
         print(f"[dryrun] suco engine 1B x 128d ({'2 pods' if mp else '1 pod'}) ...",
               flush=True)
         try:
-            rec = suco_cell(multi_pod=mp)
+            rec = suco_cell(multi_pod=mp, pool_ks=tuple(args.ks))
         except Exception as e:
             rec = {"arch": "suco-engine-1b", "shape": "serve_q256",
                    "multi_pod": mp, "status": "error",

@@ -12,6 +12,20 @@ from admission to result materialisation, and every step records the
 engine's compile count — flat-after-warmup is the serving invariant the
 benchmark suite asserts.
 
+Two step disciplines over the same admission queue:
+
+* :class:`AnnServer` — synchronous: each step dispatches one micro-batch
+  and blocks on its results before the next admission.  Simplest
+  accounting, lowest single-request latency when the queue never holds
+  more than one batch.
+* :class:`AsyncAnnServer` — pipelined: dispatch is decoupled from result
+  delivery through a bounded in-flight window (``depth``).  jax dispatch
+  is asynchronous, so enqueueing batch t+1 returns while batch t still
+  executes; the host forms and pads the next micro-batch during device
+  time and only blocks (``np.asarray`` materialisation) when the window
+  is full or the queue drains.  Per-request latency splits into queueing
+  (admission -> dispatch) and execution (dispatch -> materialisation).
+
 CPU-scale usage:
   PYTHONPATH=src python -m repro.serve.ann --n 20000 --d 32 --requests 64
 """
@@ -26,9 +40,16 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.core.sc_linear import QueryResult
 from repro.core.suco import EnginePolicy, SuCoConfig, SuCoEngine, batch_bucket
 
-__all__ = ["AnnRequest", "StepRecord", "AnnServer", "latency_summary"]
+__all__ = [
+    "AnnRequest",
+    "StepRecord",
+    "AnnServer",
+    "AsyncAnnServer",
+    "latency_summary",
+]
 
 
 @dataclasses.dataclass
@@ -54,6 +75,18 @@ class AnnRequest:
         """Admission-to-result latency (queueing + padding + execution)."""
         return self.t_done - self.t_submit
 
+    @property
+    def queue_s(self) -> float:
+        """Queueing latency: admission to micro-batch dispatch."""
+        return self.t_start - self.t_submit
+
+    @property
+    def exec_s(self) -> float:
+        """Execution latency: dispatch to host-side materialisation (for
+        the pipelined server this includes time spent waiting behind other
+        in-flight batches on the device stream)."""
+        return self.t_done - self.t_start
+
 
 @dataclasses.dataclass(frozen=True)
 class StepRecord:
@@ -62,8 +95,10 @@ class StepRecord:
     n_requests: int
     k: int
     bucket: int
-    step_s: float
+    step_s: float  # dispatch -> results materialised on host
     compile_count: int  # engine executables after this step
+    dispatch_s: float = 0.0  # host time to form/pad/enqueue the batch
+    # (the synchronous server folds dispatch into step_s and leaves this 0)
 
 
 class AnnServer:
@@ -97,10 +132,12 @@ class AnnServer:
         for r in reqs:
             self.submit(r)
 
-    def step(self) -> list[AnnRequest]:
-        """Run one micro-batch; returns the requests it completed."""
-        if not self.queue:
-            return []
+    def _form_batch(self) -> tuple[list[AnnRequest], int]:
+        """Pop the next same-``k`` micro-batch off the admission queue.
+
+        Serves the FIFO-first ``k`` and defers other-``k`` requests without
+        losing their queue rank.
+        """
         k = self.queue[0].k
         batch: list[AnnRequest] = []
         deferred: deque[AnnRequest] = deque()
@@ -108,6 +145,13 @@ class AnnServer:
             r = self.queue.popleft()
             (batch if r.k == k else deferred).append(r)
         self.queue = deferred + self.queue  # deferrals keep their queue rank
+        return batch, k
+
+    def step(self) -> list[AnnRequest]:
+        """Run one micro-batch; returns the requests it completed."""
+        if not self.queue:
+            return []
+        batch, k = self._form_batch()
 
         t0 = self.clock()
         for r in batch:
@@ -144,12 +188,149 @@ class AnnServer:
         return self.completed
 
 
+@dataclasses.dataclass
+class _Inflight:
+    """A dispatched-but-unmaterialised micro-batch riding the device stream."""
+
+    batch: list[AnnRequest]
+    k: int
+    result: QueryResult
+    t_dispatch: float
+    dispatch_s: float
+
+
+class AsyncAnnServer(AnnServer):
+    """Pipelined continuous micro-batching: dispatch overlaps execution.
+
+    The double-buffered step loop the synchronous server cannot express:
+    ``step`` forms, pads and *enqueues* the next micro-batch — jax
+    dispatch is asynchronous, so the call returns while the previous
+    batch still executes — and results are materialised
+    (``np.asarray``, the only blocking point) only once ``depth``
+    micro-batches are in flight or the queue drains.  With the default
+    ``depth=2`` the host assembles batch t+1 while batch t executes;
+    the device stream never waits on host-side batch formation.
+
+    Completion order equals dispatch order (the in-flight window is a
+    FIFO), so results are a permutation of the synchronous server's only
+    across the interleaving of ``k`` classes — per request the answer is
+    identical.  A malformed micro-batch fails at dispatch (the engine
+    validates shapes/k before enqueueing) and completes-with-error
+    without touching the healthy batches already in flight.
+    """
+
+    def __init__(
+        self,
+        engine: SuCoEngine,
+        max_batch: int = 64,
+        clock: Callable[[], float] = time.perf_counter,
+        *,
+        depth: int = 2,
+    ):
+        super().__init__(engine, max_batch, clock)
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        self.depth = depth
+        self._inflight: deque[_Inflight] = deque()
+
+    @property
+    def inflight(self) -> int:
+        """Micro-batches dispatched but not yet materialised."""
+        return len(self._inflight)
+
+    def _dispatch(self) -> None:
+        """Form the next micro-batch and enqueue it on the device (non-blocking)."""
+        batch, k = self._form_batch()
+        t0 = self.clock()
+        for r in batch:
+            r.t_start = t0
+        try:
+            res = self.engine.query(np.stack([r.query for r in batch]), k=k)
+        except ValueError as e:
+            # Validation failures surface here, before anything reaches the
+            # device: the malformed micro-batch completes-with-error and the
+            # in-flight healthy batches are untouched.
+            t1 = self.clock()
+            for r in batch:
+                r.error, r.t_done = str(e), t1
+            self.completed.extend(batch)
+            self.steps.append(
+                StepRecord(
+                    n_requests=len(batch),
+                    k=k,
+                    bucket=batch_bucket(len(batch), self.engine.policy.batch_buckets),
+                    step_s=t1 - t0,
+                    compile_count=self.engine.compile_count,
+                    dispatch_s=t1 - t0,
+                )
+            )
+            return
+        self._inflight.append(
+            _Inflight(batch, k, res, t0, dispatch_s=self.clock() - t0)
+        )
+
+    def _retire(self) -> list[AnnRequest]:
+        """Materialise the oldest in-flight batch (blocks until it is done)."""
+        fl = self._inflight.popleft()
+        ids = np.asarray(fl.result.ids)  # blocks until the device finishes
+        dists = np.asarray(fl.result.dists)
+        t1 = self.clock()
+        for i, r in enumerate(fl.batch):
+            r.ids, r.dists, r.t_done = ids[i], dists[i], t1
+        self.completed.extend(fl.batch)
+        self.steps.append(
+            StepRecord(
+                n_requests=len(fl.batch),
+                k=fl.k,
+                bucket=batch_bucket(len(fl.batch), self.engine.policy.batch_buckets),
+                step_s=t1 - fl.t_dispatch,
+                compile_count=self.engine.compile_count,
+                dispatch_s=fl.dispatch_s,
+            )
+        )
+        return fl.batch
+
+    def step(self) -> list[AnnRequest]:
+        """Dispatch the next micro-batch; retire batches past the window.
+
+        Returns the requests *completed* this step (possibly none — the
+        freshly dispatched batch completes on a later step).
+        """
+        before = len(self.completed)
+        if self.queue:
+            self._dispatch()
+        while len(self._inflight) > self.depth:
+            self._retire()
+        return self.completed[before:]
+
+    def flush(self) -> list[AnnRequest]:
+        """Materialise every in-flight batch (result delivery barrier)."""
+        done: list[AnnRequest] = []
+        while self._inflight:
+            done.extend(self._retire())
+        return done
+
+    def run_until_drained(self) -> list[AnnRequest]:
+        while self.queue:
+            self.step()
+        self.flush()
+        return self.completed
+
+
 def latency_summary(requests: Sequence[AnnRequest]) -> dict:
-    """QPS + latency percentiles for a completed request set."""
+    """QPS + latency percentiles for a completed request set.
+
+    End-to-end latency is split into its queueing (admission -> dispatch)
+    and execution (dispatch -> materialisation) components so pipelined
+    and synchronous runs can be compared on where requests spend time,
+    not just on the total.
+    """
     done = [r for r in requests if r.done]
     if not done:
         return dict(n_requests=0)
     lat = np.asarray([r.latency_s for r in done])
+    queue = np.asarray([r.queue_s for r in done])
+    execu = np.asarray([r.exec_s for r in done])
     wall = max(r.t_done for r in done) - min(r.t_submit for r in done)
     return dict(
         n_requests=len(done),
@@ -158,6 +339,10 @@ def latency_summary(requests: Sequence[AnnRequest]) -> dict:
         p99_ms=float(np.percentile(lat, 99) * 1e3),
         mean_ms=float(lat.mean() * 1e3),
         max_ms=float(lat.max() * 1e3),
+        queue_p50_ms=float(np.percentile(queue, 50) * 1e3),
+        queue_p99_ms=float(np.percentile(queue, 99) * 1e3),
+        exec_p50_ms=float(np.percentile(execu, 50) * 1e3),
+        exec_p99_ms=float(np.percentile(execu, 99) * 1e3),
     )
 
 
@@ -168,6 +353,10 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sync", action="store_true",
+                    help="use the synchronous step loop (default: pipelined)")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="pipelined in-flight window (ignored with --sync)")
     args = ap.parse_args()
 
     from repro.data import make_dataset
@@ -181,7 +370,10 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     # cover every bucket a <= max_batch micro-batch can land in
     engine.warmup(batch_sizes=range(1, args.max_batch + 1), ks=(5, 10))
-    server = AnnServer(engine, max_batch=args.max_batch)
+    if args.sync:
+        server = AnnServer(engine, max_batch=args.max_batch)
+    else:
+        server = AsyncAnnServer(engine, max_batch=args.max_batch, depth=args.depth)
     server.submit_many(
         AnnRequest(i, ds.x[rng.integers(0, args.n)], k=int(rng.choice([5, 10])))
         for i in range(args.requests)
@@ -189,8 +381,10 @@ def main() -> None:
     done = server.run_until_drained()
     s = latency_summary(done)
     print(
-        f"[ann-serve] {s['n_requests']} requests in {len(server.steps)} steps: "
-        f"{s['qps']:.1f} qps, p50 {s['p50_ms']:.1f} ms, p99 {s['p99_ms']:.1f} ms, "
+        f"[ann-serve{'' if args.sync else '-async'}] "
+        f"{s['n_requests']} requests in {len(server.steps)} steps: "
+        f"{s['qps']:.1f} qps, p50 {s['p50_ms']:.1f} ms, p99 {s['p99_ms']:.1f} ms "
+        f"(queue p50 {s['queue_p50_ms']:.1f} / exec p50 {s['exec_p50_ms']:.1f}), "
         f"executables {engine.compile_count}"
     )
 

@@ -124,6 +124,33 @@ _SCRIPT = textwrap.dedent(
         ids_a, _ = eng2.query(q)
         assert np.array_equal(np.asarray(ids_a), np.asarray(ids)), "artifact round trip"
 
+    # ShardedEnginePool: per-k engines for heterogeneous-k traffic over one
+    # placed (x, index).  A mixed-k replay binds each request to its k's
+    # pre-warmed (bucket, k) executable: pool-wide compile count stays flat,
+    # the k=cfg.k path is bit-identical to query_sharded, and every k agrees
+    # with the local engine on the same index.
+    from repro.distributed.engine import ShardedEnginePool
+    from repro.core import EnginePolicy, SuCoEngine
+    pool = ShardedEnginePool(mesh, cfg, jnp.asarray(ds.x), idx, ks=(5, 10))
+    p_warm = pool.warmup(batch_sizes=(1, 16))
+    assert pool.ks == (5, 10)
+    for mq_r, k_r in ((16, 10), (1, 5), (16, 5), (1, 10), (16, 10)):
+        ids_k, dists_k = pool.query(q[:mq_r], k_r)
+        assert ids_k.shape == (mq_r, k_r), (ids_k.shape, mq_r, k_r)
+    assert pool.compile_count == p_warm, "pool retraced under mixed-k replay"
+    ids_p, _ = pool.query(q, 10)
+    assert np.array_equal(np.asarray(ids_p), np.asarray(ids)), "pool != query_sharded"
+    leng = SuCoEngine(jnp.asarray(ds.x), local_idx,
+                      EnginePolicy(alpha=0.05, beta=0.02))
+    for k_r in (5, 10):
+        ids_k, _ = pool.query(q, k_r)
+        ids_l = np.asarray(leng.query(jnp.asarray(ds.queries), k=k_r).ids)
+        ov_k = np.mean([
+            len(set(map(int, ids_k[i])) & set(map(int, ids_l[i]))) / k_r
+            for i in range(16)
+        ])
+        assert ov_k >= 0.9, f"pool k={k_r} disagrees with local engine: {ov_k}"
+
     print("DISTRIBUTED_OK", r, overlap, r2, overlap2)
     """
 )
@@ -135,7 +162,7 @@ def test_distributed_engine_subprocess():
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     out = subprocess.run(
         [sys.executable, "-c", _SCRIPT], env=env, capture_output=True, text=True,
-        timeout=600,
+        timeout=900,
     )
     assert out.returncode == 0, f"stdout={out.stdout}\nstderr={out.stderr[-3000:]}"
     assert "DISTRIBUTED_OK" in out.stdout

@@ -128,6 +128,19 @@ def test_engine_compiles_exactly_one_executable_per_bucket_k(ds, index):
     assert (4, 10) in stats.buckets and (16, 10) in stats.buckets
 
 
+def test_engine_default_policy_entry_points(ds, index):
+    """policy=None constructs a fresh default policy per engine — the
+    documented default entry points work, and no traffic histogram is
+    shared between default-constructed engines."""
+    eng = SuCoEngine(jnp.asarray(ds.x), index)
+    assert eng.mode == "dense" and eng.policy.alpha == EnginePolicy().alpha
+    res = eng.query(jnp.asarray(ds.queries[:2]), k=5)
+    assert np.asarray(res.ids).shape == (2, 5)
+    other = SuCoEngine(jnp.asarray(ds.x), index)
+    assert eng.policy is not other.policy
+    assert dict(eng.policy.traffic) == {2: 1} and not other.policy.traffic
+
+
 def test_engine_mode_resolved_once(ds, index):
     engine = SuCoEngine(jnp.asarray(ds.x), index, POLICY)
     assert engine.mode == "dense"  # n=4000 < STREAMING_MIN_N

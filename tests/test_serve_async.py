@@ -1,0 +1,144 @@
+"""Async pipelined AnnServer: answers identical to sync, honest accounting,
+fault isolation across the in-flight window, zero retraces under mixed-k
+replay — the serving contracts the benchmark suite's numbers stand on."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import EnginePolicy, SuCoConfig, SuCoEngine, build_index
+from repro.data import make_dataset
+from repro.serve.ann import AnnRequest, AnnServer, AsyncAnnServer, latency_summary
+
+CFG = SuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=4, seed=0)
+POLICY_BUCKETS = (4, 16)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("gaussian_mixture", 4000, 32, m=40, k=10, seed=0)
+
+
+@pytest.fixture(scope="module")
+def index(ds):
+    return build_index(jnp.asarray(ds.x), CFG)
+
+
+def _engine(ds, index):
+    return SuCoEngine(
+        jnp.asarray(ds.x), index,
+        EnginePolicy(alpha=0.05, beta=0.02, batch_buckets=POLICY_BUCKETS),
+    )
+
+
+def _mixed_requests(ds, ks=(10, 10, 5, 10, 5, 5, 10, 5, 10, 10, 5, 10)):
+    return [AnnRequest(i, ds.queries[i], k=k) for i, k in enumerate(ks)]
+
+
+def test_async_results_equal_sync_modulo_permutation(ds, index):
+    """Same trace through both step disciplines: the completed sets hold the
+    same rids, and every request's answer is bit-identical — completion
+    order is the only thing pipelining may permute."""
+    engine = _engine(ds, index)
+    engine.warmup(batch_sizes=(1, 4, 16), ks=(5, 10))
+    sync = AnnServer(engine, max_batch=4)
+    sync.submit_many(_mixed_requests(ds))
+    sync.run_until_drained()
+    pipelined = AsyncAnnServer(engine, max_batch=4, depth=2)
+    pipelined.submit_many(_mixed_requests(ds))
+    pipelined.run_until_drained()
+
+    by_rid_sync = {r.rid: r for r in sync.completed}
+    by_rid_async = {r.rid: r for r in pipelined.completed}
+    assert set(by_rid_sync) == set(by_rid_async)
+    for rid, rs in by_rid_sync.items():
+        ra = by_rid_async[rid]
+        assert ra.k == rs.k and ra.done and rs.done
+        np.testing.assert_array_equal(ra.ids, rs.ids, err_msg=f"rid {rid}")
+        np.testing.assert_array_equal(ra.dists, rs.dists, err_msg=f"rid {rid}")
+    # the micro-batch schedule itself is identical (same queue dynamics);
+    # only the retire points differ
+    assert [(s.k, s.n_requests) for s in pipelined.steps] == [
+        (s.k, s.n_requests) for s in sync.steps
+    ]
+
+
+def test_async_latency_accounting_is_monotone(ds, index):
+    """Per request: admission <= dispatch <= materialisation, the
+    queue/exec split tiles the total exactly, and the summary surfaces
+    the split."""
+    engine = _engine(ds, index)
+    engine.warmup(batch_sizes=(1, 4), ks=(5, 10))
+    server = AsyncAnnServer(engine, max_batch=4, depth=2)
+    server.submit_many(_mixed_requests(ds))
+    done = server.run_until_drained()
+    assert len(done) == 12
+    for r in done:
+        assert r.t_submit <= r.t_start <= r.t_done, r.rid
+        assert r.queue_s >= 0 and r.exec_s >= 0
+        np.testing.assert_allclose(r.queue_s + r.exec_s, r.latency_s, rtol=1e-9)
+    s = latency_summary(done)
+    assert s["queue_p99_ms"] >= s["queue_p50_ms"] >= 0.0
+    assert s["exec_p99_ms"] >= s["exec_p50_ms"] >= 0.0
+    # steps record the dispatch/step split and stay within the window
+    for rec in server.steps:
+        assert 0.0 <= rec.dispatch_s <= rec.step_s
+
+
+def test_async_malformed_request_does_not_sink_pipelined_batches(ds, index):
+    """A malformed micro-batch fails at dispatch, while a healthy batch
+    already in flight — and healthy batches dispatched after it — still
+    deliver results."""
+    engine = _engine(ds, index)
+    n = ds.x.shape[0]
+    server = AsyncAnnServer(engine, max_batch=4, depth=2)
+    server.submit(AnnRequest(0, ds.queries[0], k=10))  # in flight first
+    server.submit(AnnRequest(1, ds.queries[1], k=n + 1))  # malformed k
+    server.submit(AnnRequest(2, ds.queries[2], k=10))  # dispatched after
+    done = server.run_until_drained()
+    assert len(done) == 3 and not server.queue and server.inflight == 0
+    by_rid = {r.rid: r for r in done}
+    assert not by_rid[1].done and "k=" in by_rid[1].error
+    assert by_rid[1].t_done >= by_rid[1].t_start
+    for rid in (0, 2):
+        assert by_rid[rid].done and by_rid[rid].error is None, rid
+        want = engine.query(ds.queries[rid], k=10)
+        np.testing.assert_array_equal(by_rid[rid].ids, np.asarray(want.ids))
+    assert latency_summary(done)["n_requests"] == 2  # only the healthy ones
+
+
+def test_async_zero_retraces_under_mixed_k_replay(ds, index):
+    """The serving invariant across the pipeline: a warmup covering the
+    (bucket, k) mix means no step of a mixed-k replay can compile."""
+    engine = _engine(ds, index)
+    engine.warmup(batch_sizes=(1, 2, 3, 4), ks=(5, 10))
+    warm = engine.compile_count
+    server = AsyncAnnServer(engine, max_batch=4, depth=2)
+    rng = np.random.default_rng(0)
+    server.submit_many(
+        [AnnRequest(i, ds.queries[i], k=int(rng.choice([5, 10]))) for i in range(40)]
+    )
+    server.run_until_drained()
+    assert engine.compile_count == warm, "async server retraced after warmup"
+    assert [s.compile_count for s in server.steps] == [warm] * len(server.steps)
+    assert len(server.completed) == 40
+
+
+def test_async_inflight_window_is_bounded(ds, index):
+    """The pipeline never holds more than ``depth`` unmaterialised
+    micro-batches — dispatch past the window forces a retire."""
+    engine = _engine(ds, index)
+    engine.warmup(batch_sizes=(1,), ks=(10,))
+    for depth in (1, 2, 3):
+        server = AsyncAnnServer(engine, max_batch=1, depth=depth)
+        server.submit_many([AnnRequest(i, ds.queries[i], k=10) for i in range(8)])
+        seen = 0
+        while server.queue:
+            server.step()
+            seen = max(seen, server.inflight)
+            assert server.inflight <= depth
+        assert seen == depth  # the window actually fills
+        server.flush()
+        assert server.inflight == 0 and len(server.completed) == 8
+    with pytest.raises(ValueError, match="depth"):
+        AsyncAnnServer(engine, depth=0)

@@ -1,0 +1,202 @@
+"""Property-based invariants of the serving stack.
+
+Uses the vendored deterministic hypothesis shim
+(:mod:`_hypothesis_fallback`) — seeded examples, reproducible failures —
+to pin the three algebraic facts the serving subsystem is built on:
+
+* :func:`repro.core.sc_linear.merge_topk_pool` is **chunking-invariant**
+  (any ascending-id block partition reproduces the dense lexicographic
+  top-p selection bit-for-bit, under both impls), **order-invariant**
+  under ``impl="sort"`` (arbitrary block arrival order — the contract the
+  docstring offers callers outside the streaming invariant), and its
+  merged pool is a **fixed point** under sentinel merges (idempotence:
+  draining an exhausted stream any number of times changes nothing).
+* ``batch_bucket`` **padding never changes results**: the rowwise
+  distance path is bitwise invariant to zero-padded batch rows, which is
+  the exact property that makes a padded engine bucket return the
+  unpadded computation's top-k.
+* :func:`repro.core.suco.autoscale_buckets` always **covers the observed
+  max** batch, respects ``max_buckets``, and never proposes a worse
+  bucket set (by expected padding waste) than the trivial single-bucket
+  cover.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.distances import pairwise_dist
+from repro.core.sc_linear import merge_topk_pool
+from repro.core.suco import (
+    DEFAULT_BATCH_BUCKETS,
+    autoscale_buckets,
+    batch_bucket,
+    padding_waste,
+)
+
+INT_MAX = np.iinfo(np.int32).max
+
+
+def _lex_topk(scores: np.ndarray, ids: np.ndarray, p: int):
+    """Reference (score desc, id asc) top-p selection, row by row."""
+    out_s, out_i = [], []
+    for s_row, i_row in zip(scores, ids):
+        order = np.lexsort((i_row, -s_row))[:p]
+        out_s.append(s_row[order])
+        out_i.append(i_row[order])
+    return np.asarray(out_s), np.asarray(out_i)
+
+
+def _merge_blocks(blocks, p: int, impl: str):
+    """Fold (scores, ids) blocks into a sentinel-initialised top-p pool."""
+    m = blocks[0][0].shape[0]
+    pool_s = jnp.full((m, p), -1, jnp.int32)
+    pool_i = jnp.full((m, p), INT_MAX, jnp.int32)
+    for s, i in blocks:
+        pool_s, pool_i = merge_topk_pool(
+            pool_s, pool_i, jnp.asarray(s), jnp.asarray(i), impl=impl
+        )
+    return np.asarray(pool_s), np.asarray(pool_i)
+
+
+@st.composite
+def _score_matrix(draw):
+    """(scores (m, n) int32 >= 0, pool size p, a random chunk partition)."""
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    m = draw(st.integers(1, 4))
+    n = draw(st.integers(1, 40))
+    p = draw(st.integers(1, 12))
+    # few distinct score values -> dense ties, the case that breaks naive merges
+    scores = rng.integers(0, 4, size=(m, n)).astype(np.int32)
+    cuts, at = [], 0
+    while at < n:
+        step = int(rng.integers(1, n - at + 1))
+        cuts.append((at, at + step))
+        at += step
+    return scores, p, cuts
+
+
+@given(_score_matrix())
+@settings(max_examples=25)
+def test_merge_topk_pool_chunking_invariant(case):
+    """Any ascending-id chunking == the dense lexicographic selection, for
+    both impls, including pools larger than the data (sentinel tail)."""
+    scores, p, cuts = case
+    m, n = scores.shape
+    ids = np.broadcast_to(np.arange(n, dtype=np.int32), (m, n))
+    want_s, want_i = _lex_topk(
+        np.pad(scores, ((0, 0), (0, p)), constant_values=-1),
+        np.pad(ids, ((0, 0), (0, p)), constant_values=INT_MAX),
+        p,
+    )
+    for impl in ("topk", "sort"):
+        got_s, got_i = _merge_blocks(
+            [(scores[:, a:b], ids[:, a:b]) for a, b in cuts], p, impl
+        )
+        np.testing.assert_array_equal(got_s, want_s, err_msg=f"{impl} scores")
+        np.testing.assert_array_equal(got_i, want_i, err_msg=f"{impl} ids")
+
+
+@given(_score_matrix())
+@settings(max_examples=15)
+def test_merge_topk_pool_order_invariant_with_sort_impl(case):
+    """impl="sort" owes callers arbitrary block order: reversing the block
+    arrival order must produce the identical pool."""
+    scores, p, cuts = case
+    m, n = scores.shape
+    ids = np.broadcast_to(np.arange(n, dtype=np.int32), (m, n))
+    blocks = [(scores[:, a:b], ids[:, a:b]) for a, b in cuts]
+    fwd = _merge_blocks(blocks, p, "sort")
+    rev = _merge_blocks(blocks[::-1], p, "sort")
+    np.testing.assert_array_equal(fwd[0], rev[0])
+    np.testing.assert_array_equal(fwd[1], rev[1])
+
+
+@given(_score_matrix())
+@settings(max_examples=15)
+def test_merge_topk_pool_idempotent_on_exhausted_stream(case):
+    """A merged pool is a fixed point: merging all-sentinel blocks (an
+    exhausted stream) any number of times returns the pool bit-for-bit."""
+    scores, p, cuts = case
+    m, n = scores.shape
+    ids = np.broadcast_to(np.arange(n, dtype=np.int32), (m, n))
+    blocks = [(scores[:, a:b], ids[:, a:b]) for a, b in cuts]
+    for impl in ("topk", "sort"):
+        pool_s, pool_i = _merge_blocks(blocks, p, impl)
+        sent_s = np.full((m, 7), -1, np.int32)
+        sent_i = np.full((m, 7), INT_MAX, np.int32)
+        again_s, again_i = pool_s, pool_i
+        for _ in range(2):
+            again_s, again_i = merge_topk_pool(
+                jnp.asarray(again_s), jnp.asarray(again_i),
+                jnp.asarray(sent_s), jnp.asarray(sent_i), impl=impl,
+            )
+        np.testing.assert_array_equal(np.asarray(again_s), pool_s)
+        np.testing.assert_array_equal(np.asarray(again_i), pool_i)
+
+
+@st.composite
+def _padded_batch(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    m = draw(st.integers(1, 9))
+    n = draw(st.integers(2, 24))
+    d = draw(st.integers(2, 16))
+    q = rng.normal(size=(m, d)).astype(np.float32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return q, x, m
+
+
+@given(_padded_batch())
+@settings(max_examples=15)
+def test_bucket_padding_never_changes_rowwise_distances(case):
+    """The serving-path distance impl is bitwise invariant to the zero rows
+    :func:`batch_bucket` padding appends — the property that makes padded
+    engine buckets answer exactly like the unpadded batch (and therefore
+    padding can never change a top-k result)."""
+    q, x, m = case
+    b = batch_bucket(m)
+    assert b >= m
+    q_pad = np.zeros((b, q.shape[1]), np.float32)
+    q_pad[:m] = q
+    for metric in ("l2", "l1"):
+        want = np.asarray(pairwise_dist(jnp.asarray(q), jnp.asarray(x), metric, impl="rowwise"))
+        got = np.asarray(pairwise_dist(jnp.asarray(q_pad), jnp.asarray(x), metric, impl="rowwise"))
+        np.testing.assert_array_equal(got[:m], want, err_msg=metric)
+
+
+@st.composite
+def _histogram(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    n_sizes = draw(st.integers(1, 12))
+    max_buckets = draw(st.integers(1, 8))
+    sizes = rng.integers(1, 200, size=n_sizes)
+    return {int(s): int(rng.integers(1, 50)) for s in sizes}, max_buckets
+
+
+@given(_histogram())
+@settings(max_examples=40)
+def test_autoscale_buckets_covers_observed_max(case):
+    hist, max_buckets = case
+    buckets = autoscale_buckets(hist, max_buckets)
+    assert len(buckets) <= max_buckets
+    assert max(buckets) >= max(hist), (buckets, hist)
+    assert buckets == tuple(sorted(buckets))
+    # every observed size lands in a configured bucket, never the
+    # power-of-two overflow rule
+    for msize in hist:
+        assert batch_bucket(msize, buckets) in buckets
+    # never worse than the trivial single-bucket cover, and exact when the
+    # budget covers every distinct size
+    waste = padding_waste(hist, buckets)
+    assert waste <= padding_waste(hist, (max(hist),))
+    if max_buckets >= len(hist):
+        assert waste == 0, (buckets, hist)
+
+
+def test_autoscale_buckets_empty_histogram_is_fallback():
+    assert autoscale_buckets({}, 4) == tuple(sorted(DEFAULT_BATCH_BUCKETS))
+    assert autoscale_buckets({}, 4, fallback=(4, 16)) == (4, 16)
