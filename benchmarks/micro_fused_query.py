@@ -1,0 +1,165 @@
+"""Micro-benchmark for the fused single-pass query engine.
+
+Splits the fused design's two claims apart so a regression in either is
+visible on its own row (CI fast lane: ``python -m benchmarks.micro_fused_query
+--toy``):
+
+* **prefilter hit-rate** — per streamed chunk, the fraction of rows beating
+  the carried pool minimum (the Pareto observation: after the pool warms
+  this is a thin tail) and the number of chunks that overflow the
+  ``survivor_cap`` compaction budget into the exact full-width fallback;
+* **merge-time split** — the per-chunk pool merge at the legacy full width
+  ``pool + block_n`` vs the fused pruned width ``pool + survivor_cap``,
+  plus the fused chunk stage (score + prefilter) vs the plain scorer;
+* **end to end** — ``suco_query_fused`` vs ``suco_query_streaming`` on the
+  same index (bit-identical answers, asserted here too).
+
+Rows print as ``name,us_per_call,derived`` like every suite in
+``benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.core import (
+    SuCoConfig,
+    autotune_tiles,
+    build_index,
+    merge_topk_pool,
+    merge_topk_pool_with_dists,
+    suco_query_fused,
+    suco_query_streaming,
+)
+from repro.core import subspace as sub
+from repro.core.suco import _pool_size, suco_cell_ranks, suco_scores
+from repro.data import GENERATORS
+from repro.kernels.sc_score.ops import sc_scores_cells, sc_scores_cells_prefilter
+
+FULL = dict(n=48_000, d=32, sqrt_k=16, n_subspaces=8, kmeans_iters=3, m=8,
+            k=10, alpha=0.05, beta=0.01, reps=20)
+TOY = dict(n=6_000, d=16, sqrt_k=8, n_subspaces=4, kmeans_iters=2, m=4,
+           k=5, alpha=0.05, beta=0.02, reps=5)
+
+
+def _time(fn, reps: int) -> float:
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(*, toy: bool = False) -> list[Row]:
+    scale = TOY if toy else FULL
+    n, d, m, k = scale["n"], scale["d"], scale["m"], scale["k"]
+    alpha, beta, reps = scale["alpha"], scale["beta"], scale["reps"]
+    x = jnp.asarray(
+        np.asarray(GENERATORS["gaussian_mixture"](n, d, 0)).astype(np.float32)
+    )
+    cfg = SuCoConfig(n_subspaces=scale["n_subspaces"], sqrt_k=scale["sqrt_k"],
+                     kmeans_iters=scale["kmeans_iters"], seed=0)
+    index = build_index(x, cfg)
+    q = x[:m] + 0.01
+    pool = _pool_size(n, k, beta)
+    tiles = autotune_tiles(
+        n, d, m, pool, n_subspaces=cfg.n_subspaces, n_cells=cfg.n_cells
+    )
+    bn, cap = min(tiles.block_n, n), min(tiles.survivor_cap, n)
+    n_blocks = -(-n // bn)
+    rows: list[Row] = []
+
+    # ---- prefilter hit-rate: replay the scan's thresholds in numpy ------
+    count = sub.collision_count(n, alpha)
+    scores = np.asarray(suco_scores(index, q, count))  # (m, n)
+    hit, slow_chunks = [], 0
+    pool_s = np.full((m, pool), -1, np.int64)
+    for b in range(n_blocks):
+        blk = scores[:, b * bn:(b + 1) * bn]
+        thr = pool_s.min(axis=1, keepdims=True)
+        survivors = (blk > thr).sum(axis=1)
+        hit.append(survivors.mean() / blk.shape[1])
+        if (survivors > cap).any():
+            slow_chunks += 1
+        both = np.concatenate([pool_s, blk.astype(np.int64)], axis=1)
+        pool_s = -np.sort(-both, axis=1)[:, :pool]
+    rows.append((
+        "micro_fused/prefilter",
+        0.0,
+        f"hit_rate={float(np.mean(hit)):.4f};warm_hit_rate="
+        f"{float(np.mean(hit[2:]) if len(hit) > 2 else hit[-1]):.4f};"
+        f"slow_chunks={slow_chunks}/{n_blocks};cap={cap}",
+    ))
+
+    # ---- chunk-stage + merge-time split ---------------------------------
+    ranks, cuts = jax.block_until_ready(suco_cell_ranks(index, q, count))
+    cells = jnp.pad(index.cell_ids, ((0, 0), (0, n_blocks * bn - n)))
+    cells_b = cells.reshape(cells.shape[0], n_blocks, bn)[:, n_blocks // 2]
+    thr_j = jnp.asarray(pool_s.min(axis=1), jnp.int32)
+    t_score = _time(lambda: sc_scores_cells(ranks, cuts, cells_b), reps)
+    t_pref = _time(
+        lambda: sc_scores_cells_prefilter(ranks, cuts, cells_b, thr_j)[0], reps
+    )
+    rows.append((
+        "micro_fused/chunk_stage", t_pref,
+        f"score_only_us={t_score:.1f};fused_overhead="
+        f"{(t_pref - t_score) / max(t_score, 1e-9):+.2%}",
+    ))
+
+    rng = np.random.default_rng(0)
+    int_max = np.iinfo(np.int32).max
+    ps = jnp.asarray(rng.integers(0, 8, (m, pool)), jnp.int32)
+    pi = jnp.asarray(np.arange(pool, dtype=np.int32)[None].repeat(m, 0))
+    pd = jnp.asarray(rng.random((m, pool), np.float32))
+    full_s = jnp.asarray(rng.integers(0, 8, (m, bn)), jnp.int32)
+    full_i = jnp.asarray(
+        pool + np.arange(bn, dtype=np.int32)[None].repeat(m, 0)
+    )
+    surv_s = full_s[:, :cap]
+    surv_i = full_i[:, :cap]
+    surv_d = jnp.asarray(rng.random((m, cap), np.float32))
+    t_full = _time(lambda: merge_topk_pool(ps, pi, full_s, full_i)[0], reps)
+    t_pruned = _time(
+        lambda: merge_topk_pool_with_dists(ps, pd, pi, surv_s, surv_d, surv_i)[0],
+        reps,
+    )
+    rows.append((
+        "micro_fused/merge_full", t_full,
+        f"width={pool + bn};pool={pool};block_n={bn}",
+    ))
+    rows.append((
+        "micro_fused/merge_pruned", t_pruned,
+        f"width={pool + cap};speedup_vs_full={t_full / max(t_pruned, 1e-9):.2f}",
+    ))
+
+    # ---- end to end ------------------------------------------------------
+    stream = lambda: suco_query_streaming(x, index, q, k=k, alpha=alpha, beta=beta)
+    fused = lambda: suco_query_fused(
+        x, index, q, k=k, alpha=alpha, beta=beta, tiles=tiles
+    )
+    r_s, r_f = stream(), fused()
+    np.testing.assert_array_equal(np.asarray(r_s.ids), np.asarray(r_f.ids))
+    np.testing.assert_array_equal(np.asarray(r_s.dists), np.asarray(r_f.dists))
+    t_stream = _time(lambda: stream().ids, reps)
+    t_fused = _time(lambda: fused().ids, reps)
+    rows.append((
+        "micro_fused/query_streaming", t_stream, f"n={n};m={m};k={k}",
+    ))
+    rows.append((
+        "micro_fused/query_fused", t_fused,
+        f"speedup={t_stream / max(t_fused, 1e-9):.2f};"
+        f"block_n={tiles.block_n};cap={tiles.survivor_cap}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(toy="--toy" in sys.argv[1:]):
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -10,8 +10,9 @@ the perf trajectory of ``build_index``.
 
 ``--suite serve`` runs the query-serving suite (warmed SuCoEngine behind
 the continuous micro-batching AnnServer) and writes ``BENCH_serve.json``
-(QPS + p50/p99 latency per traffic mix, zero-retrace-after-warmup
-asserted).  ``--suite serve_async`` is the pipelined-serving slice of the
+(QPS + p50/p99 latency per traffic mix for the legacy streaming engine
+*and* the fused single-pass engine — the ``fused`` section tracks the
+per-mix speedup — zero-retrace-after-warmup asserted for both).  ``--suite serve_async`` is the pipelined-serving slice of the
 same collection: sync-vs-async replay per mix, the traffic-driven bucket
 autoscale consumption path, and the heterogeneous-k sharded pool — the
 zero-retrace invariant asserted on all three.  ``--toy`` is the CI smoke
@@ -34,6 +35,7 @@ MODULES = (
     "benchmarks.fig9_12_competitors",
     "benchmarks.fig14_preprocessing",
     "benchmarks.micro_merge_pool",
+    "benchmarks.micro_fused_query",
 )
 
 # suite name -> "module" (entry point `run`) or "module:function"

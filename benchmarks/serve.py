@@ -15,6 +15,16 @@ requests, steps the server until drained, and records:
   flat across every step (the JSON records it per step; any growth is a
   retrace on the hot path and fails the suite's own assertion).
 
+The ``fused`` section runs the same traffic mixes on a second engine over
+the same ``(x, index)`` whose policy selects the **single-pass fused
+query engine** (``mode="fused"``, autotuned tiling — see
+:func:`repro.core.suco.suco_query_fused`): score -> Pareto-prune ->
+merge -> in-pass rerank in one scan.  The ``mixes`` section keeps the
+legacy chunked streaming path so the fused speedup
+(``fused[i]["fused_speedup"]`` = fused QPS / streaming QPS per mix) is
+tracked against the same baseline the artifact has carried since PR 3.
+Zero-retrace-after-warmup is asserted for the fused executables too.
+
 The ``serve_async`` sections (``--suite serve_async`` runs just these;
 ``--suite serve`` includes them) replay identical traces through the
 synchronous and pipelined servers and compare QPS / latency splits —
@@ -34,6 +44,12 @@ sharded-pool paths alike.
 ``--toy`` (CI smoke) shrinks the dataset/mixes and writes
 ``BENCH_serve.toy.json`` so the tracked artifact is never clobbered by a
 smoke run.
+
+Regenerating the tracked artifact: run ``python -m benchmarks.run --suite
+serve`` (no ``--toy``) on an otherwise-idle host and commit the rewritten
+``BENCH_serve.json`` — always regenerate the streaming ``mixes`` and the
+``fused`` section in the same run so the speedup compares like with like
+on one host.
 """
 
 from __future__ import annotations
@@ -242,6 +258,42 @@ def _run_sharded_pool(engine: SuCoEngine, scale: dict, all_ks) -> dict:
     )
 
 
+def _run_fused(engine: SuCoEngine, scale: dict, mixes: list[dict], all_ks) -> list[dict]:
+    """The fused single-pass engine over the same (x, index): identical
+    traffic (same rng seed as the streaming ``mixes`` run), QPS compared
+    mix-for-mix, zero retraces asserted for the fused executables."""
+    fused = SuCoEngine(
+        engine.x, engine.index,
+        EnginePolicy(alpha=engine.policy.alpha, beta=engine.policy.beta,
+                     mode="fused"),
+    )
+    t0 = time.perf_counter()
+    warm_compiles = fused.warmup(
+        batch_sizes=range(1, scale["max_batch"] + 1), ks=all_ks
+    )
+    warmup_s = time.perf_counter() - t0
+    rng = np.random.default_rng(0)  # same traffic as the streaming run
+    recs = []
+    for mix, base in zip(scale["mixes"], mixes):
+        rec = _run_mix(fused, mix, scale["max_batch"], rng)
+        assert rec["retraces_after_warmup"] == 0, (
+            f"fused mix {rec['name']} retraced after warmup"
+        )
+        rec["fused_speedup"] = rec["qps"] / base["qps"] if base["qps"] else 1.0
+        recs.append(rec)
+    tiles = fused.tiles_for(scale["max_batch"], int(all_ks[0]))
+    recs.insert(0, dict(
+        name="_meta",
+        mode=fused.mode,
+        tiles=dict(block_n=tiles.block_n, bm=tiles.bm, bn=tiles.bn,
+                   survivor_cap=tiles.survivor_cap),
+        warm_compiles=warm_compiles,
+        warmup_s=round(warmup_s, 3),
+        executables=fused.compile_count,
+    ))
+    return recs
+
+
 def collect(*, toy: bool = False, out_path: Path | None = None) -> dict:
     scale = TOY if toy else FULL
     if out_path is None:
@@ -249,7 +301,10 @@ def collect(*, toy: bool = False, out_path: Path | None = None) -> dict:
     x = np.asarray(
         GENERATORS["gaussian_mixture"](scale["n"], scale["d"], 0)
     ).astype(np.float32)
-    policy = EnginePolicy(alpha=0.05, beta=0.01)
+    # mode="streaming" pins the legacy chunked path: the `mixes` section
+    # stays comparable with the artifact's history, and the new `fused`
+    # section measures its speedup against it on the same host/run.
+    policy = EnginePolicy(alpha=0.05, beta=0.01, mode="streaming")
     config = SuCoConfig(
         n_subspaces=scale["n_subspaces"], sqrt_k=scale["sqrt_k"],
         kmeans_iters=scale["kmeans_iters"], seed=0,
@@ -274,6 +329,7 @@ def collect(*, toy: bool = False, out_path: Path | None = None) -> dict:
             f"mix {m['name']} retraced {m['retraces_after_warmup']} times "
             "after warmup — the engine bucketing failed to cover the traffic"
         )
+    fused = _run_fused(engine, scale, mixes, all_ks)
     serve_async = _run_serve_async(engine, scale, toy=toy)
     autoscale = _run_autoscale(engine, scale, all_ks)
     sharded_pool = _run_sharded_pool(engine, scale, all_ks)
@@ -298,6 +354,7 @@ def collect(*, toy: bool = False, out_path: Path | None = None) -> dict:
             executables=engine.compile_count,
         ),
         mixes=mixes,
+        fused=fused,
         serve_async=serve_async,
         autoscale=autoscale,
         sharded_pool=sharded_pool,
@@ -348,6 +405,17 @@ def run(*, toy: bool = False) -> list[Row]:
             f"retraces={m['retraces_after_warmup']}"
         )
         rows.append((f"serve/{m['name']}", us, derived))
+    fused_meta, fused_mixes = payload["fused"][0], payload["fused"][1:]
+    for m in fused_mixes:
+        us = 1e6 / m["qps"] if m["qps"] else float("nan")
+        derived = (
+            f"qps={m['qps']:.1f};speedup={m['fused_speedup']:.2f};"
+            f"p50_ms={m['p50_ms']:.2f};p99_ms={m['p99_ms']:.2f};"
+            f"block_n={fused_meta['tiles']['block_n']};"
+            f"cap={fused_meta['tiles']['survivor_cap']};"
+            f"retraces={m['retraces_after_warmup']}"
+        )
+        rows.append((f"serve_fused/{m['name']}", us, derived))
     meta = payload["meta"]
     rows.append((
         "serve/warmup",

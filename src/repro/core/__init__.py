@@ -18,10 +18,18 @@ from repro.core.subspace import (
 from repro.core.sc_linear import (
     QueryResult,
     merge_topk_pool,
+    merge_topk_pool_with_dists,
     rerank,
     rerank_candidates,
     sc_linear_query,
     sc_scores_from_subspaces,
+)
+from repro.core.tuning import (
+    MemoryLimits,
+    TileConfig,
+    autotune_build_block_n,
+    autotune_tiles,
+    backend_limits,
 )
 from repro.core.suco import (
     DEFAULT_BATCH_BUCKETS,
@@ -39,6 +47,7 @@ from repro.core.suco import (
     padding_waste,
     suco_cell_ranks,
     suco_query,
+    suco_query_fused,
     suco_query_streaming,
     suco_scores,
     activate_cells_sorted,
@@ -57,6 +66,12 @@ __all__ = [
     "rerank",
     "rerank_candidates",
     "merge_topk_pool",
+    "merge_topk_pool_with_dists",
+    "MemoryLimits",
+    "TileConfig",
+    "autotune_build_block_n",
+    "autotune_tiles",
+    "backend_limits",
     "STREAMING_MIN_N",
     "DEFAULT_BATCH_BUCKETS",
     "INDEX_ARTIFACT_VERSION",
@@ -72,6 +87,7 @@ __all__ = [
     "padding_waste",
     "suco_cell_ranks",
     "suco_query",
+    "suco_query_fused",
     "suco_query_streaming",
     "suco_scores",
     "activate_cells_sorted",

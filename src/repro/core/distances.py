@@ -20,7 +20,13 @@ import jax.numpy as jnp
 
 Metric = Literal["l2", "l1"]
 
-__all__ = ["pairwise_sqdist", "pairwise_dist", "sq_l2", "Metric"]
+__all__ = [
+    "pairwise_sqdist",
+    "pairwise_dist",
+    "rowwise_candidate_dist",
+    "sq_l2",
+    "Metric",
+]
 
 
 def sq_l2(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -68,6 +74,27 @@ def pairwise_sqdist(q: jax.Array, x: jax.Array, *, impl: str = "auto") -> jax.Ar
     if impl == "rowwise":
         return _sqdist_rowwise(q, x)
     return _sqdist_jnp(q, x)
+
+
+def rowwise_candidate_dist(
+    q: jax.Array, xc: jax.Array, metric: Metric = "l2"
+) -> jax.Array:
+    """Exact per-candidate distances ``q: (m, d), xc: (m, c, d) -> (m, c)``.
+
+    The fused streaming engine computes rerank distances in-pass for each
+    chunk's surviving rows; this helper pins the fp semantics to exactly
+    what :func:`repro.core.sc_linear.rerank_candidates` produces through
+    ``pairwise_dist(..., impl="rowwise")``: the reduction runs over ``d``
+    only (batch-padding-invariant), L2 accumulates in fp32, L1 reduces in
+    the inputs' promoted dtype — so a distance computed mid-scan is
+    bit-identical to the post-scan gather path it replaces.
+    """
+    if metric == "l2":
+        diff = q[:, None, :].astype(jnp.float32) - xc.astype(jnp.float32)
+        return jnp.sum(diff * diff, axis=-1)
+    if metric != "l1":
+        raise ValueError(f"unknown metric {metric!r}")
+    return jnp.sum(jnp.abs(q[:, None, :] - xc), axis=-1)
 
 
 def _l1_block(q: jax.Array, xb: jax.Array) -> jax.Array:

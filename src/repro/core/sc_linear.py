@@ -27,6 +27,7 @@ __all__ = [
     "rerank",
     "rerank_candidates",
     "merge_topk_pool",
+    "merge_topk_pool_with_dists",
 ]
 
 
@@ -150,6 +151,39 @@ def merge_topk_pool(
         raise ValueError(f"impl must be 'topk'|'sort', got {impl!r}")
     neg_sorted, ids_sorted = jax.lax.sort((-s, i), num_keys=2)
     return -neg_sorted[..., :p], ids_sorted[..., :p]
+
+
+def merge_topk_pool_with_dists(
+    pool_scores: jax.Array,
+    pool_dists: jax.Array,
+    pool_ids: jax.Array,
+    blk_scores: jax.Array,
+    blk_dists: jax.Array,
+    blk_ids: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """:func:`merge_topk_pool` for the fused engine's joint
+    ``(sc_score, exact_dist, id)`` pool.
+
+    Selection is identical: ``lax.top_k`` on the scores, whose position
+    tie-break equals the (score desc, id asc) order whenever every
+    equal-score run of the concatenated row is already id-ascending —
+    true for ascending-id blocks (all block ids exceed all pool ids) and
+    equally for a block pre-sorted by (score desc, id asc), the fused
+    overflow fallback's shape.  The pre-computed exact distances simply
+    ride along through the same gather, so the post-scan rerank gather
+    over ``x`` is never needed.  Sentinel entries carry ``dist = +inf``.
+    ``pool_*: (m, p)``, ``blk_*: (m, b)`` -> three ``(m, p)`` arrays.
+    """
+    p = pool_scores.shape[-1]
+    s = jnp.concatenate([pool_scores, blk_scores], axis=-1)
+    dd = jnp.concatenate([pool_dists, blk_dists], axis=-1)
+    i = jnp.concatenate([pool_ids, blk_ids], axis=-1)
+    vals, pos = jax.lax.top_k(s, p)
+    return (
+        vals,
+        jnp.take_along_axis(dd, pos, axis=-1),
+        jnp.take_along_axis(i, pos, axis=-1),
+    )
 
 
 @functools.partial(

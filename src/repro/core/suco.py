@@ -31,10 +31,25 @@ Query-memory model (two execution paths, identical results):
   id asc) order — exactly ``top_k``'s tie-break on the dense matrix, so
   the surviving pool, and therefore the reranked result, is bit-identical
   to the dense path.  Peak query memory O(m*(block_n + n_candidates)).
+* **fused** (:func:`suco_query_fused`) — the single-pass engine: while a
+  chunk is resident, one fused stage scores it, applies the **Pareto
+  prefilter** (only rows beating the carried pool minimum can enter the
+  merge — the paper's Pareto observation makes that a thin tail, so the
+  merge runs at a compacted ``survivor_cap`` width instead of the full
+  chunk width), and computes **exact rerank distances in-pass** for the
+  survivors — O(cap) rows of ``x`` per chunk, gathered by global id while
+  the chunk's scores are fresh — carrying a joint ``(sc_score,
+  exact_dist, id)`` pool; the post-scan rerank gather over ``x``
+  disappears and ``x`` is never copied or streamed through the scan.  A
+  chunk whose survivors overflow the cap falls back (``lax.cond``) to an
+  exact chunk-``top_k`` merge, so results are bit-identical to dense /
+  streaming either way.  Tile sizes come from
+  :func:`repro.core.tuning.autotune_tiles` unless pinned.
 
 ``suco_query(mode="auto")`` (the default) selects dense below
-``STREAMING_MIN_N`` points and streaming at or above it — million-point
-datasets never allocate an (m, n) intermediate.
+``STREAMING_MIN_N`` points and the fused engine at or above it —
+million-point datasets never allocate an (m, n) intermediate; the legacy
+streaming path stays available as ``mode="streaming"``.
 
 Index-build memory model (mirrors the query design; see
 :mod:`repro.core.kmeans` for the K-means internals):
@@ -71,7 +86,8 @@ Serving (the persistent subsystem on top of the algorithms):
   lifetime and serves ``query(q, k)`` through jitted executables keyed by
   ``(padded batch bucket, k)`` (:func:`batch_bucket`): after
   :meth:`SuCoEngine.warmup` covers the traffic mix, no request can
-  retrace.  The dense/streaming/score_impl dispatch lives in the policy,
+  retrace.  The dense/streaming/fused dispatch — and the fused path's
+  tiling (:class:`repro.core.tuning.TileConfig`) — lives in the policy,
   not on the call; :func:`suco_query` stays as the bit-identical
   back-compat wrapper for one-shot use.  The continuous micro-batching
   server over the engine is :mod:`repro.serve.ann`; the sharded
@@ -93,8 +109,16 @@ import numpy as np
 from repro.core import subspace as sub
 from repro.core.distances import Metric, pairwise_dist
 from repro.core.kmeans import kmeans_batched
-from repro.core.sc_linear import QueryResult, merge_topk_pool, rerank, rerank_candidates
-from repro.kernels.sc_score.ops import sc_scores_cells
+from repro.core.sc_linear import (
+    QueryResult,
+    merge_topk_pool,
+    merge_topk_pool_with_dists,
+    rerank,
+    rerank_candidates,
+)
+from repro.core.tuning import TileConfig, autotune_build_block_n, autotune_tiles
+from repro.kernels.gather_rerank.ops import gather_rerank_block
+from repro.kernels.sc_score.ops import sc_scores_cells, sc_scores_cells_prefilter
 
 __all__ = [
     "SuCoConfig",
@@ -106,6 +130,7 @@ __all__ = [
     "suco_cell_ranks",
     "suco_query",
     "suco_query_streaming",
+    "suco_query_fused",
     "STREAMING_MIN_N",
     "INDEX_ARTIFACT_VERSION",
     "load_index_artifact",
@@ -138,7 +163,10 @@ class SuCoConfig:
     ``build_mode``/``block_n`` select the index-construction memory model
     (see module docstring): "auto" | "dense" | "chunked" | "minibatch",
     with ``block_n`` the streaming chunk size (and the minibatch sample
-    size).
+    size).  ``block_n=0`` autotunes the chunk from the backend's memory
+    limits and the dataset shape
+    (:func:`repro.core.tuning.autotune_build_block_n`); any positive value
+    pins it by hand.
     """
 
     n_subspaces: int = 8
@@ -273,12 +301,23 @@ def build_index(x: jax.Array, config: SuCoConfig, *, spec: sub.SubspaceSpec | No
         raise ValueError(f"unknown build_mode {mode!r}, expected one of {_BUILD_MODES}")
     if mode == "auto":
         mode = "chunked" if x.shape[0] >= STREAMING_MIN_N else "dense"
-    if mode != "dense" and config.block_n < 1:
+    if mode != "dense" and config.block_n < 0:
         raise ValueError(
-            f"build_mode={mode!r} requires block_n >= 1, got {config.block_n}"
+            f"build_mode={mode!r} requires block_n >= 0 (0 = autotune), "
+            f"got {config.block_n}"
         )
     algo = "minibatch" if mode == "minibatch" else "lloyd"
-    block_n = 0 if mode == "dense" else config.block_n
+    if mode == "dense":
+        block_n = 0
+    elif config.block_n == 0:  # autotune from backend limits + data shape
+        block_n = autotune_build_block_n(
+            x.shape[0],
+            x.shape[-1],
+            sqrt_k=config.sqrt_k,
+            n_subspaces=config.n_subspaces,
+        )
+    else:
+        block_n = config.block_n
     key = jax.random.key(config.seed)
     c1, c2, cell_ids, counts = _build(
         x,
@@ -577,7 +616,175 @@ def suco_query_streaming(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "alpha", "beta", "metric", "mode", "block_n", "score_impl"),
+    static_argnames=("k", "alpha", "beta", "metric", "tiles", "score_impl"),
+)
+def suco_query_fused(
+    x: jax.Array,
+    index: SuCoIndex,
+    q: jax.Array,
+    *,
+    k: int,
+    alpha: float,
+    beta: float,
+    metric: Metric = "l2",
+    tiles: TileConfig | None = None,
+    score_impl: str = "auto",
+) -> QueryResult:
+    """Algorithm 4 as a **single-pass fused engine**: score -> prune ->
+    merge -> rerank in one scan over the data, bit-identical to the dense
+    path.
+
+    Per ``block_n``-point chunk, while the chunk is resident:
+
+    1. **score** — the fused chunk stage
+       (:func:`repro.kernels.sc_score.ops.sc_scores_cells_prefilter`)
+       computes SC-scores *and* the Pareto prefilter mask in one pass:
+       only rows whose score beats the carried pool minimum can possibly
+       enter the pool (pool entries with equal score always win the
+       (score desc, id asc) tie-break, having strictly smaller ids under
+       the streaming invariant), so everything else is pruned exactly.
+    2. **prune** — survivors are compacted into a ``survivor_cap``-wide
+       buffer in ascending-id order by binary-searching the keep-mask's
+       cumsum (no sort or scatter ever touches the ``(m, block_n)``
+       block), preserving the merge's lexicographic tie-break
+       bit-for-bit.
+    3. **rerank in-pass** — exact distances for the survivors — O(cap)
+       rows of ``x`` per chunk, the rows just scored — are gathered by
+       global id (:func:`repro.kernels.gather_rerank.ops.gather_rerank_block`,
+       same fp reduction as :func:`repro.core.sc_linear.rerank_candidates`);
+       ``x`` itself is never padded, copied, or streamed through the scan.
+    4. **merge** — the joint ``(sc_score, exact_dist, id)`` pool merges at
+       width ``pool + survivor_cap`` instead of ``pool + block_n``
+       (:func:`repro.core.sc_linear.merge_topk_pool_with_dists`).
+
+    A chunk whose survivor count exceeds ``survivor_cap`` for any query
+    (cold pool on the first chunks, adversarial score ties) falls back via
+    ``lax.cond`` to an exact ``top_k`` selection of the chunk's own best
+    ``min(pool, block_n)`` rows (the merged pool can absorb at most
+    ``pool`` of them, so this is bit-identical to merging the whole
+    chunk) — slower, identical results, so the fast path's pruning can
+    never change an answer.  After the scan the answer is one ``top_k``
+    over the carried distances; the post-scan rerank gather over ``x`` of
+    the legacy streaming path does not exist.
+
+    ``tiles=None`` autotunes ``(block_n, bm, bn, survivor_cap)`` from the
+    backend memory limits and ``(n, d, m, pool)``
+    (:func:`repro.core.tuning.autotune_tiles`); pass an explicit
+    :class:`~repro.core.tuning.TileConfig` to pin them.
+    """
+    n, d = x.shape
+    if k > n:
+        raise ValueError(f"k={k} must be <= n={n}")
+    m = q.shape[0]
+    pool = _pool_size(n, k, beta)
+    if tiles is None:
+        tiles = autotune_tiles(
+            n, d, m, pool,
+            n_subspaces=index.spec.n_subspaces,
+            n_cells=index.n_cells,
+            itemsize=x.dtype.itemsize,
+        )
+    c = sub.collision_count(n, alpha)
+    ranks, cuts = suco_cell_ranks(index, q, c, metric)  # (Ns,m,K), (Ns,m)
+
+    bn = min(tiles.block_n, n)
+    cap = min(tiles.survivor_cap, bn)
+    n_blocks = -(-n // bn)
+    int_max = jnp.iinfo(jnp.int32).max
+    cells = jnp.pad(index.cell_ids, ((0, 0), (0, n_blocks * bn - n)))
+    cells = cells.reshape(cells.shape[0], n_blocks, bn).transpose(1, 0, 2)
+    dist_dtype = (
+        jnp.float32 if metric == "l2" else jnp.result_type(x.dtype, q.dtype)
+    )
+    inf = jnp.asarray(jnp.inf, dist_dtype)
+    cols = jnp.arange(bn, dtype=jnp.int32)
+    slot = jnp.arange(cap, dtype=jnp.int32)
+
+    def step(carry, inp):
+        pool_s, pool_d, pool_i = carry
+        blk, cells_b = inp  # (), (Ns, bn)
+        thr = pool_s[:, -1]  # pool sorted desc -> last col is the minimum
+        s, keep = sc_scores_cells_prefilter(
+            ranks, cuts, cells_b, thr,
+            bm=tiles.bm, bn=tiles.bn, impl=score_impl,
+        )  # (m, bn) int32, (m, bn) bool
+        gids = blk * bn + cols
+        valid = gids < n  # mask chunk padding past the end of the data
+        s = jnp.where(valid[None, :], s, -1)
+        keep = keep & valid[None, :]
+        ids_b = jnp.broadcast_to(jnp.where(valid, gids, int_max), (m, bn))
+        cnt = jnp.cumsum(keep, axis=1, dtype=jnp.int32)
+
+        def pruned_merge(_):
+            # Compact survivors into cap slots in ascending-id order: the
+            # j-th survivor sits at the first column whose running count
+            # reaches j+1 — a binary search on the monotone cumsum, then
+            # cap-sized gathers.  Nothing sorts or scatters the (m, bn)
+            # block (XLA CPU scatter serializes; this stays vectorised).
+            surv_c = jax.vmap(
+                lambda row_cnt: jnp.searchsorted(row_cnt, slot + 1, side="left")
+            )(cnt)  # (m, cap)
+            surv_c = jnp.minimum(surv_c, bn - 1).astype(jnp.int32)
+            live = slot[None, :] < cnt[:, -1:]  # slot j holds a survivor
+            surv_s = jnp.where(live, jnp.take_along_axis(s, surv_c, axis=1), -1)
+            surv_i = jnp.where(
+                live, jnp.take_along_axis(ids_b, surv_c, axis=1), int_max
+            )
+            # survivors only ever touch O(cap) rows of x per chunk — the
+            # rows just scored, fetched by global id (the op clips the
+            # int_max sentinels; their distances are masked to +inf).
+            # impl="jnp" pins the fp reduction to rerank_candidates'
+            # rowwise contract on every backend; the Pallas gather kernel
+            # stays opt-in until a real-TPU run proves it ulp-identical.
+            dists = gather_rerank_block(surv_i, x, q, metric=metric, impl="jnp")
+            dists = jnp.where(live, dists, inf)
+            return merge_topk_pool_with_dists(
+                pool_s, pool_d, pool_i, surv_s, dists, surv_i
+            )
+
+        def full_merge(_):
+            # Exact overflow fallback: the merged top-pool can absorb at
+            # most `pool` chunk rows, so selecting the chunk's own top
+            # min(pool, bn) by (score desc, id asc) — lax.top_k's position
+            # tie-break on ascending-id columns — before merging is
+            # bit-identical to merging the whole chunk, at an O(bn)
+            # selection instead of an O(pool + bn) one, with distances for
+            # `pool` rows instead of `bn`.
+            c = min(pool, bn)
+            top_s, top_pos = jax.lax.top_k(s, c)
+            top_i = jnp.take_along_axis(ids_b, top_pos, axis=-1)
+            dists = gather_rerank_block(top_i, x, q, metric=metric, impl="jnp")
+            dists = jnp.where(top_i == int_max, inf, dists)
+            return merge_topk_pool_with_dists(
+                pool_s, pool_d, pool_i, top_s, dists, top_i
+            )
+
+        overflow = jnp.any(cnt[:, -1] > cap)
+        return jax.lax.cond(overflow, full_merge, pruned_merge, None), None
+
+    init = (
+        jnp.full((m, pool), -1, jnp.int32),
+        jnp.full((m, pool), inf, dist_dtype),
+        jnp.full((m, pool), int_max, jnp.int32),
+    )
+    (pool_s, pool_d, pool_i), _ = jax.lax.scan(
+        step, init, (jnp.arange(n_blocks, dtype=jnp.int32), cells)
+    )
+    # Final selection == rerank_candidates' top_k on the carried pool:
+    # ascending distance, ties to the earlier (score desc, id asc) slot.
+    neg, pos = jax.lax.top_k(-pool_d, k)
+    return QueryResult(
+        jnp.take_along_axis(pool_i, pos, axis=-1).astype(jnp.int32),
+        -neg,
+        jnp.take_along_axis(pool_s, pos, axis=-1),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "alpha", "beta", "metric", "mode", "block_n", "score_impl", "tiles"
+    ),
 )
 def suco_query(
     x: jax.Array,
@@ -591,20 +798,35 @@ def suco_query(
     mode: str = "auto",
     block_n: int = 4096,
     score_impl: str = "auto",
+    tiles: TileConfig | None = None,
 ) -> QueryResult:
     """Algorithm 4: k-ANN for a batch ``q: (m, d)`` using the SuCo index.
 
-    ``mode``: "dense" | "streaming" | "auto" (streaming iff
-    n >= ``STREAMING_MIN_N``); both paths return bit-identical results —
-    see the module docstring for the memory model.  ``score_impl``
-    ("auto" | "jnp" | "pallas") overrides the streaming scorer's kernel
-    dispatch (:func:`sc_scores_cells`); the dense path is jnp-only and
-    ignores it.
+    ``mode``: "dense" | "streaming" | "fused" | "auto" (fused iff
+    n >= ``STREAMING_MIN_N``); all paths return bit-identical results —
+    see the module docstring for the memory models.  ``score_impl``
+    ("auto" | "jnp" | "pallas") overrides the chunked scorer's kernel
+    dispatch (:func:`sc_scores_cells` / the fused prefilter stage); the
+    dense path is jnp-only and ignores it.  ``block_n`` sizes the legacy
+    streaming path's chunks; the fused path tiles itself from ``tiles``
+    (``None`` = autotune, see :func:`repro.core.tuning.autotune_tiles`).
     """
     n = x.shape[0]
-    if mode not in ("auto", "dense", "streaming"):
+    if mode not in ("auto", "dense", "streaming", "fused"):
         raise ValueError(f"unknown mode {mode!r}")
-    if mode == "streaming" or (mode == "auto" and n >= STREAMING_MIN_N):
+    if mode == "fused" or (mode == "auto" and n >= STREAMING_MIN_N):
+        return suco_query_fused(
+            x,
+            index,
+            q,
+            k=k,
+            alpha=alpha,
+            beta=beta,
+            metric=metric,
+            tiles=tiles,
+            score_impl=score_impl,
+        )
+    if mode == "streaming":
         return suco_query_streaming(
             x,
             index,
@@ -731,35 +953,75 @@ class EnginePolicy:
     """Query-serving policy owned by :class:`SuCoEngine`.
 
     What used to travel on every ``suco_query`` call (alpha/beta/metric,
-    dense-vs-streaming mode, the scorer kernel impl, the streaming chunk
-    size) is fixed once per engine; per-request inputs shrink to
-    ``(queries, k)``.  ``mode="auto"`` resolves against the dataset size
-    a single time at engine construction — requests never re-decide it.
+    the execution mode, the scorer kernel impl, the chunk/tile sizes) is
+    fixed once per engine; per-request inputs shrink to ``(queries, k)``.
+    ``mode="auto"`` resolves against the dataset size a single time at
+    engine construction — requests never re-decide it; the large-``n``
+    resolution is the **fused** single-pass engine (the legacy chunked
+    path stays reachable as ``mode="streaming"``).
+
+    Tiling knobs:
+
+    * ``block_n`` — the legacy streaming path's chunk size (ignored by
+      dense and fused modes).
+    * ``tiles`` — the fused path's :class:`~repro.core.tuning.TileConfig`
+      (chunk size, kernel ``bm``/``bn`` grid tile, survivor-compaction
+      width).  ``None`` (the default) autotunes per ``(bucket, k)``
+      executable from the backend memory limits and the padded batch
+      shape (:func:`repro.core.tuning.autotune_tiles`) — deterministic
+      per shape, so warmed executables never retrace.
 
     The policy also accumulates a traffic histogram (``observe``, fed by
     every engine query) from which :meth:`autoscale_buckets` proposes a
     waste-minimising bucket set; the histogram is observational state, not
-    configuration — it never participates in equality or hashing.
+    configuration — it never participates in equality or hashing, is
+    bounded at ``TRAFFIC_MAX_BINS`` distinct sizes (long-running servers
+    must not grow an unbounded dict), and can be dropped wholesale with
+    :meth:`reset_traffic`.
     """
+
+    # Bound on distinct batch sizes the traffic histogram tracks; beyond
+    # it the least-frequent (smallest on ties) bin is evicted, so the
+    # histogram is approximate under adversarial traffic but its memory is
+    # O(1) over a server's lifetime.
+    TRAFFIC_MAX_BINS = 512
 
     alpha: float = 0.05
     beta: float = 0.02
     metric: Metric = "l2"
-    mode: str = "auto"  # "auto" | "dense" | "streaming"
-    score_impl: str = "auto"  # streaming scorer kernel dispatch
-    block_n: int = 4096  # streaming chunk size
+    mode: str = "auto"  # "auto" | "dense" | "streaming" | "fused"
+    score_impl: str = "auto"  # chunked scorer kernel dispatch
+    block_n: int = 4096  # legacy streaming chunk size
+    tiles: TileConfig | None = None  # fused-path tiling (None = autotune)
     batch_buckets: tuple[int, ...] = DEFAULT_BATCH_BUCKETS
     traffic: collections.Counter = dataclasses.field(
         default_factory=collections.Counter, init=False, repr=False, compare=False
     )
 
     def observe(self, batch_sizes: Iterable[int]) -> None:
-        """Record observed micro-batch sizes into the traffic histogram."""
+        """Record observed micro-batch sizes into the traffic histogram.
+
+        Bounded: once ``TRAFFIC_MAX_BINS`` distinct sizes are tracked, a
+        new size evicts the least-frequent existing bin (smallest size on
+        ties) instead of growing the dict — :meth:`autoscale_buckets`
+        keeps seeing the traffic that matters while a long-running server
+        with pathological size churn stays O(1)."""
         for m in batch_sizes:
             m = int(m)
             if m < 1:
                 raise ValueError(f"batch size must be >= 1, got {m}")
+            if (
+                m not in self.traffic
+                and len(self.traffic) >= self.TRAFFIC_MAX_BINS
+            ):
+                victim = min(self.traffic.items(), key=lambda kv: (kv[1], kv[0]))
+                del self.traffic[victim[0]]
             self.traffic[m] += 1
+
+    def reset_traffic(self) -> None:
+        """Drop the accumulated traffic histogram (e.g. after consuming it
+        through :meth:`autoscaled`, or on a traffic-shape change)."""
+        self.traffic.clear()
 
     def autoscale_buckets(self, max_buckets: int | None = None) -> tuple[int, ...]:
         """Bucket-set proposal from the observed traffic
@@ -825,8 +1087,10 @@ class SuCoEngine:
             )
         mode = policy.mode
         if mode == "auto":
-            mode = "streaming" if self.x.shape[0] >= STREAMING_MIN_N else "dense"
-        if mode not in ("dense", "streaming"):
+            # fused is the streaming-scale default: same answers as the
+            # legacy chunked path, one pass over the data.
+            mode = "fused" if self.x.shape[0] >= STREAMING_MIN_N else "dense"
+        if mode not in ("dense", "streaming", "fused"):
             raise ValueError(f"unknown engine mode {policy.mode!r}")
         self._mode = mode
         self._batches = 0
@@ -879,6 +1143,25 @@ class SuCoEngine:
         return suco_query(
             x, index, q, k=k, alpha=p.alpha, beta=p.beta, metric=p.metric,
             mode=self._mode, block_n=p.block_n, score_impl=p.score_impl,
+            tiles=p.tiles,
+        )
+
+    def tiles_for(self, m: int, k: int) -> TileConfig | None:
+        """The fused-path tiling an ``(m, k)`` request resolves to: the
+        policy's pinned :class:`~repro.core.tuning.TileConfig`, or the
+        autotune result for the request's padded bucket (exactly what the
+        dispatched executable uses — deterministic per ``(bucket, k)``, so
+        inspecting it never perturbs the jit cache).  ``None`` for
+        non-fused engines with no pinned tiles."""
+        if self.policy.tiles is not None or self._mode != "fused":
+            return self.policy.tiles
+        b = batch_bucket(m, self.policy.batch_buckets)
+        n, d = self.x.shape
+        return autotune_tiles(
+            n, d, b, _pool_size(n, k, self.policy.beta),
+            n_subspaces=self.index.spec.n_subspaces,
+            n_cells=self.index.n_cells,
+            itemsize=self.x.dtype.itemsize,
         )
 
     def query(self, q: jax.Array, k: int) -> QueryResult:
@@ -945,7 +1228,8 @@ class SuCoEngine:
 
     @property
     def mode(self) -> str:
-        """The resolved execution mode ("dense" | "streaming")."""
+        """The resolved execution mode ("dense" | "streaming" | "fused" —
+        the last is what ``mode="auto"`` resolves to at streaming scale)."""
         return self._mode
 
     @property

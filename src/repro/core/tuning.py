@@ -1,0 +1,247 @@
+"""Tiling autotuner: pick streaming-query / kernel tile sizes from backend
+memory limits and the problem shape instead of hard-coded constants.
+
+The streaming and fused query engines (:mod:`repro.core.suco`) process the
+dataset in chunks of ``block_n`` points; the SC-score Pallas kernel tiles
+each chunk into ``(bm, bn)`` blocks; and the fused engine additionally
+carries a ``survivor_cap``-wide compaction buffer for chunk rows that beat
+the carried pool minimum (the Pareto prefilter).  Until this module, those
+knobs were frozen at ``4096 / 8 / 512`` — tuned by hand for one CPU host
+and one dataset size.  :func:`autotune_tiles` instead sizes them so the
+per-chunk working set (resident data chunk + cell ids + score block +
+carried pool) fits the backend's fast memory (VMEM on TPU, a per-core L2
+budget on CPU), which is what "as fast as the hardware allows" means for a
+bandwidth-bound scan: the chunk a step touches should be served from the
+closest memory level, and the merge should run as rarely as that allows.
+
+The autotuner is *deterministic* and *shape-only*: given the same
+``(n, d, m, pool)`` and backend it always returns the same
+:class:`TileConfig`, so jitted executables keyed on tile sizes never
+retrace between identical requests (the serving stack's zero-retrace
+invariant).  Every knob can still be pinned by hand through
+:class:`~repro.core.suco.EnginePolicy` / :class:`~repro.core.suco.SuCoConfig`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+__all__ = [
+    "MemoryLimits",
+    "TileConfig",
+    "backend_limits",
+    "autotune_tiles",
+    "autotune_build_block_n",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryLimits:
+    """Per-device memory budget the tiler plans against.
+
+    ``fast_bytes`` is the working-set budget for one streamed chunk — VMEM
+    on TPU, a per-core L2-ish slice on CPU, shared-memory-adjacent L2 on
+    GPU.  ``hbm_bytes`` bounds whole-array residency (index + dataset) and
+    is only used for sanity clamps.
+    """
+
+    fast_bytes: int
+    hbm_bytes: int
+
+
+# Conservative defaults per backend; unknown backends fall back to "cpu".
+_BACKEND_LIMITS: dict[str, MemoryLimits] = {
+    # ~16 MB VMEM per TensorCore; leave half for Pallas double-buffering.
+    "tpu": MemoryLimits(fast_bytes=8 * 2**20, hbm_bytes=16 * 2**30),
+    # L2 slice per SM-cluster; HBM on a modern part.
+    "gpu": MemoryLimits(fast_bytes=4 * 2**20, hbm_bytes=40 * 2**30),
+    # Per-core L2 on a server CPU; "hbm" is host RAM.
+    "cpu": MemoryLimits(fast_bytes=2 * 2**20, hbm_bytes=32 * 2**30),
+}
+
+
+def backend_limits(backend: str | None = None) -> MemoryLimits:
+    """Memory limits for ``backend`` (default: the active jax backend)."""
+    if backend is None:
+        backend = jax.default_backend()
+    return _BACKEND_LIMITS.get(backend, _BACKEND_LIMITS["cpu"])
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Resolved tiling for the streaming/fused query engines.
+
+    * ``block_n`` — data points per streamed chunk (the ``lax.scan`` step).
+    * ``bm`` / ``bn`` — SC-score kernel grid tile (queries x chunk columns);
+      multiples of the f32 TPU tile (8 sublanes x 128 lanes).
+    * ``survivor_cap`` — fused-path compaction width: the per-chunk budget
+      of rows beating the carried pool minimum that merge at the pruned
+      (cheap) width; a chunk exceeding it falls back to the exact
+      full-width merge (same results, slower — see
+      :func:`repro.core.suco.suco_query_fused`).
+
+    Hashable/frozen so it can ride in jit static arguments and in
+    :class:`~repro.core.suco.EnginePolicy` equality.
+    """
+
+    block_n: int
+    bm: int = 8
+    bn: int = 512
+    survivor_cap: int = 256
+
+    def __post_init__(self):
+        if self.block_n < 1:
+            raise ValueError(f"block_n must be >= 1, got {self.block_n}")
+        if self.bm < 1 or self.bn < 1:
+            raise ValueError(f"bm/bn must be >= 1, got {self.bm}/{self.bn}")
+        if self.survivor_cap < 1:
+            raise ValueError(
+                f"survivor_cap must be >= 1, got {self.survivor_cap}"
+            )
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def _round_down(v: int, mult: int) -> int:
+    return (v // mult) * mult
+
+
+def _clamp(v: int, lo: int, hi: int) -> int:
+    return max(lo, min(v, hi))
+
+
+# Streamed chunks are sized in multiples of this (one f32 lane tile wide
+# per subspace row); also the floor so tiny datasets still vectorise.
+_BLOCK_QUANTUM = 512
+_BLOCK_MAX = 1 << 16  # beyond this the scan stops gaining and pads hurt
+_CAP_QUANTUM = 64
+# Safety factor on the expected per-chunk survivor count: under the
+# paper's Pareto observation the rows beating the carried pool minimum
+# are a thin tail, but early chunks (cold pool, low threshold) and
+# clustered queries overshoot the uniform estimate — the second chunk
+# typically sees ~2x the steady-state tail, so budget well past it.
+_CAP_SAFETY = 8
+
+
+def autotune_tiles(
+    n: int,
+    d: int,
+    m: int,
+    pool: int,
+    *,
+    n_subspaces: int = 8,
+    n_cells: int = 2500,
+    backend: str | None = None,
+    limits: MemoryLimits | None = None,
+    itemsize: int = 4,
+) -> TileConfig:
+    """Pick ``(block_n, bm, bn, survivor_cap)`` for a streamed query.
+
+    ``n/d`` are the dataset shape, ``m`` the (padded) query-batch size,
+    ``pool`` the carried candidate-pool width (``max(k, beta*n)``),
+    ``n_subspaces``/``n_cells`` the index shape (they size the kernel's
+    rank table), ``itemsize`` the dataset dtype width.
+
+    Sizing model (all per query batch, bytes):
+
+    * chunk-resident: ``block_n * (Ns*4 + d*itemsize + m*4)`` — cell ids,
+      the data chunk itself, and the int32 score block;
+    * carried: ``3 * m * pool * 4`` for the (score, dist, id) pool, twice
+      (the merge concatenates pool + survivors).
+
+    The largest ``block_n`` (multiple of 512, clamped to [512, 65536] and
+    to roughly an eighth of the dataset) whose total fits
+    ``limits.fast_bytes`` wins: bigger chunks mean fewer pool merges — the
+    dominant per-chunk cost — while staying inside the memory level that
+    makes the scan bandwidth-cheap; the ~n/8 ceiling guarantees the scan
+    actually streams (the Pareto prefilter only pays once the carried pool
+    has warmed past the first chunks).  ``bm``/``bn`` then tile that chunk
+    for the Pallas kernel under a quarter of the same budget (ranks tile +
+    cells tile + out tile), and ``survivor_cap`` budgets ``_CAP_SAFETY``
+    times the uniform-order expectation ``pool * block_n / n`` of new pool
+    entrants per chunk.
+    """
+    if min(n, d, m, pool) < 1:
+        raise ValueError(
+            f"n/d/m/pool must all be >= 1, got {n}/{d}/{m}/{pool}"
+        )
+    if limits is None:
+        limits = backend_limits(backend)
+    fast = limits.fast_bytes
+
+    per_point = n_subspaces * 4 + d * itemsize + m * 4
+    carried = 2 * 3 * m * pool * 4
+    budget = max(fast - carried, _BLOCK_QUANTUM * per_point)
+    block_n = _clamp(
+        _round_down(budget // per_point, _BLOCK_QUANTUM),
+        _BLOCK_QUANTUM,
+        _BLOCK_MAX,
+    )
+    block_n = min(
+        block_n, max(_round_up(n // 8, _BLOCK_QUANTUM), _BLOCK_QUANTUM)
+    )
+    # When the carried pool alone overflows fast memory (huge beta*n), the
+    # cache-residency model bottoms out — but tiny chunks would multiply
+    # the per-chunk merges, each already O(pool) wide.  Chunks at least
+    # pool-sized keep total merge work O(n), the scan's own order.
+    block_n = max(
+        block_n, _clamp(_round_up(pool, _BLOCK_QUANTUM), _BLOCK_QUANTUM, _BLOCK_MAX)
+    )
+
+    # Kernel grid tile: bm covers the (padded) batch in f32 sublane
+    # multiples; bn splits the chunk into lane-multiple column blocks small
+    # enough that (ranks tile + cells tile + score tile) sits in a quarter
+    # of fast memory, leaving room for Pallas pipelining.
+    bm = _clamp(_round_up(m, 8), 8, 128)
+    tile_budget = fast // 4 - bm * n_cells * 4
+    bn = _clamp(
+        _round_down(tile_budget // max(4 * (bm + 1), 1), 128), 128, 2048
+    )
+    bn = min(bn, max(_round_up(block_n, 128), 128))
+
+    expected = pool * block_n / max(n, 1)
+    cap = _clamp(
+        _round_up(int(_CAP_SAFETY * expected) + 1, _CAP_QUANTUM),
+        _CAP_QUANTUM,
+        max(_CAP_QUANTUM, min(pool, block_n)),
+    )
+    return TileConfig(block_n=block_n, bm=bm, bn=bn, survivor_cap=cap)
+
+
+def autotune_build_block_n(
+    n: int,
+    d: int,
+    *,
+    sqrt_k: int,
+    n_subspaces: int = 8,
+    backend: str | None = None,
+    limits: MemoryLimits | None = None,
+    itemsize: int = 4,
+) -> int:
+    """Chunk size for the streaming index build (chunked/minibatch Lloyd).
+
+    Each K-means step materialises per chunk a ``(2Ns, block_n, sqrtK)``
+    distance block and the ``(2Ns, block_n, h_max)`` half-space view; the
+    largest 512-multiple whose sum fits the backend's fast memory keeps
+    the assign/stats scan cache-resident without shrinking chunks (and
+    therefore multiplying scan steps) more than the hardware requires.
+    """
+    if min(n, d, sqrt_k, n_subspaces) < 1:
+        raise ValueError(
+            f"n/d/sqrt_k/n_subspaces must be >= 1, got "
+            f"{n}/{d}/{sqrt_k}/{n_subspaces}"
+        )
+    if limits is None:
+        limits = backend_limits(backend)
+    h_max = -(-(-(-d // n_subspaces)) // 2)  # ceil(ceil(d/Ns) / 2)
+    per_point = 2 * n_subspaces * (sqrt_k + h_max) * itemsize
+    block_n = _clamp(
+        _round_down(limits.fast_bytes // per_point, _BLOCK_QUANTUM),
+        _BLOCK_QUANTUM,
+        _BLOCK_MAX,
+    )
+    return min(block_n, max(_round_up(n, _BLOCK_QUANTUM), _BLOCK_QUANTUM))

@@ -51,11 +51,13 @@ from repro.core import subspace as sub
 from repro.core.distances import pairwise_sqdist
 from repro.core.kmeans import assign_scan, block_batched, lloyd_stats_scan
 from repro.core.sc_linear import merge_topk_pool
+from repro.core.tuning import autotune_build_block_n, autotune_tiles
 from repro.distributed.compat import pcast_varying, shard_map_compat
 from repro.kernels.sc_score.ops import sc_scores_cells
 
 __all__ = [
     "DistSuCoConfig",
+    "resolved_query_block_n",
     "index_shardings",
     "shard_index",
     "build_sharded",
@@ -75,18 +77,59 @@ class DistSuCoConfig:
     k: int = 50
     q_chunk: int = 32  # queries processed per scan step (bounds the
     # (q_chunk, n_local) score block)
-    block_n: int = 4096  # data points scored per streaming block;
-    # 0 = dense per-shard scoring (the small-n reference path)
-    build_block_n: int = 4096  # points per streaming Lloyd chunk during the
-    # sharded build; 0 = dense per-shard one-hot updates (the reference
-    # path — materialises (2ns_loc, n_loc, sqrt_k) every iteration)
+    block_n: int | None = None  # data points scored per streaming block;
+    # None = autotune from the backend memory limits and the per-shard
+    # problem shape (repro.core.tuning.autotune_tiles); 0 = dense
+    # per-shard scoring (the small-n reference path)
+    build_block_n: int | None = 4096  # points per streaming Lloyd chunk in
+    # the sharded build; None = autotune (autotune_build_block_n); 0 =
+    # dense per-shard one-hot updates (the reference path — materialises
+    # (2ns_loc, n_loc, sqrt_k) every iteration)
     point_axes: tuple[str, ...] = ("data",)
     model_axis: str = "model"
     seed: int = 0
+    tuning_backend: str | None = None  # backend whose memory limits the
+    # block-size autotuner plans against; None = the active jax backend.
+    # Pin it (e.g. "tpu") when AOT-lowering on a different host than the
+    # one that will serve, so the resolved scan structure matches
+    # production exactly.
 
     @property
     def n_cells(self) -> int:
         return self.sqrt_k**2
+
+
+def _n_point_shards(mesh: Mesh, cfg: DistSuCoConfig) -> int:
+    return math.prod(mesh.shape[a] for a in cfg.point_axes)
+
+
+def resolved_query_block_n(mesh: Mesh, cfg: DistSuCoConfig, n: int, d: int) -> int:
+    """The per-shard streaming block the sharded query step will use.
+
+    ``cfg.block_n=None`` autotunes from the memory limits of
+    ``cfg.tuning_backend`` (the active backend when unset) and the *local*
+    problem shape (shard points, dim slice, ``q_chunk`` queries, per-shard
+    candidate pool); explicit values (0 = dense) pass through.
+    Deterministic per ``(shape, backend)`` — pin ``tuning_backend`` when
+    lowering ahead of time on a different host class, so AOT lowering and
+    live serving agree.
+    """
+    if cfg.block_n is not None:
+        if cfg.block_n < 0:
+            raise ValueError(
+                f"block_n must be >= 0 (0 = dense) or None (autotune), "
+                f"got {cfg.block_n}"
+            )
+        return cfg.block_n
+    n_loc = max(n // _n_point_shards(mesh, cfg), 1)
+    d_loc = max(d // mesh.shape[cfg.model_axis], 1)
+    m_cand = max(cfg.k, int(cfg.beta * n_loc))
+    return autotune_tiles(
+        n_loc, d_loc, cfg.q_chunk, m_cand,
+        n_subspaces=max(cfg.n_subspaces // mesh.shape[cfg.model_axis], 1),
+        n_cells=cfg.n_cells,
+        backend=cfg.tuning_backend,
+    ).block_n
 
 
 def _check(mesh: Mesh, cfg: DistSuCoConfig, d: int) -> tuple[int, int]:
@@ -159,19 +202,26 @@ def build_sharded(mesh: Mesh, x: jax.Array, cfg: DistSuCoConfig) -> SuCoIndex:
     pa = cfg.point_axes
     all_point_axes = pa
     sqrt_k = cfg.sqrt_k
-    if cfg.build_block_n < 0:
+    build_block_n = cfg.build_block_n
+    if build_block_n is None:  # autotune from the per-shard build shape
+        build_block_n = autotune_build_block_n(
+            max(n // _n_point_shards(mesh, cfg), 1), d,
+            sqrt_k=sqrt_k, n_subspaces=cfg.n_subspaces,
+            backend=cfg.tuning_backend,
+        )
+    if build_block_n < 0:
         raise ValueError(
-            f"build_block_n must be >= 0 (0 = dense), got {cfg.build_block_n}"
+            f"build_block_n must be >= 0 (0 = dense), got {build_block_n}"
         )
 
     def _build(x_loc: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
         a, b, h1 = _split_local(x_loc, ns_loc, s)
         cb = jnp.concatenate([a, b], axis=0)  # (2ns_loc, n_loc, h1)
         n_loc = cb.shape[1]
-        chunked = cfg.build_block_n > 0
+        chunked = build_block_n > 0
         cast = lambda t: pcast_varying(t, tuple(mesh.axis_names))
         if chunked:
-            blocks, valid = block_batched(cb, cfg.build_block_n)
+            blocks, valid = block_batched(cb, build_block_n)
 
         # deterministic init: the first sqrt_k points of point-shard 0
         shard_idx = jnp.zeros((), jnp.int32)
@@ -260,9 +310,8 @@ def make_query_fn(mesh: Mesh, cfg: DistSuCoConfig, n: int, d: int, mq: int):
     q_chunk = min(cfg.q_chunk, mq)
     if mq % q_chunk:
         raise ValueError(f"mq={mq} must divide by q_chunk={q_chunk}")
-    if cfg.block_n < 0:
-        raise ValueError(f"block_n must be >= 0 (0 = dense), got {cfg.block_n}")
-    bn = min(cfg.block_n, n_loc) if cfg.block_n else 0
+    block_n = resolved_query_block_n(mesh, cfg, n, d)
+    bn = min(block_n, n_loc) if block_n else 0
     n_blocks = -(-n_loc // bn) if bn else 0
     int_max = jnp.iinfo(jnp.int32).max
 

@@ -1,4 +1,11 @@
-"""jit'd wrapper for gather_rerank."""
+"""jit'd wrappers for gather_rerank.
+
+Candidate-id validation happens here, once, at the op boundary: candidate
+pools are padded with sentinels (``-1`` or ``INT32_MAX``) whose distances
+the caller's selection discards, but whose raw values must not fault the
+scalar-prefetch index map or poison the gather.  Both entry points clip
+ids into ``[0, n-1]`` before dispatch, so no caller has to pre-sanitise.
+"""
 
 from __future__ import annotations
 
@@ -8,7 +15,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.gather_rerank.kernel import gather_rerank_kernel
-from repro.kernels.gather_rerank.ref import gather_rerank_ref
+from repro.kernels.gather_rerank.ref import gather_rerank_block_ref, gather_rerank_ref
+
+
+def _clip_ids(ids: jax.Array, n: int) -> jax.Array:
+    """Clip sentinel / out-of-range candidate ids into ``[0, n-1]``."""
+    return jnp.clip(ids.astype(jnp.int32), 0, n - 1)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -17,9 +29,46 @@ def gather_rerank(
 ) -> jax.Array:
     """``ids: (mq, mc), x: (n, d), q: (mq, d) -> (mq, mc)`` exact sq-L2."""
     mq, mc = ids.shape
-    flat = ids.reshape(-1).astype(jnp.int32)
+    flat = _clip_ids(ids, x.shape[0]).reshape(-1)
     out = gather_rerank_kernel(flat, x, q, mc=mc, interpret=interpret)
     return out.reshape(mq, mc)
 
 
-__all__ = ["gather_rerank", "gather_rerank_ref"]
+@functools.partial(jax.jit, static_argnames=("metric", "impl", "interpret"))
+def gather_rerank_block(
+    cols: jax.Array,
+    x_blk: jax.Array,
+    q: jax.Array,
+    *,
+    metric: str = "l2",
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-query candidate rerank: ``cols: (m, c)`` row ids into
+    ``x_blk: (bn, d)``, ``q: (m, d) -> (m, c)`` exact distances.
+
+    The fused streaming engine's in-pass rerank stage: each chunk's
+    Pareto-prefilter survivors (O(cap) rows, not the whole chunk) are
+    gathered and reranked mid-scan, instead of re-fetched from the full
+    dataset after it — ``x_blk`` may be one resident chunk or the whole
+    dataset with global ids; the op only ever touches the ``c`` addressed
+    rows.  ``impl``: "jnp" | "pallas" | "auto" (pallas iff on TPU and
+    ``metric="l2"`` — the scalar-prefetch kernel computes sq-L2; L1
+    always takes the jnp oracle).  Sentinel ids are clipped at this
+    boundary; their distances are real but the caller's selection never
+    consumes them.
+    """
+    cols = _clip_ids(cols, x_blk.shape[0])
+    use_kernel = metric == "l2" and (
+        impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu")
+    )
+    if not use_kernel:
+        return gather_rerank_block_ref(cols, x_blk, q, metric=metric)
+    m, c = cols.shape
+    out = gather_rerank_kernel(
+        cols.reshape(-1), x_blk, q, mc=c, interpret=interpret
+    )
+    return out.reshape(m, c)
+
+
+__all__ = ["gather_rerank", "gather_rerank_block", "gather_rerank_block_ref", "gather_rerank_ref"]

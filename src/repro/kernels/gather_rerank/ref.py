@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the gather_rerank kernel."""
+"""Pure-jnp oracles for the gather_rerank kernels."""
 
 from __future__ import annotations
 
@@ -11,3 +11,23 @@ def gather_rerank_ref(ids: jax.Array, x: jax.Array, q: jax.Array) -> jax.Array:
     xc = jnp.take(x, ids, axis=0).astype(jnp.float32)  # (mq, mc, d)
     diff = xc - q[:, None, :].astype(jnp.float32)
     return jnp.sum(diff * diff, axis=-1)
+
+
+def gather_rerank_block_ref(
+    cols: jax.Array, x_blk: jax.Array, q: jax.Array, *, metric: str = "l2"
+) -> jax.Array:
+    """``cols: (m, c), x_blk: (bn, d), q: (m, d) -> (m, c)`` exact distances.
+
+    The per-query candidate form the fused streaming engine reranks with:
+    ``cols`` are row ids into ``x_blk`` — one chunk or the whole dataset
+    (already validated by the op boundary).  The fp semantics are pinned to
+    :func:`repro.core.distances.rowwise_candidate_dist` — the exact
+    reduction :func:`repro.core.sc_linear.rerank_candidates` uses — so an
+    in-pass distance is bit-identical to the post-scan gather it replaces.
+    """
+    # Imported lazily: the kernels package must stay importable before
+    # repro.core finishes initialising (core pulls these ops in).
+    from repro.core.distances import rowwise_candidate_dist
+
+    xc = jnp.take(x_blk, cols, axis=0)  # (m, c, d)
+    return rowwise_candidate_dist(q, xc, metric)

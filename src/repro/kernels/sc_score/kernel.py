@@ -56,6 +56,77 @@ def _cells_kernel(rank_ref, cut_ref, cell_ref, out_ref):
     out_ref[...] += (g <= cut.T).astype(jnp.int32)
 
 
+def _cells_prefilter_kernel(
+    rank_ref, cut_ref, thr_ref, cell_ref, score_ref, keep_ref, *, n_sub: int
+):
+    i = pl.program_id(2)  # subspace index (innermost)
+
+    @pl.when(i == 0)
+    def _init():
+        score_ref[...] = jnp.zeros_like(score_ref)
+        keep_ref[...] = jnp.zeros_like(keep_ref)
+
+    r = rank_ref[0]  # (bm, K) per-query cell ranks
+    cut = cut_ref[...].astype(jnp.int32)  # (1, bm) activation cutoffs
+    cells = cell_ref[0]  # (bn,) chunk cell ids
+    g = jnp.take(r, cells, axis=1)  # (bm, bn) rank of each point's cell
+    score_ref[...] += (g <= cut.T).astype(jnp.int32)
+
+    # Pareto prefilter, fused into the last subspace visit: once the score
+    # tile is complete, compare it against the carried pool minimum while
+    # it is still in VMEM — the survivors mask costs one VPU compare
+    # instead of a second pass over the (m, bc) score block.
+    @pl.when(i == n_sub - 1)
+    def _prefilter():
+        thr = thr_ref[...].astype(jnp.int32)  # (1, bm) pool minima
+        keep_ref[...] = (score_ref[...] > thr.T).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def sc_score_cells_prefilter_kernel(
+    ranks: jax.Array,  # (Ns, m, K) per-(subspace, query) cell ranks
+    cuts: jax.Array,  # (Ns, m) activation cutoff ranks
+    thr: jax.Array,  # (1, m) carried pool minimum score per query
+    cells: jax.Array,  # (Ns, bc) cell ids of one data chunk
+    *,
+    bm: int = 8,
+    bn: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused chunk stage: SC-scores + Pareto-prefilter survivors mask.
+
+    :func:`sc_score_cells_kernel` with one extra input (the per-query
+    carried pool minimum ``thr``) and one extra output: ``keep[q, j] =
+    scores[q, j] > thr[q]`` (int32 0/1), emitted on the final subspace
+    grid step while the completed score tile is still resident — the
+    fused streaming engine's prune decision never re-reads the scores
+    from HBM.  Caller pre-pads ``m % bm == bc % bn == 0``; returns
+    ``(scores (m, bc) int32, keep (m, bc) int32)``.
+    """
+    n_sub, m, k_cells = ranks.shape
+    bc = cells.shape[1]
+    grid = (m // bm, bc // bn, n_sub)
+    return pl.pallas_call(
+        functools.partial(_cells_prefilter_kernel, n_sub=n_sub),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, k_cells), lambda i, j, k: (k, i, 0)),
+            pl.BlockSpec((1, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((1, bm), lambda i, j, k: (0, i)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, bc), jnp.int32),
+            jax.ShapeDtypeStruct((m, bc), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ranks, cuts, thr, cells)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def sc_score_cells_kernel(
     ranks: jax.Array,  # (Ns, m, K) per-(subspace, query) cell ranks

@@ -7,8 +7,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sc_score.kernel import sc_score_cells_kernel, sc_score_kernel
-from repro.kernels.sc_score.ref import sc_score_cells_ref, sc_score_ref
+from repro.kernels.sc_score.kernel import (
+    sc_score_cells_kernel,
+    sc_score_cells_prefilter_kernel,
+    sc_score_kernel,
+)
+from repro.kernels.sc_score.ref import (
+    sc_score_cells_prefilter_ref,
+    sc_score_cells_ref,
+    sc_score_ref,
+)
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -80,4 +88,58 @@ def sc_scores_cells(
     return out[:m, :bc]
 
 
-__all__ = ["sc_scores_fused", "sc_scores_cells", "sc_score_ref", "sc_score_cells_ref"]
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "impl", "interpret"))
+def sc_scores_cells_prefilter(
+    ranks: jax.Array,  # (Ns, m, K) per-(subspace, query) cell ranks
+    cuts: jax.Array,  # (Ns, m) activation cutoff ranks
+    cells: jax.Array,  # (Ns, bc) chunk cell ids
+    thr: jax.Array,  # (m,) carried pool minimum score per query
+    *,
+    bm: int = 8,
+    bn: int = 512,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused chunk stage for the single-pass engine ``-> (scores, keep)``.
+
+    :func:`sc_scores_cells` plus the Pareto prefilter computed while the
+    score tile is still resident: ``keep[q, j] = scores[q, j] > thr[q]``
+    (``(m, bc)`` bool).  Same ``impl`` dispatch and padding contract as
+    :func:`sc_scores_cells`; padded query rows additionally get
+    ``thr = INT32_MAX`` so they never survive, and padded chunk columns
+    are sliced off before the caller sees them (the caller still masks
+    columns past the end of the *data*, which this op cannot know about).
+    """
+    if impl == "jnp" or (impl == "auto" and jax.default_backend() != "tpu"):
+        return sc_score_cells_prefilter_ref(ranks, cuts, cells, thr)
+    n_sub, m, k_cells = ranks.shape
+    bc = cells.shape[1]
+    int_max = jnp.iinfo(jnp.int32).max
+    bm_ = min(bm, _round_up(m, 8))
+    bn_ = min(bn, _round_up(bc, 128))
+    mp, bcp = _round_up(m, bm_), _round_up(bc, bn_)
+    kp = _round_up(k_cells, 128)
+    rp = jnp.pad(
+        ranks, ((0, 0), (0, mp - m), (0, kp - k_cells)),
+        constant_values=int_max,
+    )
+    cutp = jnp.pad(cuts, ((0, 0), (0, mp - m)), constant_values=-1)
+    thrp = jnp.pad(
+        thr[None, :].astype(jnp.int32), ((0, 0), (0, mp - m)),
+        constant_values=int_max,
+    )
+    cellp = jnp.pad(cells, ((0, 0), (0, bcp - bc)))
+    out_s, out_k = sc_score_cells_prefilter_kernel(
+        rp, cutp, thrp, cellp, bm=bm_, bn=bn_, interpret=interpret
+    )
+    return out_s[:m, :bc], out_k[:m, :bc].astype(bool)
+
+
+__all__ = [
+    "sc_scores_fused",
+    "sc_scores_cells",
+    "sc_scores_cells_prefilter",
+    "sc_score_ref",
+    "sc_score_cells_ref",
+    "sc_score_cells_prefilter_ref",
+]

@@ -19,6 +19,20 @@ def sc_score_cells_ref(
     return jnp.sum(mask.astype(jnp.int32), axis=0)
 
 
+def sc_score_cells_prefilter_ref(
+    ranks: jax.Array, cuts: jax.Array, cells: jax.Array, thr: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused score + Pareto-prefilter chunk stage.
+
+    ``thr: (m,)`` is the per-query carried pool minimum; returns the
+    chunk scores plus ``keep = scores > thr[:, None]`` — the rows that
+    could possibly enter a top pool whose minimum is ``thr`` (everything
+    else is pruned before the merge, exactly).
+    """
+    s = sc_score_cells_ref(ranks, cuts, cells)
+    return s, s > thr[:, None]
+
+
 def sc_score_ref(qs: jax.Array, xs: jax.Array, tau: jax.Array) -> jax.Array:
     """``qs: (Ns,m,s), xs: (Ns,n,s), tau: (Ns,m) -> (m,n)`` int32 scores."""
     qf, xf = qs.astype(jnp.float32), xs.astype(jnp.float32)

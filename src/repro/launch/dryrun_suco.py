@@ -28,6 +28,7 @@ from repro.distributed.engine import (
     ShardedEnginePool,
     ShardedSuCoEngine,
     index_shardings,
+    resolved_query_block_n,
 )
 from repro.launch.dryrun import RESULTS_DIR, collective_bytes
 from repro.launch.hlo_analysis import analyze_hlo
@@ -45,6 +46,10 @@ def suco_cell(*, multi_pod: bool, build: bool = False,
     cfg = DistSuCoConfig(
         n_subspaces=16, sqrt_k=64, kmeans_iters=10, alpha=0.03, beta=0.003,
         k=50, q_chunk=8, point_axes=pa,
+        # the dry-run emulates a TPU pod on fabricated CPU devices: pin the
+        # autotuner to TPU memory limits so the lowered scan structure is
+        # exactly what production serving would resolve
+        tuning_backend="tpu",
     )
     sh = index_shardings(mesh, cfg)
     x = jax.ShapeDtypeStruct((N_POINTS, DIM), jnp.float32)
@@ -100,6 +105,13 @@ def suco_cell(*, multi_pod: bool, build: bool = False,
     hlo = compiled.as_text()
     return {
         "pool": pool_rec,
+        # the tiling the lowered query step resolved to (block_n=None in
+        # DistSuCoConfig -> autotuned from backend limits + shard shape)
+        "tiling": {
+            "query_block_n": resolved_query_block_n(mesh, cfg, N_POINTS, DIM),
+            "q_chunk": cfg.q_chunk,
+            "tuning_backend": cfg.tuning_backend,
+        },
         "arch": "suco-engine-1b",
         "shape": "serve_q256",
         "multi_pod": multi_pod,

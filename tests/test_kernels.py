@@ -319,6 +319,47 @@ def test_sc_score_cells_sweep(ns, m, k_cells, bc, seed):
     assert (np.asarray(got) == np.asarray(want)).all()
 
 
+@settings(max_examples=10, deadline=None)
+@given(
+    ns=st.integers(1, 8),
+    m=st.integers(1, 20),
+    k_cells=st.integers(4, 400),
+    bc=st.integers(1, 700),
+    seed=st.integers(0, 99),
+)
+def test_sc_score_cells_prefilter_sweep(ns, m, k_cells, bc, seed):
+    """Fused score+prefilter chunk stage: Pallas (interpret) vs jnp oracle,
+    exact — scores identical to the plain entry point, keep mask == the
+    score-vs-threshold compare."""
+    from repro.kernels.sc_score.ops import sc_scores_cells_prefilter
+    from repro.kernels.sc_score.ref import (
+        sc_score_cells_prefilter_ref,
+        sc_score_cells_ref,
+    )
+
+    rng = np.random.default_rng(seed)
+    ranks = jnp.asarray(
+        np.stack([
+            np.stack([rng.permutation(k_cells) for _ in range(m)])
+            for _ in range(ns)
+        ]),
+        jnp.int32,
+    )
+    cuts = jnp.asarray(rng.integers(-1, k_cells, size=(ns, m)), jnp.int32)
+    cells = jnp.asarray(rng.integers(0, k_cells, size=(ns, bc)), jnp.int32)
+    thr = jnp.asarray(rng.integers(-1, ns + 1, size=(m,)), jnp.int32)
+    got_s, got_k = sc_scores_cells_prefilter(
+        ranks, cuts, cells, thr, impl="pallas", interpret=True
+    )
+    want_s, want_k = sc_score_cells_prefilter_ref(ranks, cuts, cells, thr)
+    assert got_s.dtype == jnp.int32 and got_k.dtype == jnp.bool_
+    assert (np.asarray(got_s) == np.asarray(want_s)).all()
+    assert (np.asarray(got_k) == np.asarray(want_k)).all()
+    # the fused stage never perturbs the plain scores
+    plain = sc_score_cells_ref(ranks, cuts, cells)
+    assert (np.asarray(got_s) == np.asarray(plain)).all()
+
+
 def test_sc_score_cells_equals_dense_suco_scores():
     """Chunked scoring over blocks reassembles the dense suco_scores matrix."""
     from repro.core import SuCoConfig, build_index, collision_count

@@ -12,6 +12,7 @@ import pytest
 from repro.core import (
     STREAMING_MIN_N,
     SuCoConfig,
+    autotune_build_block_n,
     build_index,
     merge_topk_pool,
     suco_query,
@@ -166,7 +167,29 @@ def test_build_mode_validation(small_ds):
     with pytest.raises(ValueError, match="build_mode"):
         build_index(x, SuCoConfig(build_mode="bogus"))
     with pytest.raises(ValueError, match="block_n"):
-        build_index(x, SuCoConfig(build_mode="chunked", block_n=0))
+        build_index(x, SuCoConfig(build_mode="chunked", block_n=-1))
+
+
+def test_build_block_n_zero_autotunes(small_ds):
+    """block_n=0 resolves the chunk size from the backend memory limits
+    (repro.core.tuning.autotune_build_block_n) — same assignments as an
+    explicitly-chunked build of the same data."""
+    _, x = small_ds
+    base = SuCoConfig(n_subspaces=8, sqrt_k=24, kmeans_iters=4, seed=0)
+    auto = build_index(x, dataclasses.replace(base, build_mode="chunked", block_n=0))
+    explicit = build_index(
+        x,
+        dataclasses.replace(
+            base,
+            build_mode="chunked",
+            block_n=autotune_build_block_n(
+                x.shape[0], x.shape[1], sqrt_k=24, n_subspaces=8
+            ),
+        ),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(auto.cell_ids), np.asarray(explicit.cell_ids)
+    )
 
 
 def test_assign_ops_validate_impl():

@@ -102,7 +102,7 @@ def test_dense_streaming_engine_report_identical_recall(kind, seed):
     x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
     results = {
         mode: suco_query(x, index, q, k=K, alpha=p["alpha"], beta=p["beta"], mode=mode)
-        for mode in ("dense", "streaming")
+        for mode in ("dense", "streaming", "fused")
     }
     engine = SuCoEngine(
         x, index,
@@ -110,13 +110,14 @@ def test_dense_streaming_engine_report_identical_recall(kind, seed):
     )
     results["engine"] = engine.query(q, k=K)  # padded bucket path
     recalls = {name: recall(np.asarray(r.ids), ds.gt_ids) for name, r in results.items()}
-    assert recalls["dense"] == recalls["streaming"] == recalls["engine"], recalls
-    np.testing.assert_array_equal(
-        np.asarray(results["dense"].ids), np.asarray(results["streaming"].ids)
-    )
-    np.testing.assert_array_equal(
-        np.asarray(results["dense"].ids), np.asarray(results["engine"].ids)
-    )
+    assert (
+        recalls["dense"] == recalls["streaming"] == recalls["fused"]
+        == recalls["engine"]
+    ), recalls
+    for name in ("streaming", "fused", "engine"):
+        np.testing.assert_array_equal(
+            np.asarray(results["dense"].ids), np.asarray(results[name].ids)
+        )
 
 
 def test_sharded_path_meets_theory_bound():
@@ -144,9 +145,10 @@ def test_sharded_path_meets_theory_bound():
 
 @pytest.mark.slow
 def test_recall_nightly_streaming_scale():
-    """Nightly-sized case: the auto-streaming regime (n >= STREAMING_MIN_N)
-    must clear the same guarantee — the pool merge path, not just the
-    dense reference, owns the recall contract at scale."""
+    """Nightly-sized case: the auto regime at n >= STREAMING_MIN_N (the
+    fused single-pass engine since PR 5) must clear the same guarantee —
+    the pool merge path, not just the dense reference, owns the recall
+    contract at scale."""
     kind, seed = "gaussian_mixture", 0
     n, m = 40_000, 16
     ds = make_dataset(kind, n, D, m=m, k=K, seed=seed)
@@ -156,7 +158,7 @@ def test_recall_nightly_streaming_scale():
         SuCoConfig(n_subspaces=NS, sqrt_k=SQRT_K, kmeans_iters=4, seed=seed),
         policy=EnginePolicy(alpha=p["alpha"], beta=p["beta"]),
     )
-    assert engine.mode == "streaming"
+    assert engine.mode == "fused"  # the streaming-scale default
     stats = [subspace_statistics(ds.x, q, NS) for q in ds.queries]
     bound = theorem2_bound(
         n, K, NS,
