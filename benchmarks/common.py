@@ -11,7 +11,6 @@ import functools
 import time
 from typing import Callable
 
-import numpy as np
 
 from repro.data import Dataset, exact_knn, make_queries, GENERATORS
 

@@ -19,7 +19,6 @@ from repro.data import recall
 def run() -> list[Row]:
     rows: list[Row] = []
     ds = dataset("gaussian_mixture", n=20_000)
-    n = ds.x.shape[0]
     x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
     m = ds.queries.shape[0]
 

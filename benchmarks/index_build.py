@@ -21,7 +21,6 @@ import json
 import time
 from pathlib import Path
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

@@ -114,7 +114,6 @@ def run(*, toy: bool = False) -> list[Row]:
     ))
 
     rng = np.random.default_rng(0)
-    int_max = np.iinfo(np.int32).max
     ps = jnp.asarray(rng.integers(0, 8, (m, pool)), jnp.int32)
     pi = jnp.asarray(np.arange(pool, dtype=np.int32)[None].repeat(m, 0))
     pd = jnp.asarray(rng.random((m, pool), np.float32))

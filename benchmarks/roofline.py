@@ -21,7 +21,7 @@ import json
 import math
 from pathlib import Path
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.models.model import SHAPES
 
 

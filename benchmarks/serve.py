@@ -67,7 +67,6 @@ from repro.core import (
     EnginePolicy,
     SuCoConfig,
     SuCoEngine,
-    batch_bucket,
     padding_waste,
 )
 from repro.data import GENERATORS

@@ -1,0 +1,66 @@
+"""jaxlint: static analysis that proves the serving invariants before runtime.
+
+The serving stack's production claims — zero retraces after warmup, streaming
+memory bounded by ``block_n``, the fused path's scatter/sort-free scan, the
+fp32-pinned rerank reductions, lane-aligned Pallas tiles — used to be enforced
+only by runtime assertions scattered across tests and benchmarks, so a
+regression surfaced (if at all) after an expensive build/serve run.  This
+package certifies them *statically*, in milliseconds, from two sources of
+truth:
+
+* **Engine 1** (:mod:`repro.analysis.jaxpr_rules`) walks the **closed
+  jaxprs** of the registered entry points (the query paths, the engine's
+  per-bucket executables, the index-build scans, each Pallas op) — the exact
+  programs XLA will compile — and checks structural rules: no scatter/sort
+  primitive inside a chunk scan, peak intermediate bytes within the declared
+  budget, float reductions pinned to fp32, Pallas block/grid shapes aligned
+  to the TPU tile and sized for VMEM.
+* **Engine 2** (:mod:`repro.analysis.ast_rules`) parses the Python source of
+  the serving layer (``repro/serve``, ``repro/distributed``) for retrace
+  hazards the tracer cannot see — ``jax.jit`` constructed inside a hot loop,
+  Python branches on traced arguments — and for host-sync points
+  (``np.asarray`` / ``block_until_ready``) missing an explicit
+  ``# jaxlint: sync-ok`` annotation.
+
+Entry points self-register through ``jaxlint_entries()`` hooks in the core
+modules and kernel op wrappers (:mod:`repro.analysis.registry`); the CLI is
+``python -m repro.analysis.lint`` (human or ``--format=json`` report,
+per-rule suppressions).  The rule catalogue, what each rule proves, and how
+it maps onto the paper's guarantees live in ``docs/invariants.md``.
+"""
+
+from repro.analysis.findings import Finding, Report
+from repro.analysis.registry import (
+    AstTarget,
+    JaxprEntry,
+    TileEntry,
+    ast_targets,
+    collect_entries,
+)
+from repro.analysis.jaxpr_rules import (
+    JAXPR_RULES,
+    iter_eqns,
+    peak_intermediate_bytes,
+    run_jaxpr_rules,
+)
+from repro.analysis.ast_rules import AST_RULES, lint_source
+
+# NOTE: repro.analysis.lint (the CLI) is deliberately not imported here —
+# ``python -m repro.analysis.lint`` would otherwise import it twice (runpy
+# RuntimeWarning).  Import it explicitly where needed.
+
+__all__ = [
+    "Finding",
+    "Report",
+    "JaxprEntry",
+    "TileEntry",
+    "AstTarget",
+    "collect_entries",
+    "ast_targets",
+    "JAXPR_RULES",
+    "AST_RULES",
+    "iter_eqns",
+    "peak_intermediate_bytes",
+    "run_jaxpr_rules",
+    "lint_source",
+]

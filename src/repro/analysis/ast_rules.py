@@ -1,0 +1,280 @@
+"""Engine 2: Python-AST rules over the serving layer.
+
+The jaxpr engine sees the traced program; these rules see the Python around
+it — the territory where retrace hazards and accidental host syncs live.
+Three rules:
+
+* ``host-sync`` — ``np.asarray`` / ``block_until_ready`` / ``.item()`` /
+  ``jax.device_get`` on device data blocks the dispatch pipeline.  Every such
+  point in ``serve/``/``distributed/`` must carry an explicit
+  ``# jaxlint: sync-ok`` annotation (the AsyncAnnServer retire point is the
+  only blocking point in the hot path; everything else is warmup or
+  checkpoint I/O).  Conversions of host-literal containers (lists, list
+  comprehensions, constants) are not syncs and are ignored.
+* ``tracer-branch`` — a Python ``if``/``while`` on a parameter of a jitted
+  function branches on a tracer: either a ConcretizationTypeError at trace
+  time or, via ``static_argnames``, a silent retrace per distinct value.
+* ``jit-in-hot-path`` — constructing ``jax.jit(...)`` inside a ``for``/
+  ``while`` body makes a fresh cache per iteration, defeating the
+  zero-retrace-after-warmup contract.
+
+Suppression is comment-based and line-scoped: ``# jaxlint: sync-ok`` (for
+host-sync) or ``# jaxlint: disable=<rule>`` on the flagged line.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import AstTarget
+
+_SYNC_OK = re.compile(r"#\s*jaxlint:\s*sync-ok\b")
+_DISABLE = re.compile(r"#\s*jaxlint:\s*disable=([\w,-]+)")
+
+#: Call attribute names that force device->host synchronisation.
+_SYNC_ATTRS = frozenset({"block_until_ready", "device_get"})
+_NUMPY_NAMES = frozenset({"np", "numpy"})
+_NUMPY_CONVERTERS = frozenset({"asarray", "array"})
+
+#: AST node types whose conversion to numpy is host data, not a device sync.
+_HOST_LITERALS = (
+    ast.List,
+    ast.ListComp,
+    ast.GeneratorExp,
+    ast.Tuple,
+    ast.Dict,
+    ast.DictComp,
+    ast.SetComp,
+    ast.Constant,
+)
+
+
+def _dotted(node: ast.AST) -> str:
+    """Render a Name/Attribute chain like ``jax.jit``; '' if not a chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _line_suppressions(source: str) -> tuple[set[int], dict[int, set[str]]]:
+    sync_ok: set[int] = set()
+    disabled: dict[int, set[str]] = {}
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        if _SYNC_OK.search(line):
+            sync_ok.add(lineno)
+        m = _DISABLE.search(line)
+        if m:
+            disabled.setdefault(lineno, set()).update(
+                r.strip() for r in m.group(1).split(",") if r.strip()
+            )
+    return sync_ok, disabled
+
+
+# ------------------------------ host-sync -----------------------------------
+
+
+def _sync_call_reason(call: ast.Call) -> str | None:
+    func = call.func
+    if isinstance(func, ast.Attribute):
+        if func.attr in _SYNC_ATTRS:
+            return f"{_dotted(func) or func.attr}() blocks until device work finishes"
+        if func.attr == "item" and not call.args and not call.keywords:
+            return ".item() pulls a device scalar to the host"
+        if isinstance(func.value, ast.Name) and func.value.id in _NUMPY_NAMES:
+            if func.attr in _NUMPY_CONVERTERS:
+                if call.args and isinstance(call.args[0], _HOST_LITERALS):
+                    return None  # converting host data, not a device array
+                return (
+                    f"np.{func.attr}() on a device value synchronises the stream"
+                )
+    elif isinstance(func, ast.Name) and func.id in _SYNC_ATTRS:
+        return f"{func.id}() blocks until device work finishes"
+    return None
+
+
+def _check_host_sync(tree: ast.AST, target: str, sync_ok: set[int]) -> list[Finding]:
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        reason = _sync_call_reason(node)
+        if reason is None:
+            continue
+        end_line = getattr(node, "end_lineno", node.lineno)
+        if node.lineno in sync_ok or end_line in sync_ok:
+            findings.append(
+                Finding(
+                    rule="host-sync",
+                    target=f"{target}:{node.lineno}",
+                    message=reason,
+                    suppressed=True,
+                    suppress_reason="annotated sync-ok",
+                )
+            )
+        else:
+            findings.append(
+                Finding(
+                    rule="host-sync",
+                    target=f"{target}:{node.lineno}",
+                    message=f"unannotated host sync: {reason} "
+                    "(add '# jaxlint: sync-ok' if intentional)",
+                )
+            )
+    return findings
+
+
+# ---------------------------- tracer-branch ---------------------------------
+
+
+def _jit_static_argnames(func: ast.FunctionDef) -> tuple[bool, set[str]]:
+    """Is this function jit-decorated, and which params are static?
+
+    Recognises ``@jax.jit``, ``@jit``, ``@partial(jax.jit, ...)`` and
+    ``@functools.partial(jax.jit, static_argnames=...)``."""
+    for deco in func.decorator_list:
+        name = _dotted(deco)
+        if name in ("jax.jit", "jit"):
+            return True, set()
+        if isinstance(deco, ast.Call):
+            cname = _dotted(deco.func)
+            if cname in ("jax.jit", "jit"):
+                return True, _static_names_from_kwargs(deco)
+            if cname in ("partial", "functools.partial") and deco.args:
+                inner = _dotted(deco.args[0])
+                if inner in ("jax.jit", "jit"):
+                    return True, _static_names_from_kwargs(deco)
+    return False, set()
+
+
+def _static_names_from_kwargs(call: ast.Call) -> set[str]:
+    static: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums") and isinstance(
+            kw.value, (ast.Tuple, ast.List, ast.Constant)
+        ):
+            elts = (
+                kw.value.elts
+                if isinstance(kw.value, (ast.Tuple, ast.List))
+                else [kw.value]
+            )
+            for e in elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    static.add(e.value)
+    return static
+
+
+def _check_tracer_branch(tree: ast.AST, target: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for func in ast.walk(tree):
+        if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        jitted, static = _jit_static_argnames(func)
+        if not jitted:
+            continue
+        params = {
+            a.arg
+            for a in (
+                func.args.args + func.args.posonlyargs + func.args.kwonlyargs
+            )
+        }
+        traced = params - static - {"self", "cls"}
+        for node in ast.walk(func):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            names = {
+                n.id for n in ast.walk(node.test) if isinstance(n, ast.Name)
+            }
+            hits = sorted(names & traced)
+            if hits:
+                findings.append(
+                    Finding(
+                        rule="tracer-branch",
+                        target=f"{target}:{node.lineno}",
+                        message=(
+                            f"Python {type(node).__name__.lower()} on traced "
+                            f"argument(s) {hits} of jitted '{func.name}' — "
+                            "use lax.cond/select or mark the argument static"
+                        ),
+                    )
+                )
+    return findings
+
+
+# --------------------------- jit-in-hot-path --------------------------------
+
+
+def _check_jit_in_hot_path(tree: ast.AST, target: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for loop in ast.walk(tree):
+        if not isinstance(loop, (ast.For, ast.While, ast.AsyncFor)):
+            continue
+        for node in ast.walk(loop):
+            if isinstance(node, ast.Call) and _dotted(node.func) in (
+                "jax.jit",
+                "jit",
+            ):
+                findings.append(
+                    Finding(
+                        rule="jit-in-hot-path",
+                        target=f"{target}:{node.lineno}",
+                        message=(
+                            "jax.jit(...) constructed inside a loop body — "
+                            "each call makes a fresh compilation cache; hoist "
+                            "it out of the loop"
+                        ),
+                    )
+                )
+    return findings
+
+
+# ------------------------------ dispatch ------------------------------------
+
+AST_RULES: tuple[str, ...] = ("host-sync", "tracer-branch", "jit-in-hot-path")
+
+AST_RULE_DOCS: dict[str, str] = {
+    "host-sync": (
+        "every device->host sync point carries an explicit "
+        "'# jaxlint: sync-ok' annotation"
+    ),
+    "tracer-branch": (
+        "no Python if/while branches on a traced argument of a jitted function"
+    ),
+    "jit-in-hot-path": "jax.jit is never constructed inside a loop body",
+}
+
+
+def lint_source(source: str, target: str) -> list[Finding]:
+    """Run all AST rules over one file's source text."""
+    tree = ast.parse(source, filename=target)
+    sync_ok, disabled = _line_suppressions(source)
+    findings = (
+        _check_host_sync(tree, target, sync_ok)
+        + _check_tracer_branch(tree, target)
+        + _check_jit_in_hot_path(tree, target)
+    )
+    out: list[Finding] = []
+    for f in findings:
+        lineno = int(f.target.rsplit(":", 1)[1]) if ":" in f.target else -1
+        rules_off = disabled.get(lineno, set())
+        if not f.suppressed and f.rule in rules_off:
+            f = Finding(
+                rule=f.rule,
+                target=f.target,
+                message=f.message,
+                severity=f.severity,
+                suppressed=True,
+                suppress_reason="line disable comment",
+            )
+        out.append(f)
+    return out
+
+
+def lint_target(target: AstTarget) -> list[Finding]:
+    return lint_source(target.path.read_text(), target.name)

@@ -1,0 +1,386 @@
+"""Engine 1: structural rules over closed jaxprs.
+
+These rules read the traced program XLA will compile — not the Python that
+produced it — so they certify what actually runs: the chunk scan of the
+streaming/fused query paths stays scatter- and sort-free, no intermediate
+outgrows the declared budget, float reductions accumulate in fp32, and every
+``pallas_call``'s blocks respect the TPU tile model and fit VMEM.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Iterator
+
+import numpy as np
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import JaxprEntry, TileEntry
+
+# --------------------------- jaxpr traversal --------------------------------
+
+#: Primitives whose sub-jaxprs execute once per carried step — the "hot loop"
+#: scope for no-scatter-in-scan.  (pjit/cond bodies inherit the depth of the
+#: equation that contains them; they do not open a loop themselves.)
+_LOOP_PRIMS = frozenset({"scan", "while"})
+
+
+def _sub_jaxprs(eqn) -> Iterator[Any]:
+    for param in eqn.params.values():
+        items = param if isinstance(param, (tuple, list)) else (param,)
+        for item in items:
+            inner = getattr(item, "jaxpr", item)
+            if hasattr(inner, "eqns"):
+                yield inner
+
+
+def iter_eqns(jaxpr, depth: int = 0) -> Iterator[tuple[Any, int]]:
+    """Yield ``(eqn, loop_depth)`` for every equation, recursing into
+    scan/while/cond/pjit/pallas sub-jaxprs.  ``loop_depth`` counts how many
+    scan/while bodies enclose the equation."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in inner.eqns:
+        yield eqn, depth
+        child_depth = depth + (1 if eqn.primitive.name in _LOOP_PRIMS else 0)
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, child_depth)
+
+
+def _aval_bytes(aval) -> int | None:
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return None
+    try:
+        elems = int(math.prod(int(d) for d in shape))
+    except (TypeError, ValueError):  # dynamic/polymorphic dims
+        return None
+    try:
+        itemsize = np.dtype(dtype).itemsize
+    except TypeError:  # extended dtypes (PRNG keys) — count their base size
+        itemsize = getattr(dtype, "itemsize", None)
+        if itemsize is None:
+            return None
+    return elems * itemsize
+
+
+def peak_intermediate_bytes(jaxpr) -> tuple[int, str]:
+    """Largest single intermediate produced by any equation, in bytes.
+
+    Returns ``(bytes, description)`` where the description names the
+    offending primitive and shape — this is the bytes-denominated successor
+    of ``repro.launch.hlo_analysis.jaxpr_peak_intermediate`` (which counts
+    elements and stays in use by the benchmarks)."""
+    peak, where = 0, "(empty jaxpr)"
+    for eqn, _ in iter_eqns(jaxpr):
+        for var in eqn.outvars:
+            b = _aval_bytes(getattr(var, "aval", None))
+            if b is not None and b > peak:
+                peak = b
+                aval = var.aval
+                where = f"{eqn.primitive.name} -> {aval.dtype}{list(aval.shape)}"
+    return peak, where
+
+
+# ------------------------------- rules --------------------------------------
+
+_SORT_PRIMS = frozenset({"sort"})
+
+
+def _is_scatter(prim_name: str) -> bool:
+    return prim_name.startswith("scatter")
+
+
+def rule_no_scatter_in_scan(entry: JaxprEntry, jaxpr) -> list[Finding]:
+    """Forbid scatter*/sort primitives inside scan/while bodies.
+
+    A scatter or sort inside the chunk scan re-serialises the streaming path
+    (PR 5's fused scan is score -> prune -> merge with no data-sized
+    shuffles).  Entries may declare ``scatter_budget_elems`` to allow small
+    carried scatters (the build scan's IMI histogram updates an (Ns, K)
+    carry); anything larger — or any in-loop sort — is a violation."""
+    findings: list[Finding] = []
+    for eqn, depth in iter_eqns(jaxpr):
+        if depth == 0:
+            continue
+        name = eqn.primitive.name
+        if name in _SORT_PRIMS:
+            shapes = [list(getattr(v.aval, "shape", ())) for v in eqn.outvars]
+            findings.append(
+                Finding(
+                    rule="no-scatter-in-scan",
+                    target=entry.name,
+                    message=f"sort {shapes} inside a scan body (loop depth {depth})",
+                )
+            )
+        elif _is_scatter(name):
+            elems = max(
+                (
+                    int(math.prod(getattr(v.aval, "shape", ()) or (1,)))
+                    for v in eqn.outvars
+                ),
+                default=0,
+            )
+            if elems > entry.scatter_budget_elems:
+                findings.append(
+                    Finding(
+                        rule="no-scatter-in-scan",
+                        target=entry.name,
+                        message=(
+                            f"{name} of {elems} elems inside a scan body "
+                            f"(budget {entry.scatter_budget_elems}, "
+                            f"loop depth {depth})"
+                        ),
+                    )
+                )
+    return findings
+
+
+def rule_bounded_intermediate(entry: JaxprEntry, jaxpr) -> list[Finding]:
+    """Peak single-intermediate bytes must fit the entry's declared budget.
+
+    The budget encodes the paper-facing memory claim (streaming query:
+    O(m*(block_n + n_candidates)); chunked build: O(codebooks * block)) and
+    is additionally capped by the backend HBM model from
+    ``core.tuning.backend_limits``."""
+    from repro.core.tuning import backend_limits
+
+    budget = entry.budget_bytes
+    if budget is None:
+        budget = backend_limits().hbm_bytes
+    budget = min(budget, backend_limits().hbm_bytes)
+    peak, where = peak_intermediate_bytes(jaxpr)
+    if peak > budget:
+        return [
+            Finding(
+                rule="bounded-intermediate",
+                target=entry.name,
+                message=(
+                    f"peak intermediate {peak} B ({where}) exceeds the "
+                    f"declared budget {budget} B"
+                ),
+            )
+        ]
+    return []
+
+
+#: Reductions whose accumulator dtype matters for the paper's exactness story.
+_REDUCE_PRIMS = frozenset({"reduce_sum", "cumsum", "dot_general", "add_any"})
+_LOW_PRECISION = frozenset(
+    {"float16", "bfloat16", "float8_e4m3fn", "float8_e5m2", "float8_e4m3b11fnuz"}
+)
+
+
+def rule_pinned_accumulator(entry: JaxprEntry, jaxpr) -> list[Finding]:
+    """Float reductions (sums, cumsums, matmuls) must accumulate in fp32+.
+
+    The rerank distances and k-means statistics are exactness-critical: a
+    bf16 accumulator silently breaks the bit-parity contract between the
+    dense/streaming/fused paths and the tie-break determinism tests."""
+    findings: list[Finding] = []
+    for eqn, _ in iter_eqns(jaxpr):
+        if eqn.primitive.name not in _REDUCE_PRIMS:
+            continue
+        for var in eqn.outvars:
+            dtype = getattr(getattr(var, "aval", None), "dtype", None)
+            if dtype is not None and str(dtype) in _LOW_PRECISION:
+                shape = list(var.aval.shape)
+                findings.append(
+                    Finding(
+                        rule="pinned-accumulator",
+                        target=entry.name,
+                        message=(
+                            f"{eqn.primitive.name} accumulates in {dtype} "
+                            f"{shape}; reductions must be pinned to float32"
+                        ),
+                    )
+                )
+    return findings
+
+
+# ----------------------------- tile-shape -----------------------------------
+
+
+def _pallas_eqns(jaxpr) -> Iterator[Any]:
+    for eqn, _ in iter_eqns(jaxpr):
+        if eqn.primitive.name == "pallas_call":
+            yield eqn
+
+
+def _int_dims(block_shape) -> list[int | None]:
+    return [d if isinstance(d, int) else None for d in block_shape]
+
+
+def rule_tile_shape(entry: TileEntry) -> list[Finding]:
+    """Validate Pallas block/grid shapes against the declared tile contract.
+
+    Checks, per ``pallas_call`` found in the entry's jaxpr: every block
+    divides its operand (no silent partial tiles beyond the op wrapper's own
+    padding), declared lane/sublane alignment per block mapping, and the
+    summed block footprint (x double-buffering) fits the TPU fast-memory
+    budget.  ``TileConfig`` samples are checked against the autotuner's
+    quantisation contract."""
+    from repro.core.tuning import backend_limits
+
+    findings: list[Finding] = []
+    c = entry.contract
+
+    def fail(message: str) -> None:
+        findings.append(Finding(rule="tile-shape", target=entry.name, message=message))
+
+    for cfg in entry.tile_configs:
+        if c.get("sublane") and cfg.bm % c["sublane"]:
+            fail(f"TileConfig bm={cfg.bm} not a multiple of sublane {c['sublane']}")
+        if c.get("lane") and cfg.bn % c["lane"]:
+            fail(f"TileConfig bn={cfg.bn} not a multiple of lane {c['lane']}")
+        if c.get("block_quantum") and cfg.block_n % c["block_quantum"]:
+            fail(
+                f"TileConfig block_n={cfg.block_n} not a multiple of "
+                f"quantum {c['block_quantum']}"
+            )
+        if c.get("cap_quantum") and cfg.survivor_cap % c["cap_quantum"]:
+            fail(
+                f"TileConfig survivor_cap={cfg.survivor_cap} not a multiple "
+                f"of quantum {c['cap_quantum']}"
+            )
+        if cfg.survivor_cap > cfg.block_n:
+            fail(
+                f"TileConfig survivor_cap={cfg.survivor_cap} exceeds "
+                f"block_n={cfg.block_n}"
+            )
+
+    if entry.make is None:
+        return findings
+
+    jaxpr = entry.make()
+    vmem_budget = int(c.get("vmem_bytes", backend_limits("tpu").fast_bytes))
+    double_buffer = int(c.get("double_buffer", 2))
+    found_any = False
+    for eqn in _pallas_eqns(jaxpr):
+        found_any = True
+        gm = eqn.params.get("grid_mapping")
+        out_avals = tuple(eqn.params.get("out_avals", ()))
+        if gm is None:
+            fail("pallas_call without a grid_mapping param (jax API drift)")
+            continue
+        grid = tuple(gm.grid)
+        if not all(isinstance(g, int) and g > 0 for g in grid):
+            fail(f"non-static or empty grid {grid}")
+        mappings = list(gm.block_mappings)
+        n_out = len(out_avals)
+        in_maps = mappings[: len(mappings) - n_out]
+        # scalar-prefetch operands lead the invars and have no block mapping
+        in_avals = [v.aval for v in eqn.invars][len(eqn.invars) - len(in_maps) :]
+        operands = list(zip(in_maps, in_avals)) + list(
+            zip(mappings[len(in_maps) :], out_avals)
+        )
+
+        vmem = 0
+        for mi, (bm, aval) in enumerate(operands):
+            block = _int_dims(bm.block_shape)
+            shape = tuple(getattr(aval, "shape", ()))
+            dtype = getattr(aval, "dtype", np.dtype("float32"))
+            if len(block) > len(shape):
+                fail(
+                    f"mapping {mi}: block rank {len(block)} exceeds operand "
+                    f"rank {len(shape)} ({shape})"
+                )
+                continue
+            # blocks index the trailing dims of the operand
+            for dim, bdim in enumerate(block):
+                if bdim is None:
+                    continue
+                odim = shape[len(shape) - len(block) + dim]
+                if bdim > odim or odim % bdim:
+                    fail(
+                        f"mapping {mi}: block {block} does not tile operand "
+                        f"{list(shape)} (dim {dim}: {odim} % {bdim} != 0)"
+                    )
+            vmem += (
+                math.prod(b if b is not None else 1 for b in block)
+                * np.dtype(dtype).itemsize
+            )
+            for dim, mult in c.get("block_align", {}).get(mi, ()):
+                bdim = block[dim]
+                if bdim is not None and bdim % mult:
+                    fail(
+                        f"mapping {mi}: block {block} dim {dim} = {bdim} "
+                        f"not a multiple of {mult} (tile contract)"
+                    )
+        if vmem * double_buffer > vmem_budget:
+            fail(
+                f"block working set {vmem} B x{double_buffer} double-buffer "
+                f"exceeds the VMEM budget {vmem_budget} B"
+            )
+    if not found_any:
+        fail("entry declared a tile contract but traced no pallas_call")
+    return findings
+
+
+# ------------------------------ dispatch ------------------------------------
+
+JaxprRule = Callable[[JaxprEntry, Any], list[Finding]]
+
+JAXPR_RULES: dict[str, JaxprRule] = {
+    "no-scatter-in-scan": rule_no_scatter_in_scan,
+    "bounded-intermediate": rule_bounded_intermediate,
+    "pinned-accumulator": rule_pinned_accumulator,
+}
+
+RULE_DOCS: dict[str, str] = {
+    "no-scatter-in-scan": (
+        "no scatter/sort primitive executes inside the chunk scan body"
+    ),
+    "bounded-intermediate": (
+        "peak single-intermediate bytes fit the declared block_n-scaled budget"
+    ),
+    "pinned-accumulator": "float reductions accumulate in float32, never bf16/f16",
+    "tile-shape": (
+        "Pallas blocks tile their operands, respect lane/sublane alignment, "
+        "and fit the VMEM model"
+    ),
+}
+
+
+def _apply_suppressions(entry, findings: list[Finding]) -> list[Finding]:
+    out = []
+    for f in findings:
+        reason = entry.suppress.get(f.rule)
+        if reason is not None:
+            f = Finding(
+                rule=f.rule,
+                target=f.target,
+                message=f.message,
+                severity=f.severity,
+                suppressed=True,
+                suppress_reason=reason,
+            )
+        out.append(f)
+    return out
+
+
+def run_jaxpr_rules(entry) -> tuple[list[Finding], list[str]]:
+    """Run every applicable rule for one registry entry.
+
+    Returns ``(findings, rules_checked)``.  For a :class:`TileEntry` the only
+    applicable rule is ``tile-shape``; for a :class:`JaxprEntry` the entry is
+    traced once and each declared rule runs over the shared jaxpr."""
+    if isinstance(entry, TileEntry):
+        return _apply_suppressions(entry, rule_tile_shape(entry)), ["tile-shape"]
+    jaxpr = entry.make()
+    findings: list[Finding] = []
+    checked: list[str] = []
+    for rule in entry.rules:
+        fn = JAXPR_RULES.get(rule)
+        if fn is None:
+            findings.append(
+                Finding(
+                    rule=rule,
+                    target=entry.name,
+                    message=f"unknown jaxpr rule {rule!r} declared by the entry",
+                )
+            )
+            continue
+        findings.extend(fn(entry, jaxpr))
+        checked.append(rule)
+    return _apply_suppressions(entry, findings), checked

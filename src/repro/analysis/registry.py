@@ -1,0 +1,135 @@
+"""Entry-point registry: what jaxlint checks and where it finds it.
+
+Modules that own a public jitted entry point (the query paths in
+``core/suco.py``, the linear-scan fallback in ``core/sc_linear.py``, the tile
+autotuner in ``core/tuning.py``, each Pallas op wrapper under ``kernels/``)
+export a module-level ``jaxlint_entries()`` hook returning ``JaxprEntry`` /
+``TileEntry`` records.  The hook owns the *declaration* — which rules apply,
+the peak-intermediate budget, the tile contract — so the invariant lives next
+to the code it constrains; this module only aggregates.
+
+Hooks are imported lazily inside :func:`collect_entries` (and hook bodies
+import this module lazily in turn) so ``repro.core`` never depends on
+``repro.analysis`` at import time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import importlib
+from pathlib import Path
+from typing import Any, Callable, Mapping, Sequence
+
+#: Modules probed for a ``jaxlint_entries()`` hook, in report order.
+HOOK_MODULES: tuple[str, ...] = (
+    "repro.core.suco",
+    "repro.core.sc_linear",
+    "repro.core.tuning",
+    "repro.kernels.sc_score.ops",
+    "repro.kernels.gather_rerank.ops",
+    "repro.kernels.kmeans_assign.ops",
+    "repro.kernels.pairwise_l2.ops",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class JaxprEntry:
+    """A traceable entry point checked by the jaxpr engine.
+
+    ``make`` returns the closed jaxpr (``jax.make_jaxpr(...)`` result) of the
+    entry at canonical shapes — large enough that the declared budgets
+    separate the bounded paths from the dense ones, small enough to trace in
+    seconds.  ``rules`` names which jaxpr rules apply; ``budget_bytes`` is the
+    ``bounded-intermediate`` ceiling (peak bytes of any single intermediate);
+    ``scatter_budget_elems`` lets ``no-scatter-in-scan`` tolerate declared
+    small scatters (the build scan's IMI histogram) while still forbidding
+    data-sized ones.  ``suppress`` maps rule name -> reason for audited
+    opt-outs.
+    """
+
+    name: str
+    make: Callable[[], Any]
+    rules: tuple[str, ...]
+    budget_bytes: int | None = None
+    scatter_budget_elems: int = 0
+    suppress: Mapping[str, str] = dataclasses.field(default_factory=dict)
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class TileEntry:
+    """A Pallas kernel's tile contract, checked by the ``tile-shape`` rule.
+
+    ``contract`` declares the alignment model: ``sublane``/``lane`` (TPU
+    register tile for 4-byte dtypes), ``double_buffer`` (VMEM multiplier for
+    pipelined blocks), and optional ``block_align`` mapping a block-mapping
+    index (inputs then outputs, scalar-prefetch operands excluded) to
+    ``((dim, multiple), ...)`` constraints.  ``make`` (optional) returns a
+    jaxpr containing the ``pallas_call`` so block shapes/grid are read from
+    the traced program, not from the declaration.  ``tile_configs`` (optional)
+    are :class:`repro.core.tuning.TileConfig` samples to validate against the
+    quantisation contract.
+    """
+
+    name: str
+    contract: Mapping[str, Any]
+    make: Callable[[], Any] | None = None
+    tile_configs: tuple = ()
+    suppress: Mapping[str, str] = dataclasses.field(default_factory=dict)
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class AstTarget:
+    """One source file scanned by the AST engine."""
+
+    name: str
+    path: Path
+
+
+Entry = Any  # JaxprEntry | TileEntry
+
+
+def collect_entries(
+    modules: Sequence[str] = HOOK_MODULES,
+    pattern: str = "*",
+) -> list[Entry]:
+    """Import each hook module and gather its declared entries.
+
+    ``pattern`` is an fnmatch glob over entry names (CLI ``--entries``).
+    Import or hook failures raise — a broken hook must fail the lint loudly,
+    not silently shrink coverage.
+    """
+    entries: list[Entry] = []
+    seen: set[str] = set()
+    for modname in modules:
+        mod = importlib.import_module(modname)
+        hook = getattr(mod, "jaxlint_entries", None)
+        if hook is None:
+            continue
+        for entry in hook():
+            if entry.name in seen:
+                raise ValueError(f"duplicate jaxlint entry name: {entry.name!r}")
+            seen.add(entry.name)
+            if fnmatch.fnmatch(entry.name, pattern):
+                entries.append(entry)
+    return entries
+
+
+#: Packages whose Python source the AST engine scans (serving layer: the
+#: code where a stray host sync or retrace hazard breaks the SLO story).
+AST_SCAN_PACKAGES: tuple[str, ...] = ("serve", "distributed")
+
+
+def ast_targets(pattern: str = "*") -> list[AstTarget]:
+    import repro
+
+    root = Path(repro.__file__).resolve().parent
+    targets: list[AstTarget] = []
+    for pkg in AST_SCAN_PACKAGES:
+        for path in sorted((root / pkg).glob("*.py")):
+            name = f"repro/{pkg}/{path.name}"
+            if fnmatch.fnmatch(name, pattern):
+                targets.append(AstTarget(name=name, path=path))
+    return targets

@@ -64,7 +64,7 @@ class HNSWLite:
         return self
 
     def memory_bytes(self) -> int:
-        return sum(8 * len(l) + 56 for l in self.links)
+        return sum(8 * len(lk) + 56 for lk in self.links)
 
     def query(self, q: np.ndarray, k: int, ef_search: int = 64) -> np.ndarray:
         out = np.zeros((q.shape[0], k), dtype=np.int64)

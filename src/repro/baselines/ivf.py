@@ -36,7 +36,7 @@ class IVFFlat:
         return self
 
     def memory_bytes(self) -> int:
-        return self.centroids.nbytes + sum(l.nbytes for l in self.lists)
+        return self.centroids.nbytes + sum(arr.nbytes for arr in self.lists)
 
     def query(self, q: np.ndarray, k: int, nprobe: int = 8) -> np.ndarray:
         out = np.zeros((q.shape[0], k), dtype=np.int64)

@@ -31,8 +31,8 @@ class E2LSH:
         self.tables: list[dict[int, np.ndarray]] = []
         mult = rng.integers(1, 2**31, size=self.K)
         self.mult = mult
-        for l in range(self.L):
-            h = (codes[l] * mult[None, :]).sum(1)
+        for li in range(self.L):
+            h = (codes[li] * mult[None, :]).sum(1)
             tab: dict[int, list[int]] = {}
             for i, hv in enumerate(h):
                 tab.setdefault(int(hv), []).append(i)
@@ -54,9 +54,9 @@ class E2LSH:
                 ((self.a @ qi) + self.b) / self.w
             ).astype(np.int64)  # (L, K)
             counts = np.zeros(n, dtype=np.int32)
-            for l in range(self.L):
-                hv = int((codes[l] * self.mult).sum())
-                hit = self.tables[l].get(hv)
+            for li in range(self.L):
+                hv = int((codes[li] * self.mult).sum())
+                hit = self.tables[li].get(hv)
                 if hit is not None:
                     counts[hit] += 1
             cand = np.nonzero(counts >= threshold)[0]

@@ -12,7 +12,6 @@ Two execution paths exist for the hot pairwise-L2 computation:
 
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax

@@ -38,7 +38,6 @@ chunked whenever ``block_n>0``.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple
 
 import jax

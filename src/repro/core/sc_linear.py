@@ -209,3 +209,67 @@ def sc_linear_query(
     scores = sc_scores_from_subspaces(xs, qs, c, metric)  # (m, n)
     n_candidates = max(k, int(beta * n))
     return rerank(x, q, scores, k, n_candidates, metric)
+
+
+# --------------------------------------------------------------------------
+# jaxlint registry hook (see repro.analysis)
+# --------------------------------------------------------------------------
+
+
+def jaxlint_entries():
+    """Registry hook: the index-free baseline and the pool-merge scan."""
+    from repro.analysis.registry import JaxprEntry
+
+    n, d, m, k = 4_096, 32, 8, 10
+    alpha, beta = 0.05, 0.05
+    spec = subspace.contiguous_spec(d, 8)
+    pool = max(k, int(beta * n))
+
+    def make_query():
+        S = jax.ShapeDtypeStruct
+        return jax.make_jaxpr(
+            lambda xx, qq: sc_linear_query(
+                xx, qq, spec=spec, k=k, alpha=alpha, beta=beta
+            )
+        )(S((n, d), jnp.float32), S((m, d), jnp.float32))
+
+    def make_merge_scan():
+        mq, p, bn, blocks = 8, 64, 128, 4
+        int_max = jnp.iinfo(jnp.int32).max
+
+        def scan_merge(scores, ids):
+            init = (
+                jnp.full((mq, p), -1, jnp.int32),
+                jnp.full((mq, p), int_max, jnp.int32),
+            )
+
+            def step(carry, inp):
+                return merge_topk_pool(carry[0], carry[1], *inp), None
+
+            return jax.lax.scan(step, init, (scores, ids))[0]
+
+        S = jax.ShapeDtypeStruct
+        return jax.make_jaxpr(scan_merge)(
+            S((blocks, mq, bn), jnp.int32), S((blocks, mq, bn), jnp.int32)
+        )
+
+    return [
+        JaxprEntry(
+            name="sc_linear.query",
+            make=make_query,
+            rules=("bounded-intermediate", "pinned-accumulator"),
+            # the subspace scan keeps one (m, n) distance block live plus
+            # the (Ns, n, s) split views (O(n*d)) and the rerank gather
+            budget_bytes=4 * max(2 * m * n, 2 * n * d, m * pool * d),
+            note=(
+                "Algorithm 1 baseline; its subspace scan sorts (kth_smallest) "
+                "by design, so no-scatter-in-scan is intentionally not declared"
+            ),
+        ),
+        JaxprEntry(
+            name="sc_linear.merge_pool_scan",
+            make=make_merge_scan,
+            rules=("no-scatter-in-scan", "pinned-accumulator"),
+            note="the carried top-pool merge the streaming engines scan with",
+        ),
+    ]

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -99,7 +99,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
-import math
 from typing import Iterable, Mapping, NamedTuple, Sequence
 
 import jax
@@ -1250,3 +1249,199 @@ class SuCoEngine:
             padded_queries=self._padded,
             buckets=tuple(sorted(self._buckets_seen)),
         )
+
+
+# --------------------------------------------------------------------------
+# jaxlint registry hook (see repro.analysis)
+# --------------------------------------------------------------------------
+
+# Canonical lint shapes: large enough that the bounded-intermediate budgets
+# separate the streaming/fused paths (peak independent of n) from the dense
+# reference (peak >= m*n elements) — the same separation the jaxpr memory
+# tests assert — and small enough that the one-time index build behind the
+# query entries traces in seconds on CPU.
+#: Shapes for the jaxlint traces.  ``n`` must be comfortably larger than
+#: ``n_subspaces * block_n`` so the streamed peaks (O(m * ns * block_n),
+#: constant in n) separate cleanly from the dense (m, n) line.
+LINT_QUERY_SHAPES: Mapping[str, int | float] = {
+    "n": 60_000,
+    "d": 32,
+    "m": 32,
+    "k": 10,
+    "block_n": 2_048,
+    "alpha": 0.05,
+    "beta": 0.02,
+    "n_subspaces": 8,
+    "sqrt_k": 16,
+}
+LINT_BUILD_SHAPES: Mapping[str, int] = {
+    "n": 20_000,
+    "d": 16,
+    "n_subspaces": 4,
+    "sqrt_k": 32,
+    "block_n": 512,
+}
+
+
+@functools.lru_cache(maxsize=1)
+def _lint_problem():
+    s = LINT_QUERY_SHAPES
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((s["n"], s["d"])).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((s["m"], s["d"])).astype(np.float32))
+    cfg = SuCoConfig(
+        n_subspaces=s["n_subspaces"], sqrt_k=s["sqrt_k"], kmeans_iters=2, seed=0
+    )
+    return x, q, build_index(x, cfg), cfg
+
+
+def lint_query_budget_bytes(block_n: int, m: int | None = None) -> int:
+    """bounded-intermediate budget for a streamed query at the lint shapes:
+    the streaming memory claim O(m*(block_n + pool)) plus the index-scale
+    terms every path carries (ranks, blocked cell ids, rerank gather)."""
+    s = LINT_QUERY_SHAPES
+    n, d, k = s["n"], s["d"], s["k"]
+    m = s["m"] if m is None else m
+    ns = s["n_subspaces"]
+    cells = s["sqrt_k"] ** 2
+    pool = max(k, int(s["beta"] * n))
+    n_pad = -(-n // block_n) * block_n
+    elems = max(
+        2 * m * (block_n + pool),  # score block + carried pool (merge concat)
+        ns * m * block_n,  # per-chunk per-subspace collision gather
+        m * pool * d,  # rerank candidate gather
+        ns * n_pad,  # the index's cell-id array, reshaped into blocks
+        ns * m * cells,  # Dynamic-Activation ranks
+    )
+    return 4 * elems  # every array in the query stack is 4-byte
+
+
+def lint_dense_peak_bytes() -> int:
+    """The dense reference provably materialises an (m, n) score array; the
+    migrated memory tests use this as the separation line."""
+    return 4 * LINT_QUERY_SHAPES["m"] * LINT_QUERY_SHAPES["n"]
+
+
+def _lint_build_budget_bytes() -> int:
+    s = LINT_BUILD_SHAPES
+    n, d, ns, sqrt_k, bn = (
+        s["n"], s["d"], s["n_subspaces"], s["sqrt_k"], s["block_n"],
+    )
+    h_max = (d // ns + 1) // 2
+    n_pad = -(-n // bn) * bn
+    codebooks = 2 * ns
+    elems = max(
+        codebooks * n_pad * h_max,  # the blocked data views (O(n*d))
+        n * d,  # the permuted input itself
+        2 * codebooks * bn * max(sqrt_k, h_max),  # per-chunk dist + one-hot
+        ns * sqrt_k * sqrt_k,  # cell_counts
+    )
+    return 4 * elems
+
+
+def jaxlint_entries():
+    """Registry hook: the serving entry points and their invariants."""
+    from repro.analysis.registry import JaxprEntry
+
+    s = LINT_QUERY_SHAPES
+    k, alpha, beta = s["k"], s["alpha"], s["beta"]
+    scan_rules = ("no-scatter-in-scan", "bounded-intermediate", "pinned-accumulator")
+
+    def make_streaming():
+        x, q, index, _ = _lint_problem()
+        return jax.make_jaxpr(
+            lambda xx, qq: suco_query_streaming(
+                xx, index, qq, k=k, alpha=alpha, beta=beta, block_n=s["block_n"]
+            )
+        )(x, q)
+
+    def _fused_tiles(m: int) -> TileConfig:
+        pool = max(k, int(beta * s["n"]))
+        return autotune_tiles(
+            s["n"], s["d"], m, pool,
+            n_subspaces=s["n_subspaces"], n_cells=s["sqrt_k"] ** 2,
+        )
+
+    def make_fused():
+        x, q, index, _ = _lint_problem()
+        return jax.make_jaxpr(
+            lambda xx, qq: suco_query_fused(
+                xx, index, qq, k=k, alpha=alpha, beta=beta,
+                tiles=_fused_tiles(s["m"]),
+            )
+        )(x, q)
+
+    def make_dense():
+        x, q, index, _ = _lint_problem()
+        return jax.make_jaxpr(
+            lambda xx, qq: suco_query(
+                xx, index, qq, k=k, alpha=alpha, beta=beta, mode="dense"
+            )
+        )(x, q)
+
+    def make_engine_bucket():
+        x, q, index, _ = _lint_problem()
+        engine = SuCoEngine(x, index, EnginePolicy(mode="fused"))
+        qb = q[: batch_bucket(5)]  # one warmed (bucket=8, k) executable
+        return jax.make_jaxpr(functools.partial(engine._raw_query, k=k))(
+            engine.x, engine.index, qb
+        )
+
+    def make_build_chunked():
+        b = LINT_BUILD_SHAPES
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((b["n"], b["d"])).astype(np.float32))
+        cfg = SuCoConfig(
+            n_subspaces=b["n_subspaces"], sqrt_k=b["sqrt_k"], kmeans_iters=2,
+            seed=0, build_mode="chunked", block_n=b["block_n"],
+        )
+        return jax.make_jaxpr(lambda xx: build_index(xx, cfg).cell_ids)(x)
+
+    b = LINT_BUILD_SHAPES
+    return [
+        JaxprEntry(
+            name="suco.query_streaming",
+            make=make_streaming,
+            rules=scan_rules,
+            budget_bytes=lint_query_budget_bytes(s["block_n"]),
+            note="legacy chunked query: scan over block_n-point chunks",
+        ),
+        JaxprEntry(
+            name="suco.query_fused",
+            make=make_fused,
+            rules=scan_rules,
+            budget_bytes=lint_query_budget_bytes(_fused_tiles(s["m"]).block_n),
+            note="single-pass fused query: score/prune/merge/rerank per chunk",
+        ),
+        JaxprEntry(
+            name="suco.query_dense",
+            make=make_dense,
+            rules=("bounded-intermediate", "pinned-accumulator"),
+            budget_bytes=4 * 2 * s["m"] * s["n"] * s["n_subspaces"],
+            note=(
+                "dense reference path; materialises (m, n) and sorts inside "
+                "its subspace scan by design, so no-scatter-in-scan is "
+                "intentionally not declared"
+            ),
+        ),
+        JaxprEntry(
+            name="suco.engine_fused_bucket",
+            make=make_engine_bucket,
+            rules=scan_rules,
+            budget_bytes=lint_query_budget_bytes(
+                _fused_tiles(batch_bucket(5)).block_n
+            ),
+            note="one SuCoEngine per-(bucket, k) executable, fused mode",
+        ),
+        JaxprEntry(
+            name="suco.build_chunked",
+            make=make_build_chunked,
+            rules=scan_rules,
+            budget_bytes=_lint_build_budget_bytes(),
+            # The chunked build's scan legitimately scatters into small
+            # codebook-sized carries (the fused IMI histogram, the k-means++
+            # seed updates); data-sized scatters stay forbidden.
+            scatter_budget_elems=2 * b["n_subspaces"] * b["sqrt_k"] ** 2,
+            note="chunked index build: every k-means pass streams the data",
+        ),
+    ]

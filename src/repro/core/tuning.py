@@ -25,6 +25,7 @@ invariant).  Every knob can still be pinned by hand through
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 
@@ -63,10 +64,23 @@ _BACKEND_LIMITS: dict[str, MemoryLimits] = {
 
 
 def backend_limits(backend: str | None = None) -> MemoryLimits:
-    """Memory limits for ``backend`` (default: the active jax backend)."""
+    """Memory limits for ``backend`` (default: the active jax backend).
+
+    An unknown backend string falls back to the conservative CPU numbers —
+    with an explicit warning, since silently tiling a new accelerator with
+    CPU-sized chunks is a performance bug that should surface in logs."""
     if backend is None:
         backend = jax.default_backend()
-    return _BACKEND_LIMITS.get(backend, _BACKEND_LIMITS["cpu"])
+    limits = _BACKEND_LIMITS.get(backend)
+    if limits is None:
+        warnings.warn(
+            f"backend_limits: unknown backend {backend!r}; falling back to "
+            f"the conservative 'cpu' memory model "
+            f"(known: {sorted(_BACKEND_LIMITS)})",
+            stacklevel=2,
+        )
+        limits = _BACKEND_LIMITS["cpu"]
+    return limits
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,10 +218,13 @@ def autotune_tiles(
     bn = min(bn, max(_round_up(block_n, 128), 128))
 
     expected = pool * block_n / max(n, 1)
+    # The pool/block ceiling is rounded *down* to the quantum so the cap
+    # stays a _CAP_QUANTUM multiple even when it clamps (a slightly smaller
+    # cap only means earlier exact-fallback merges, never wrong results).
     cap = _clamp(
         _round_up(int(_CAP_SAFETY * expected) + 1, _CAP_QUANTUM),
         _CAP_QUANTUM,
-        max(_CAP_QUANTUM, min(pool, block_n)),
+        max(_CAP_QUANTUM, _round_down(min(pool, block_n), _CAP_QUANTUM)),
     )
     return TileConfig(block_n=block_n, bm=bm, bn=bn, survivor_cap=cap)
 
@@ -245,3 +262,42 @@ def autotune_build_block_n(
         _BLOCK_MAX,
     )
     return min(block_n, max(_round_up(n, _BLOCK_QUANTUM), _BLOCK_QUANTUM))
+
+
+# --------------------------------------------------------------------------
+# jaxlint registry hook (see repro.analysis)
+# --------------------------------------------------------------------------
+
+
+def jaxlint_entries():
+    """Registry hook: autotuner outputs must respect the TPU tile quanta on
+    every backend — a drifted quantum here would produce Pallas blocks that
+    fail to lower on real hardware."""
+    from repro.analysis.registry import TileEntry
+
+    sweep = (
+        # (n, d, m, pool, n_subspaces, n_cells): serving-scale, huge-pool,
+        # and minimum-viable shapes
+        (50_000, 128, 8, 1_000, 8, 2_500),
+        (1_000_000, 96, 64, 20_000, 8, 2_500),
+        (32_768, 16, 1, 33, 4, 256),
+    )
+    configs = tuple(
+        autotune_tiles(n, d, m, pool, n_subspaces=ns, n_cells=nc, backend=b)
+        for b in ("cpu", "gpu", "tpu")
+        for (n, d, m, pool, ns, nc) in sweep
+    )
+    contract = {
+        "sublane": 8,
+        "lane": 128,
+        "block_quantum": _BLOCK_QUANTUM,
+        "cap_quantum": _CAP_QUANTUM,
+    }
+    return [
+        TileEntry(
+            name="tuning.autotune_tiles",
+            contract=contract,
+            tile_configs=configs,
+            note="TileConfig quantisation contract across backends",
+        )
+    ]

@@ -59,7 +59,6 @@ def gaussian_mixture(
 
 def correlated(n: int, d: int, seed: int = 0, *, decay: float = 0.9) -> np.ndarray:
     """Anisotropic data: variance decays geometrically across dims."""
-    rng = np.random.default_rng(seed)
     scales = decay ** np.arange(d)
     base = gaussian_mixture(n, d, seed, n_clusters=128)
     return (base * scales[None, :]).astype(np.float32)

@@ -46,10 +46,10 @@ def index_to_host(index: SuCoIndex) -> dict:
     import numpy as np
 
     return {
-        "centroids1": np.asarray(index.centroids1),
-        "centroids2": np.asarray(index.centroids2),
-        "cell_ids": np.asarray(index.cell_ids),
-        "cell_counts": np.asarray(index.cell_counts),
+        "centroids1": np.asarray(index.centroids1),  # jaxlint: sync-ok
+        "centroids2": np.asarray(index.centroids2),  # jaxlint: sync-ok
+        "cell_ids": np.asarray(index.cell_ids),  # jaxlint: sync-ok
+        "cell_counts": np.asarray(index.cell_counts),  # jaxlint: sync-ok
     }
 
 

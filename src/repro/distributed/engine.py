@@ -31,7 +31,6 @@ design scales to thousands of nodes.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Sequence
 
@@ -301,7 +300,6 @@ def make_query_fn(mesh: Mesh, cfg: DistSuCoConfig, n: int, d: int, mq: int):
     """
     ns_loc, s = _check(mesh, cfg, d)
     pa = cfg.point_axes
-    sqrt_k = cfg.sqrt_k
     k = cfg.k
     n_pt_shards = math.prod(mesh.shape[a] for a in pa)
     n_loc = n // n_pt_shards
@@ -597,7 +595,9 @@ class ShardedSuCoEngine:
         before = self.compile_count
         d = self.x.shape[1]
         for b in sorted({self.bucket_mq(m) for m in batch_sizes}):
-            jax.block_until_ready(self._invoke(b, jnp.zeros((b, d), self.x.dtype))[0])
+            jax.block_until_ready(  # jaxlint: sync-ok — warmup, off hot path
+                self._invoke(b, jnp.zeros((b, d), self.x.dtype))[0]
+            )
         return self.compile_count - before
 
     @property

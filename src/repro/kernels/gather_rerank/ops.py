@@ -72,3 +72,62 @@ def gather_rerank_block(
 
 
 __all__ = ["gather_rerank", "gather_rerank_block", "gather_rerank_block_ref", "gather_rerank_ref"]
+
+
+# --------------------------------------------------------------------------
+# jaxlint registry hook (see repro.analysis)
+# --------------------------------------------------------------------------
+
+#: Tile contract: the scalar-prefetch gather addresses one (1, d) row per
+#: grid step, so only the lane (minor-dim) alignment binds; the (1, 1)
+#: distance output has no lane constraint.
+TILE_CONTRACT = {
+    "sublane": 8,
+    "lane": 128,
+    "double_buffer": 2,
+    "block_align": {
+        0: ((1, 128),),  # x row (1, d)
+        1: ((1, 128),),  # q row (1, d)
+    },
+}
+
+
+def jaxlint_entries():
+    from repro.analysis.registry import JaxprEntry, TileEntry
+
+    S = jax.ShapeDtypeStruct
+    n, d, mq, mc = 4_096, 128, 8, 64
+
+    def make_kernel():
+        return jax.make_jaxpr(
+            lambda i, x, q: gather_rerank_kernel(i, x, q, mc=mc, interpret=True)
+        )(
+            S((mq * mc,), jnp.int32),
+            S((n, d), jnp.float32),
+            S((mq, d), jnp.float32),
+        )
+
+    def make_oracle():
+        return jax.make_jaxpr(
+            lambda c, x, q: gather_rerank_block(c, x, q, impl="jnp")
+        )(
+            S((mq, mc), jnp.int32),
+            S((n, d), jnp.float32),
+            S((mq, d), jnp.float32),
+        )
+
+    return [
+        TileEntry(
+            name="kernels.gather_rerank.kernel",
+            make=make_kernel,
+            contract=TILE_CONTRACT,
+            note="scalar-prefetch candidate gather + exact sq-L2",
+        ),
+        JaxprEntry(
+            name="kernels.gather_rerank.oracle",
+            make=make_oracle,
+            rules=("bounded-intermediate", "pinned-accumulator"),
+            budget_bytes=4 * 2 * mq * mc * d,
+            note="jnp oracle of the candidate rerank (the production CPU path)",
+        ),
+    ]

@@ -142,3 +142,84 @@ __all__ = [
     "kmeans_assign_batched_ref",
     "kmeans_stats_ref",
 ]
+
+
+# --------------------------------------------------------------------------
+# jaxlint registry hook (see repro.analysis)
+# --------------------------------------------------------------------------
+
+#: Tile contract for the batched codebook kernels: the data block keeps the
+#: subspace width on lanes and the point block on sublanes; accumulator
+#: tiles (sums/counts/inertia) revisit across the point grid.
+TILE_CONTRACT = {
+    "sublane": 8,
+    "lane": 128,
+    "double_buffer": 2,
+}
+
+
+def jaxlint_entries():
+    from repro.analysis.registry import JaxprEntry, TileEntry
+
+    S = jax.ShapeDtypeStruct
+    b, n, s, k, bn = 8, 2_048, 128, 32, 1_024
+
+    def make_batched():
+        return jax.make_jaxpr(
+            lambda x, c: kmeans_assign_batched_kernel(x, c, bn=bn, interpret=True)
+        )(S((b, n, s), jnp.float32), S((b, k, s), jnp.float32))
+
+    def make_stats():
+        return jax.make_jaxpr(
+            lambda x, c, w: kmeans_stats_kernel(
+                x, c, w, bn=bn, with_assign=True, interpret=True
+            )
+        )(
+            S((b, n, s), jnp.float32),
+            S((b, k, s), jnp.float32),
+            S((1, n), jnp.float32),
+        )
+
+    def make_oracle():
+        return jax.make_jaxpr(
+            lambda x, c: kmeans_assign_stats(x, c, impl="jnp")
+        )(S((b, n, s), jnp.float32), S((b, k, s), jnp.float32))
+
+    return [
+        TileEntry(
+            name="kernels.kmeans_assign.batched",
+            make=make_batched,
+            contract={
+                **TILE_CONTRACT,
+                "block_align": {
+                    0: ((1, 8), (2, 128)),  # x (1, bn, s)
+                    1: ((1, 8), (2, 128)),  # centroids (1, k, s)
+                    2: ((1, 8),),  # assign out (1, bn, 1)
+                },
+            },
+            note="batched fused distance+argmin assignment",
+        ),
+        TileEntry(
+            name="kernels.kmeans_assign.stats",
+            make=make_stats,
+            contract={
+                **TILE_CONTRACT,
+                "block_align": {
+                    0: ((1, 8), (2, 128)),  # x (1, bn, s)
+                    1: ((1, 8), (2, 128)),  # centroids (1, k, s)
+                    2: ((1, 128),),  # weights (1, bn)
+                    3: ((1, 8),),  # assign out (1, bn, 1)
+                    4: ((1, 8), (2, 128)),  # sums (1, k, s)
+                    5: ((1, 8),),  # counts (1, k)
+                },
+            },
+            note="fused Lloyd sufficient statistics",
+        ),
+        JaxprEntry(
+            name="kernels.kmeans_assign.oracle",
+            make=make_oracle,
+            rules=("bounded-intermediate", "pinned-accumulator"),
+            budget_bytes=4 * 2 * b * n * max(k, s),
+            note="jnp oracle of the Lloyd statistics (dense, small-n only)",
+        ),
+    ]

@@ -44,3 +44,56 @@ def pairwise_sqdist(
 
 
 __all__ = ["pairwise_sqdist", "pairwise_sqdist_ref"]
+
+
+# --------------------------------------------------------------------------
+# jaxlint registry hook (see repro.analysis)
+# --------------------------------------------------------------------------
+
+#: Tile contract: classic MXU matmul tiling — every block is a full
+#: (sublane, lane) tile in both dims.
+TILE_CONTRACT = {
+    "sublane": 8,
+    "lane": 128,
+    "double_buffer": 2,
+    "block_align": {
+        0: ((0, 8), (1, 128)),  # q (bm, bk)
+        1: ((0, 8), (1, 128)),  # x (bn, bk)
+        2: ((0, 8), (1, 128)),  # out (bm, bn)
+    },
+}
+
+
+def jaxlint_entries():
+    from repro.analysis.registry import JaxprEntry, TileEntry
+
+    S = jax.ShapeDtypeStruct
+    m, n, d = 256, 512, 256
+
+    def make_kernel():
+        return jax.make_jaxpr(
+            lambda q, x: pairwise_sqdist_kernel(
+                q, x, bm=128, bn=128, bk=128, interpret=True
+            )
+        )(S((m, d), jnp.float32), S((n, d), jnp.float32))
+
+    def make_oracle():
+        return jax.make_jaxpr(lambda q, x: pairwise_sqdist_ref(q, x))(
+            S((m, d), jnp.float32), S((n, d), jnp.float32)
+        )
+
+    return [
+        TileEntry(
+            name="kernels.pairwise_l2.kernel",
+            make=make_kernel,
+            contract=TILE_CONTRACT,
+            note="blocked pairwise squared-L2 on the MXU",
+        ),
+        JaxprEntry(
+            name="kernels.pairwise_l2.oracle",
+            make=make_oracle,
+            rules=("bounded-intermediate", "pinned-accumulator"),
+            budget_bytes=4 * 2 * m * n,
+            note="jnp oracle of the pairwise-distance kernel",
+        ),
+    ]

@@ -143,3 +143,117 @@ __all__ = [
     "sc_score_cells_ref",
     "sc_score_cells_prefilter_ref",
 ]
+
+
+# --------------------------------------------------------------------------
+# jaxlint registry hook (see repro.analysis)
+# --------------------------------------------------------------------------
+
+# Canonical pre-padded kernel shapes for tile validation (Ns, m, K, chunk,
+# subspace width) — already lane/sublane aligned, as the op wrappers
+# guarantee before dispatching.
+_LINT_NS, _LINT_M, _LINT_K, _LINT_BC, _LINT_S = 4, 8, 2_560, 512, 128
+
+#: TPU tile contract shared by the SC-score kernels: f32/int32 blocks keep
+#: a lane-multiple minor dim and a sublane-multiple second-minor dim; the
+#: (1, bm)-shaped per-query rows ride the sublane quantum only.
+TILE_CONTRACT = {
+    "sublane": 8,
+    "lane": 128,
+    "double_buffer": 2,
+}
+
+
+def jaxlint_entries():
+    from repro.analysis.registry import JaxprEntry, TileEntry
+
+    S = jax.ShapeDtypeStruct
+    ns, m, K, bc, s = _LINT_NS, _LINT_M, _LINT_K, _LINT_BC, _LINT_S
+
+    def make_cells():
+        return jax.make_jaxpr(
+            lambda r, c, ce: sc_score_cells_kernel(
+                r, c, ce, bm=8, bn=512, interpret=True
+            )
+        )(S((ns, m, K), jnp.int32), S((ns, m), jnp.int32), S((ns, bc), jnp.int32))
+
+    def make_prefilter():
+        return jax.make_jaxpr(
+            lambda r, c, t, ce: sc_score_cells_prefilter_kernel(
+                r, c, t, ce, bm=8, bn=512, interpret=True
+            )
+        )(
+            S((ns, m, K), jnp.int32),
+            S((ns, m), jnp.int32),
+            S((1, m), jnp.int32),
+            S((ns, bc), jnp.int32),
+        )
+
+    def make_fused():
+        return jax.make_jaxpr(
+            lambda q, x, tau: sc_score_kernel(q, x, tau, bm=8, bn=512, interpret=True)
+        )(
+            S((ns, m, s), jnp.float32),
+            S((ns, 1_024, s), jnp.float32),
+            S((ns, m), jnp.float32),
+        )
+
+    def make_oracle():
+        return jax.make_jaxpr(
+            lambda r, c, ce: sc_scores_cells(r, c, ce, impl="jnp")
+        )(S((ns, m, K), jnp.int32), S((ns, m), jnp.int32), S((ns, bc), jnp.int32))
+
+    return [
+        TileEntry(
+            name="kernels.sc_score.cells",
+            make=make_cells,
+            contract={
+                **TILE_CONTRACT,
+                # mapping index (inputs then outputs) -> ((dim, multiple), ...)
+                "block_align": {
+                    0: ((1, 8), (2, 128)),  # ranks (1, bm, K)
+                    1: ((1, 8),),  # cuts (1, bm)
+                    2: ((1, 128),),  # cells (1, bn)
+                    3: ((0, 8), (1, 128)),  # out (bm, bn)
+                },
+            },
+            note="chunked IMI scorer: gather-compare-accumulate",
+        ),
+        TileEntry(
+            name="kernels.sc_score.cells_prefilter",
+            make=make_prefilter,
+            contract={
+                **TILE_CONTRACT,
+                "block_align": {
+                    0: ((1, 8), (2, 128)),  # ranks (1, bm, K)
+                    1: ((1, 8),),  # cuts (1, bm)
+                    2: ((1, 8),),  # thr (1, bm)
+                    3: ((1, 128),),  # cells (1, bn)
+                    4: ((0, 8), (1, 128)),  # scores (bm, bn)
+                    5: ((0, 8), (1, 128)),  # keep (bm, bn)
+                },
+            },
+            note="fused chunk stage: scores + Pareto-prefilter mask",
+        ),
+        TileEntry(
+            name="kernels.sc_score.fused_distance",
+            make=make_fused,
+            contract={
+                **TILE_CONTRACT,
+                "block_align": {
+                    0: ((1, 8), (2, 128)),  # qs (1, bm, s)
+                    1: ((1, 128), (2, 128)),  # xs (1, bn, s)
+                    2: ((1, 8),),  # tau (1, bm)
+                    3: ((0, 8), (1, 128)),  # out (bm, bn)
+                },
+            },
+            note="MXU distance + threshold-accumulate scorer",
+        ),
+        JaxprEntry(
+            name="kernels.sc_score.oracle",
+            make=make_oracle,
+            rules=("bounded-intermediate", "pinned-accumulator"),
+            budget_bytes=4 * 2 * ns * m * max(K, bc),
+            note="jnp oracle of the chunked scorer (the production CPU path)",
+        ),
+    ]

@@ -18,7 +18,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import math
 import json
 import re
@@ -28,7 +27,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import Model, SHAPES, input_specs
@@ -80,7 +78,6 @@ def collective_bytes(hlo_text: str) -> dict:
         if kind is None:
             continue
         # output type is the leading "(tuple)" or single shape on the rhs
-        head = rhs.split("=")[0] if "=" not in rhs else rhs
         shapes = _SHAPE_RE.findall(rhs.split(f"{kind}")[0])
         nbytes = 0
         for dt, dims in shapes:

@@ -18,7 +18,6 @@ import argparse
 import json
 import time
 import traceback
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +50,7 @@ def suco_cell(*, multi_pod: bool, build: bool = False,
         # exactly what production serving would resolve
         tuning_backend="tpu",
     )
-    sh = index_shardings(mesh, cfg)
+    index_shardings(mesh, cfg)  # exercises/validates the sharding rules
     x = jax.ShapeDtypeStruct((N_POINTS, DIM), jnp.float32)
     h1 = (DIM // cfg.n_subspaces + 1) // 2
     c_shape = jax.ShapeDtypeStruct((cfg.n_subspaces, cfg.sqrt_k, h1), jnp.float32)

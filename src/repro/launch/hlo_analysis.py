@@ -20,7 +20,6 @@ Everything is PER DEVICE (the module is already partitioned).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 
@@ -205,7 +204,6 @@ def analyze_hlo(text: str) -> dict:
             if re.search(r"\bdot\(", rhs) or re.search(r"\bconvolution\(", rhs):
                 st.flops += _dot_flops(out_type, rhs, shapes)
             # memory traffic: operands + output of top-level ops
-            opk = re.search(r"\)\s*(\w[\w\-]*)\(", " " + rhs)
             kind_m = re.match(r"[\w\[\],{}\(\) /*]*?\b([a-z][\w\-]*)\(", rhs)
             kind = kind_m.group(1) if kind_m else ""
             if kind in ("fusion", "dot", "convolution", "copy", "dynamic-slice",

@@ -15,19 +15,13 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, reduced_config, ARCH_IDS
 from repro.data.lm_data import LMDataConfig, SyntheticLM
 from repro.models import Model
-from repro.launch.mesh import make_production_mesh, make_debug_mesh
-from repro.launch import shardings as SH
 from repro.train import checkpoint as CKPT
 from repro.train.optimizer import OptConfig, init_opt_state
 from repro.train.resilience import FailureInjector, StepTimer
@@ -53,9 +47,6 @@ def build(args):
 
 def train_once(args, injector: FailureInjector | None = None) -> int:
     cfg, model, step_fn, data = build(args)
-    if args.mesh == "debug":
-        mesh = make_debug_mesh((1, max(1, len(jax.devices()) // 1), 1)) if False else None
-    mesh = None
     jitted = jax.jit(step_fn, donate_argnums=(0, 1))
 
     start_step = 0

@@ -17,9 +17,7 @@ fast 512-device compiles, remat-friendly):
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -365,7 +363,7 @@ def _flash_dynwin(q, k, v, window: jax.Array, cfg: ModelConfig):
     qpos = jnp.arange(sq)
 
     def body(carry, inp):
-        acc, m, l = carry
+        acc, m, lse = carry
         kb, vb, ci = inp
         s = jnp.einsum("bkgqh,bkch->bkgqc", qf, kb.astype(jnp.float32),
                        preferred_element_type=jnp.float32)
@@ -377,17 +375,17 @@ def _flash_dynwin(q, k, v, window: jax.Array, cfg: ModelConfig):
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        lse_new = lse * corr + jnp.sum(p, axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bkgqc,bkch->bkgqh", p, vb.astype(jnp.float32),
             preferred_element_type=jnp.float32)
-        return (acc_new, m_new, l_new), None
+        return (acc_new, m_new, lse_new), None
 
     acc0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
     m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
-    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
-    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kc, vc, jnp.arange(n_chunks)))
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+    lse0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (acc, m, lse), _ = jax.lax.scan(body, (acc0, m0, lse0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(lse[..., None], 1e-30)
     return out.reshape(b, hq, sq, hd).astype(q.dtype)
 
 

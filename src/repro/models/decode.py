@@ -16,9 +16,7 @@ zamba2 (sharded over the data axis at 500k; see launch/shardings).
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -169,7 +167,6 @@ def decode_step(
     elif cfg.family == "hybrid":
         period = cfg.hybrid_period
         shared = params["shared"]
-        n_apps = cfg.n_layers // period
         flags = jnp.asarray(
             [1 if (i + 1) % period == 0 else 0 for i in range(cfg.n_layers)], jnp.int32
         )

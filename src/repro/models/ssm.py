@@ -16,7 +16,6 @@ Documented simplifications vs the reference implementations (DESIGN.md §7):
 
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -158,8 +158,8 @@ class AnnServer:
             r.t_start = t0
         try:
             res = self.engine.query(np.stack([r.query for r in batch]), k=k)
-            ids = np.asarray(res.ids)  # materialise: blocks until done
-            dists = np.asarray(res.dists)
+            ids = np.asarray(res.ids)  # jaxlint: sync-ok — sync serving step
+            dists = np.asarray(res.dists)  # jaxlint: sync-ok
             t1 = self.clock()
             for i, r in enumerate(batch):
                 r.ids, r.dists, r.t_done = ids[i], dists[i], t1
@@ -272,8 +272,10 @@ class AsyncAnnServer(AnnServer):
     def _retire(self) -> list[AnnRequest]:
         """Materialise the oldest in-flight batch (blocks until it is done)."""
         fl = self._inflight.popleft()
-        ids = np.asarray(fl.result.ids)  # blocks until the device finishes
-        dists = np.asarray(fl.result.dists)
+        # The ONE intentional blocking point of the async hot path: retiring
+        # the oldest in-flight batch materialises its results.
+        ids = np.asarray(fl.result.ids)  # jaxlint: sync-ok — the retire point
+        dists = np.asarray(fl.result.dists)  # jaxlint: sync-ok
         t1 = self.clock()
         for i, r in enumerate(fl.batch):
             r.ids, r.dists, r.t_done = ids[i], dists[i], t1
@@ -327,7 +329,21 @@ def latency_summary(requests: Sequence[AnnRequest]) -> dict:
     """
     done = [r for r in requests if r.done]
     if not done:
-        return dict(n_requests=0)
+        # Zeroed summary with the full key set: consumers (the CLI report,
+        # dashboards) index these keys unconditionally, and np.percentile on
+        # an empty array raises.
+        return dict(
+            n_requests=0,
+            qps=0.0,
+            p50_ms=0.0,
+            p99_ms=0.0,
+            mean_ms=0.0,
+            max_ms=0.0,
+            queue_p50_ms=0.0,
+            queue_p99_ms=0.0,
+            exec_p50_ms=0.0,
+            exec_p99_ms=0.0,
+        )
     lat = np.asarray([r.latency_s for r in done])
     queue = np.asarray([r.queue_s for r in done])
     execu = np.asarray([r.exec_s for r in done])

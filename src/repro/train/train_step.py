@@ -4,14 +4,13 @@ all-reduce (shard_map path)."""
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
-from repro.train.optimizer import OptConfig, apply_gradients, init_opt_state
+from repro.train.optimizer import OptConfig, apply_gradients
 
 __all__ = ["make_train_step", "make_eval_step"]
 
@@ -43,9 +42,9 @@ def make_train_step(
             micro = jax.tree.map(split, batch)
 
             def body(acc, mb):
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                loss_mb, g = jax.value_and_grad(loss_fn)(params, mb)
                 return (
-                    acc[0] + l / micro_steps,
+                    acc[0] + loss_mb / micro_steps,
                     jax.tree.map(lambda a, b: a + b / micro_steps, acc[1], g),
                 ), None
 

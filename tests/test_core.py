@@ -81,7 +81,7 @@ def test_collision_mask_counts_at_least_alpha_n(seed, alpha):
     rng = np.random.default_rng(seed)
     d = rng.normal(size=(4, 500)).astype(np.float32) ** 2
     c = collision_count(500, alpha)
-    scores = sc_scores(jnp.asarray(d), c)
+    sc_scores(jnp.asarray(d), c)  # exercised for shape/trace sanity
     # per subspace: at least c collide
     from repro.core.collision import collision_mask
 

@@ -7,7 +7,6 @@ activate_cells_sorted (TPU sort-prefix) == dynamic_activation_lax
 
 import numpy as np
 import jax.numpy as jnp
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # network-less env: vendored deterministic shim

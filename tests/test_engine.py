@@ -4,7 +4,6 @@ suco_query back-compat contract, and the continuous micro-batching ANN
 server."""
 
 import dataclasses
-import os
 
 import numpy as np
 import jax.numpy as jnp

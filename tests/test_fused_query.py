@@ -4,7 +4,6 @@ autotuner invariants, and the serving-policy knobs that ride along
 (traffic-histogram cap, sentinel-id clipping at the gather_rerank op
 boundary)."""
 
-import dataclasses
 
 import numpy as np
 import jax
@@ -426,3 +425,36 @@ def test_gather_rerank_block_matches_rerank_candidates_distances(small):
             np.sort(np.asarray(via_op), axis=1),
             np.sort(np.asarray(via_rerank), axis=1),
         )
+
+
+def test_backend_limits_unknown_backend_warns_and_falls_back():
+    """An unrecognised backend name degrades to the conservative 'cpu'
+    memory model with a warning instead of raising — serving keeps running
+    on exotic platforms, just with smaller tiles."""
+    from repro.core.tuning import backend_limits
+
+    with pytest.warns(UserWarning, match="unknown backend"):
+        limits = backend_limits("quantum_annealer")
+    assert limits == backend_limits("cpu")
+    # known backends stay silent
+    import warnings as _warnings
+
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        for backend in ("cpu", "gpu", "tpu"):
+            backend_limits(backend)
+
+
+def test_autotune_survivor_cap_stays_quantised():
+    """Regression (found by the jaxlint tile-shape rule): when the cap
+    clamps to min(pool, block_n) it must still land on a 64 multiple, or
+    the Pallas prefilter kernel loses its lane alignment."""
+    for n, d, m, pool in [
+        (50_000, 128, 8, 1_000),  # the case that used to yield cap=1000
+        (1_000_000, 96, 64, 20_000),
+        (32_768, 16, 1, 33),
+        (4_096, 8, 2, 100),
+    ]:
+        t = autotune_tiles(n, d, m, pool, n_subspaces=8, n_cells=256)
+        assert t.survivor_cap % 64 == 0, (n, d, m, pool, t)
+        assert t.survivor_cap <= max(64, t.block_n)

@@ -268,45 +268,51 @@ def test_merge_topk_pool_rejects_bad_impl():
 
 
 # ------------------------------ memory model --------------------------------
-
-from repro.launch.hlo_analysis import jaxpr_peak_intermediate as _max_intermediate_size
+#
+# The ad-hoc jaxpr peak-intermediate assertion that used to live here is now
+# the jaxlint `bounded-intermediate` rule: the chunked-build entry in
+# core/suco.py declares its O(2Ns * block_n * max(sqrtK, h_max)) byte budget
+# (plus the O(n*d) data views), and this test exercises the rule (the full
+# registry gate is tests/test_analysis.py / `python -m repro.analysis.lint`).
 
 
 def test_build_chunked_never_materialises_n_by_k():
-    """The acceptance bound: every live intermediate of the chunked build is
-    O(2Ns * block_n * max(sqrtK, h_max)) per chunk plus the O(n * d)
-    data views themselves — in particular nothing of size (n, sqrtK)
-    exists, while the dense build provably allocates one."""
-    n, d, ns, sqrt_k, bn = 20_000, 16, 4, 32, 512
-    x = _mixture(n, d, 10, seed=1)
-    base = SuCoConfig(n_subspaces=ns, sqrt_k=sqrt_k, kmeans_iters=2, seed=0)
+    """Migrated acceptance bound: the registered chunked-build entry stays
+    inside its declared bounded-intermediate budget — below the (n, sqrtK)
+    separation line — and keeps its scan free of data-sized scatters, while
+    the dense build provably allocates an (n, sqrtK)-sized array."""
+    from repro.analysis.jaxpr_rules import (
+        peak_intermediate_bytes,
+        rule_bounded_intermediate,
+        rule_no_scatter_in_scan,
+    )
+    from repro.analysis.registry import collect_entries
+    from repro.core.suco import LINT_BUILD_SHAPES
 
-    chunk_jaxpr = jax.make_jaxpr(
-        lambda xx: build_index(
-            xx, dataclasses.replace(base, build_mode="chunked", block_n=bn)
-        ).cell_ids
-    )(x)
+    entries = {e.name: e for e in collect_entries(modules=("repro.core.suco",))}
+    entry = entries["suco.build_chunked"]
+    jaxpr = entry.make()
+    assert rule_bounded_intermediate(entry, jaxpr) == []
+    assert rule_no_scatter_in_scan(entry, jaxpr) == []
+
+    s = LINT_BUILD_SHAPES
+    codebooks = 2 * s["n_subspaces"]
+    dense_line = 4 * codebooks * s["n"] * s["sqrt_k"]  # bytes
+    assert entry.budget_bytes < dense_line  # the budget is meaningful
+    peak, where = peak_intermediate_bytes(jaxpr)
+    assert peak < dense_line, f"chunked build materialised (n, sqrtK): {where}"
+
+    base = SuCoConfig(
+        n_subspaces=s["n_subspaces"], sqrt_k=s["sqrt_k"], kmeans_iters=2, seed=0
+    )
+    x = _mixture(s["n"], s["d"], 10, seed=1)
     dense_jaxpr = jax.make_jaxpr(
         lambda xx: build_index(
             xx, dataclasses.replace(base, build_mode="dense")
         ).cell_ids
     )(x)
-
-    h_max = (d // ns + 1) // 2  # 2
-    n_pad = -(-n // bn) * bn
-    codebooks = 2 * ns
-    allowed = max(
-        codebooks * n_pad * h_max,  # the blocked data views (O(n*d), data-sized)
-        n * d,  # the permuted input itself
-        2 * codebooks * bn * max(sqrt_k, h_max),  # per-chunk distance + one-hot
-        ns * sqrt_k * sqrt_k,  # cell_counts
-    )
-    got = _max_intermediate_size(chunk_jaxpr)
-    assert got <= allowed, f"chunked build intermediate {got} > allowed {allowed}"
-    assert got < codebooks * n * sqrt_k, (
-        f"chunked build materialised an (n, k)-sized array: {got}"
-    )
-    assert _max_intermediate_size(dense_jaxpr) >= codebooks * n * sqrt_k
+    dense_peak, _ = peak_intermediate_bytes(dense_jaxpr)
+    assert dense_peak >= dense_line  # the bound is real
 
 
 # --------------------------- kmeans++ seeding -------------------------------

@@ -7,7 +7,6 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import reduced_config
 from repro.models import layers as L

@@ -27,7 +27,6 @@ The default-sized cases run everywhere; the nightly-sized streaming case
 is ``@pytest.mark.slow`` (CI deselects ``slow`` — see ci.yml).
 """
 
-import dataclasses
 
 import numpy as np
 import jax.numpy as jnp

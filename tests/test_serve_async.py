@@ -142,3 +142,18 @@ def test_async_inflight_window_is_bounded(ds, index):
         assert server.inflight == 0 and len(server.completed) == 8
     with pytest.raises(ValueError, match="depth"):
         AsyncAnnServer(engine, depth=0)
+
+
+def test_latency_summary_empty_is_zeroed(ds):
+    """Regression: an empty (or all-failed) request set used to crash
+    np.percentile; it must return the full zeroed key set instead so report
+    consumers can index unconditionally."""
+    keys = {
+        "n_requests", "qps", "p50_ms", "p99_ms", "mean_ms", "max_ms",
+        "queue_p50_ms", "queue_p99_ms", "exec_p50_ms", "exec_p99_ms",
+    }
+    for requests in ([], [AnnRequest(0, ds.queries[0], k=10)]):  # none done
+        s = latency_summary(requests)
+        assert set(s) == keys
+        assert s["n_requests"] == 0
+        assert all(s[k] == 0.0 for k in keys - {"n_requests"})

@@ -178,44 +178,38 @@ def test_rerank_candidates_matches_rerank(small):
 
 
 # ------------------------------ memory model --------------------------------
-
-from repro.launch.hlo_analysis import jaxpr_peak_intermediate as _max_intermediate_size
+#
+# The ad-hoc jaxpr peak-intermediate assertions that used to live here are
+# now the jaxlint `bounded-intermediate` rule: the streaming/fused entries in
+# core/suco.py declare their O(m*(block_n + pool)) byte budgets, and this
+# test exercises the rule itself (the full registry gate is
+# tests/test_analysis.py / `python -m repro.analysis.lint`).
 
 
 def test_streaming_never_materialises_m_by_n():
-    """The acceptance bound: every live intermediate in the streaming query
-    is O(m*(block_n + n_candidates)) (+ the O(Ns*n) index arrays and the
-    O(m*p*d) rerank gather) — in particular nothing of size m*n exists,
-    while the dense path provably allocates one."""
-    n, d, m, k, bn, beta = 20_000, 32, 32, 10, 2048, 0.02
-    ds = make_dataset("gaussian_mixture", n, d, m=m, k=k, seed=1)
-    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
-    cfg = SuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=2, seed=0)
-    idx = build_index(x, cfg)
-
-    stream_jaxpr = jax.make_jaxpr(
-        lambda xx, qq: suco_query_streaming(
-            xx, idx, qq, k=k, alpha=0.05, beta=beta, block_n=bn
-        )
-    )(x, q)
-    dense_jaxpr = jax.make_jaxpr(
-        lambda xx, qq: suco_query(xx, idx, qq, k=k, alpha=0.05, beta=beta, mode="dense")
-    )(x, q)
-
-    p = max(k, int(beta * n))
-    ns, cells = cfg.n_subspaces, cfg.n_cells
-    n_pad = -(-n // bn) * bn
-    allowed = max(
-        2 * m * (bn + p),  # score block + carried pool (+ concat inside merge)
-        ns * m * bn,  # per-chunk per-subspace collision gather
-        m * p * d,  # rerank candidate gather (dense path has it too)
-        ns * n_pad,  # the index's own cell-id array, reshaped into blocks
-        ns * m * cells,  # Dynamic-Activation ranks
+    """Migrated acceptance bound: the registered streaming/fused query
+    entries stay inside their declared bounded-intermediate budgets — in
+    particular below the (m, n) separation line — while the dense reference
+    provably crosses it."""
+    from repro.analysis.jaxpr_rules import (
+        peak_intermediate_bytes,
+        rule_bounded_intermediate,
     )
-    got = _max_intermediate_size(stream_jaxpr)
-    assert got <= allowed, f"streaming intermediate {got} > allowed {allowed}"
-    assert got < m * n, f"streaming materialised an (m, n)-sized array: {got}"
-    assert _max_intermediate_size(dense_jaxpr) >= m * n  # the bound is real
+    from repro.analysis.registry import collect_entries
+    from repro.core.suco import lint_dense_peak_bytes
+
+    entries = {e.name: e for e in collect_entries(modules=("repro.core.suco",))}
+    dense_line = lint_dense_peak_bytes()  # 4 * m * n at the lint shapes
+    dense_peak, _ = peak_intermediate_bytes(entries["suco.query_dense"].make())
+    assert dense_peak >= dense_line  # the dense path really materialises (m, n)
+
+    for name in ("suco.query_streaming", "suco.query_fused"):
+        entry = entries[name]
+        jaxpr = entry.make()
+        assert rule_bounded_intermediate(entry, jaxpr) == [], name
+        peak, where = peak_intermediate_bytes(jaxpr)
+        assert entry.budget_bytes < dense_line, name  # the budget is meaningful
+        assert peak < dense_line, f"{name} materialised (m, n): {where}"
 
 
 def test_streaming_parity_at_100k():

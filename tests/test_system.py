@@ -2,12 +2,10 @@
 index -> query -> recall; serve (prefill + continuous batching decode);
 sharding rules; dry-run machinery on a debug scale."""
 
-import dataclasses
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.core import SuCoConfig, build_index, suco_query
@@ -56,7 +54,7 @@ def test_input_specs_cover_all_cells():
             specs = input_specs(cfg, shape)
             leaves = jax.tree.leaves(specs)
             assert leaves, (arch, shape.name)
-            assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+            assert all(isinstance(leaf, jax.ShapeDtypeStruct) for leaf in leaves)
             if shape.kind == "decode":
                 assert "cache" in specs
 

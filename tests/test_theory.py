@@ -68,3 +68,60 @@ def test_subspace_statistics_and_suggestion():
     assert m > 0 and s > 0
     sugg = suggest_parameters(n=100_000, d=64, k=50, m=m, sigma=s)
     assert set(sugg) >= {"n_subspaces", "alpha", "beta", "prob"}
+
+
+# ------------------------- Theorem 2 edge cases ------------------------------
+
+
+def test_theorem2_k_equals_one():
+    """k=1 is the smallest admissible order statistic: the Blom plotting
+    position must stay inside (0, 1) (no _ndtri domain error) and the bound
+    must remain a strong, valid probability in this generous regime. (It is
+    NOT monotone in k — the Chebyshev slack depends on the order-statistic
+    variance, so we only pin the regime, not an ordering against k=50.)"""
+    p1 = theorem2_bound(n=100_000, k=1, n_subspaces=8, m=10.0, sigma=1.0, alpha=0.05)
+    assert 0.0 <= p1 <= 1.0
+    assert p1 >= 0.5  # same generous regime as test_theorem2_reaches_half
+
+
+def test_theorem2_single_subspace():
+    """Degenerate partition (n_subspaces=1, i.e. m_sub = d): the collision
+    radius collapses but the calculator must not divide by zero or leave
+    [0, 1]."""
+    p = theorem2_bound(n=10_000, k=10, n_subspaces=1, m=4.0, sigma=1.0, alpha=0.05)
+    assert 0.0 <= p <= 1.0
+    # fully degenerate: one subspace AND unit mean distance (sigma dominates)
+    p = theorem2_bound(n=10_000, k=10, n_subspaces=1, m=1.0, sigma=1.0, alpha=0.05)
+    assert 0.0 <= p <= 1.0
+
+
+def test_theorem2_alpha_monotone_and_alpha_equals_beta_regime():
+    """Shrinking alpha widens the collision radius, so the success bound is
+    monotone non-increasing in alpha — including the alpha == beta corner
+    used by the suggest_parameters defaults."""
+    common = dict(n=100_000, k=50, n_subspaces=8, m=10.0, sigma=1.0)
+    p_wide = theorem2_bound(alpha=0.02, **common)
+    p_eq = theorem2_bound(alpha=0.05, **common)  # alpha == beta default pair
+    p_narrow = theorem2_bound(alpha=0.2, **common)
+    assert p_wide >= p_eq >= p_narrow
+    assert 0.0 <= p_narrow and p_wide <= 1.0
+
+
+def test_theorem2_always_a_probability():
+    """Sweep the admissible corners: whatever the regime (vacuous radius,
+    huge k, tiny n), the output is clamped to [0, 1] and never NaN."""
+    for n in (100, 10_000, 1_000_000):
+        for k in (1, 10, n - 1):
+            for alpha in (0.001, 0.05, 0.5, 0.99):
+                p = theorem2_bound(
+                    n=n, k=k, n_subspaces=4, m=8.0, sigma=2.0, alpha=alpha
+                )
+                assert 0.0 <= p <= 1.0 and not math.isnan(p), (n, k, alpha)
+
+
+def test_theorem2_k_near_n_is_vacuous():
+    """Asking for essentially all of the dataset pushes the k-th order
+    statistic past any collision radius: the bound degrades to 0, it does
+    not go negative or raise."""
+    p = theorem2_bound(n=1000, k=999, n_subspaces=8, m=10.0, sigma=1.0, alpha=0.05)
+    assert p == 0.0

@@ -13,7 +13,6 @@ from repro.data.lm_data import LMDataConfig, SyntheticLM
 from repro.models import Model
 from repro.train import checkpoint as CKPT
 from repro.train.compression import (
-    ErrorFeedback,
     compressed_grad_allreduce,
     dequantize_int8,
     quantize_int8,
@@ -209,6 +208,10 @@ def test_step_timer_flags_stragglers():
 
     t = StepTimer(alpha=0.5, threshold=1.5)
     for _ in range(3):
-        t.start(); time.sleep(0.005); t.stop()
-    t.start(); time.sleep(0.05); dt = t.stop()
+        t.start()
+        time.sleep(0.005)
+        t.stop()
+    t.start()
+    time.sleep(0.05)
+    dt = t.stop()
     assert t.flagged == 1 and t.is_straggler(dt)
