@@ -15,8 +15,13 @@ the continuous micro-batching AnnServer) and writes ``BENCH_serve.json``
 per-mix speedup — zero-retrace-after-warmup asserted for both).  ``--suite serve_async`` is the pipelined-serving slice of the
 same collection: sync-vs-async replay per mix, the traffic-driven bucket
 autoscale consumption path, and the heterogeneous-k sharded pool — the
-zero-retrace invariant asserted on all three.  ``--toy`` is the CI smoke
-form for either: shrunk sizes, writes ``BENCH_serve.toy.json``.
+zero-retrace invariant asserted on all three.  ``--suite serve_chaos``
+runs the resilience smoke (``BENCH_serve_chaos.json``): a forced
+degrade/recover walk down the degradation ladder with
+``retraces_after_warmup == 0`` asserted, plus the flood-overload replay
+comparing admission control + degradation against an uncontrolled
+server.  ``--toy`` is the CI smoke form for any of these: shrunk sizes,
+writes the ``*.toy.json`` artifact.
 """
 
 from __future__ import annotations
@@ -43,6 +48,7 @@ SUITES = {
     "index_build": "benchmarks.index_build",
     "serve": "benchmarks.serve",
     "serve_async": "benchmarks.serve:run_async",
+    "serve_chaos": "benchmarks.serve_chaos",
 }
 
 

@@ -41,6 +41,19 @@ test suite enforces, so the artifact only tracks speed:
 ``retraces_after_warmup == 0`` is asserted for the sync, async and
 sharded-pool paths alike.
 
+The ``overload`` section (PR 7) floods the server on a virtual clock
+(:mod:`repro.serve.chaos`) at arrivals far above the service rate and
+compares the resilient configuration — bounded admission queue +
+:class:`~repro.serve.ann.OverloadController` stepping a
+:class:`~repro.serve.ann.DegradationLadder` — against the same server
+with no admission control.  Tracked per arm: shed rate, degraded-answer
+fraction, the minimum Theorem-2 ``quality_bound`` attached to any
+degraded answer, p99 latency and the deadline hit rate (over admitted
+deadlined requests).  The suite asserts the controlled arm keeps a
+strictly higher deadline hit rate and zero retraces across the forced
+degrade/recover excursion; the replay is wall-clock-free, so the section
+is deterministic in (trace seed, chaos seed).
+
 ``--toy`` (CI smoke) shrinks the dataset/mixes and writes
 ``BENCH_serve.toy.json`` so the tracked artifact is never clobbered by a
 smoke run.
@@ -70,7 +83,22 @@ from repro.core import (
     padding_waste,
 )
 from repro.data import GENERATORS
-from repro.serve.ann import AnnRequest, AnnServer, AsyncAnnServer, latency_summary
+from repro.serve.ann import (
+    AnnRequest,
+    AnnServer,
+    AsyncAnnServer,
+    DegradationLadder,
+    OverloadController,
+    latency_summary,
+)
+from repro.serve.chaos import (
+    ChaosConfig,
+    ChaosEngine,
+    VirtualClock,
+    flood_trace,
+    replay,
+    wrap_ladder,
+)
 
 OUT_PATH = Path("BENCH_serve.json")
 TOY_OUT_PATH = Path("BENCH_serve.toy.json")
@@ -84,10 +112,17 @@ MIXES = (
 )
 
 FULL = dict(n=48_000, d=32, sqrt_k=16, n_subspaces=8, kmeans_iters=3,
-            max_batch=16, mixes=MIXES)
+            max_batch=16, mixes=MIXES, overload_requests=192)
 TOY = dict(n=4_000, d=16, sqrt_k=8, n_subspaces=4, kmeans_iters=2,
            max_batch=8,
-           mixes=tuple(dict(m, bursts=4) for m in MIXES))
+           mixes=tuple(dict(m, bursts=4) for m in MIXES),
+           overload_requests=64)
+
+# Overload replay: virtual service time per dispatch vs the arrival spacing
+# fixes the flood intensity (arrivals ~100x faster than a max_batch=4 step
+# drains them); the deadline budget is 5 service times.
+OVERLOAD = dict(seed=5, trace_seed=6, service_s=0.02, interarrival_s=0.0002,
+                deadline_s=0.1, max_batch=4, max_queue=8)
 
 
 def _run_mix(engine: SuCoEngine, mix: dict, max_batch: int, rng) -> dict:
@@ -293,6 +328,70 @@ def _run_fused(engine: SuCoEngine, scale: dict, mixes: list[dict], all_ks) -> li
     return recs
 
 
+def _run_overload(engine: SuCoEngine, scale: dict) -> dict:
+    """Flood the server on a virtual clock, with and without admission
+    control + the degradation ladder, and record what each arm paid.
+
+    Both arms replay the SAME seeded arrival trace through the SAME chaos
+    service-time schedule, so the comparison isolates the control policy.
+    """
+    ov = OVERLOAD
+    n_req = int(scale["overload_requests"])
+    queries = np.asarray(engine.x)[:512]
+
+    def _arm(controlled: bool) -> dict:
+        clock = VirtualClock()
+        cfg = ChaosConfig(seed=ov["seed"], service_s=ov["service_s"])
+        if controlled:
+            ladder = DegradationLadder(engine, levels=2)
+            ladder.warmup(batch_sizes=range(1, ov["max_batch"] + 1), ks=(10,))
+            wrap_ladder(ladder, cfg, clock)
+            server = AnnServer(
+                ladder.engines[0], max_batch=ov["max_batch"], clock=clock,
+                sleep=clock.advance, max_queue=ov["max_queue"], ladder=ladder,
+                controller=OverloadController(high_depth=4, low_depth=1),
+            )
+        else:
+            server = AnnServer(
+                ChaosEngine(engine, cfg, clock), max_batch=ov["max_batch"],
+                clock=clock, sleep=clock.advance,
+            )
+        trace = flood_trace(
+            n_req, queries.shape[1], interarrival_s=ov["interarrival_s"],
+            deadline_s=ov["deadline_s"], seed=ov["trace_seed"], queries=queries,
+        )
+        rep = replay(server, trace, clock)
+        s = rep.summary
+        return dict(
+            n_requests=n_req,
+            n_shed=s["n_shed"],
+            shed_rate=s["n_shed"] / n_req,
+            n_expired=s["n_expired"],
+            degraded_fraction=s["degraded_fraction"],
+            max_level=rep.max_level,
+            quality_bound_min=s["quality_bound_min"],
+            deadline_hit_rate=s["deadline_hit_rate"],
+            p50_ms=s["p50_ms"],
+            p99_ms=s["p99_ms"],
+            retraces_after_warmup=rep.retraces,
+        )
+
+    with_ctrl, without = _arm(True), _arm(False)
+    assert with_ctrl["retraces_after_warmup"] == 0, (
+        "overload replay retraced: degradation must reuse pre-warmed "
+        "executables"
+    )
+    assert with_ctrl["deadline_hit_rate"] > without["deadline_hit_rate"], (
+        "admission control lost the flood comparison: "
+        f"{with_ctrl['deadline_hit_rate']} <= {without['deadline_hit_rate']}"
+    )
+    return dict(
+        chaos=dict(ov),
+        with_admission_control=with_ctrl,
+        without_admission_control=without,
+    )
+
+
 def collect(*, toy: bool = False, out_path: Path | None = None) -> dict:
     scale = TOY if toy else FULL
     if out_path is None:
@@ -332,6 +431,7 @@ def collect(*, toy: bool = False, out_path: Path | None = None) -> dict:
     serve_async = _run_serve_async(engine, scale, toy=toy)
     autoscale = _run_autoscale(engine, scale, all_ks)
     sharded_pool = _run_sharded_pool(engine, scale, all_ks)
+    overload = _run_overload(engine, scale)
     payload = dict(
         meta=dict(
             schema="suco-serve-v1",
@@ -357,6 +457,7 @@ def collect(*, toy: bool = False, out_path: Path | None = None) -> dict:
         serve_async=serve_async,
         autoscale=autoscale,
         sharded_pool=sharded_pool,
+        overload=overload,
     )
     out_path.write_text(json.dumps(payload, indent=2) + "\n")
     return payload
@@ -393,6 +494,20 @@ def _async_rows(payload: dict) -> list[Row]:
     return rows
 
 
+def _overload_rows(payload: dict) -> list[Row]:
+    rows: list[Row] = []
+    for arm in ("with_admission_control", "without_admission_control"):
+        o = payload["overload"][arm]
+        rows.append((
+            f"serve_overload/{arm}",
+            o["p99_ms"] * 1e3,  # virtual-clock p99, reported in us like the rest
+            f"hit_rate={o['deadline_hit_rate']:.3f};shed_rate={o['shed_rate']:.3f};"
+            f"degraded={o['degraded_fraction']:.3f};qbound_min={o['quality_bound_min']:.3f};"
+            f"retraces={o['retraces_after_warmup']}",
+        ))
+    return rows
+
+
 def run(*, toy: bool = False) -> list[Row]:
     payload = collect(toy=toy)
     rows: list[Row] = []
@@ -421,7 +536,7 @@ def run(*, toy: bool = False) -> list[Row]:
         meta["warmup_s"] * 1e6,
         f"executables={meta['executables']};mode={meta['engine']['mode']}",
     ))
-    return rows + _async_rows(payload)
+    return rows + _async_rows(payload) + _overload_rows(payload)
 
 
 def run_async(*, toy: bool = False) -> list[Row]:

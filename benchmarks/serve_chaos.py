@@ -1,0 +1,158 @@
+"""Chaos smoke suite: the resilient serving stack under deterministic
+fault injection.
+
+Run via ``python -m benchmarks.run --suite serve_chaos --toy`` — the CI
+lane that keeps the PR-7 resilience surface honest without the full
+``serve`` collection.  Two sections, written to
+``BENCH_serve_chaos.json`` (``.toy.json`` under ``--toy``):
+
+* ``degrade_recover`` — a forced walk down and back up the
+  :class:`~repro.serve.ann.DegradationLadder` (levels 0 -> 1 -> 2 -> 1
+  -> 0), a burst of real queries served at every stop.  Asserts
+  ``retraces_after_warmup == 0`` across the whole excursion — degraded
+  levels must hit their pre-warmed executables, never compile on the
+  hot path — and records the monotone per-level Theorem-2
+  ``quality_bound`` each answer carried.
+* ``overload`` — the same flood replay the ``serve`` suite tracks
+  (:func:`benchmarks.serve._run_overload`): bounded admission + overload
+  controller vs an uncontrolled server on one seeded arrival trace and
+  chaos schedule.  Asserts the controlled arm wins on deadline hit rate
+  with zero retraces.
+
+Everything time-like in the ``overload`` section runs on a
+:class:`~repro.serve.chaos.VirtualClock`, so its numbers are
+deterministic in the seeds; the ``degrade_recover`` burst latencies are
+real wall time on the host.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+
+from benchmarks.common import Row
+from benchmarks.serve import FULL, TOY, _run_overload
+from repro.core import EnginePolicy, SuCoConfig, SuCoEngine
+from repro.data import GENERATORS
+from repro.serve.ann import AnnRequest, AnnServer, DegradationLadder
+
+OUT_PATH = Path("BENCH_serve_chaos.json")
+TOY_OUT_PATH = Path("BENCH_serve_chaos.toy.json")
+
+# The forced excursion: serve a burst at each level, then recover.
+LEVEL_WALK = (0, 1, 2, 1, 0)
+
+
+def _run_degrade_recover(engine: SuCoEngine, scale: dict) -> dict:
+    ladder = DegradationLadder(engine, levels=2)
+    t0 = time.perf_counter()
+    warm = ladder.warmup(
+        batch_sizes=range(1, scale["max_batch"] + 1), ks=(10,)
+    )
+    warmup_s = time.perf_counter() - t0
+    server = AnnServer(engine, max_batch=scale["max_batch"], ladder=ladder)
+    exe0 = server.executables
+    x = np.asarray(engine.x)
+    rng = np.random.default_rng(0)
+    rid = 0
+    phases = []
+    for level in LEVEL_WALK:
+        server.level = level  # no controller installed: the level is pinned
+        n_before = len(server.completed)
+        for _ in range(scale["max_batch"]):
+            q = x[rng.integers(0, x.shape[0])] + rng.normal(
+                scale=0.01, size=x.shape[1]
+            ).astype(np.float32)
+            server.submit(AnnRequest(rid, q, k=10))
+            rid += 1
+        t0 = time.perf_counter()
+        done = server.run_until_drained()[n_before:]
+        burst_s = time.perf_counter() - t0
+        assert done and all(r.error is None for r in done), "burst failed"
+        phases.append(dict(
+            level=level,
+            n_requests=len(done),
+            n_degraded=sum(1 for r in done if r.degrade_level > 0),
+            quality_bound=min(r.quality_bound for r in done),
+            burst_s=round(burst_s, 4),
+        ))
+    retraces = server.executables - exe0
+    assert retraces == 0, (
+        f"degrade/recover cycle retraced {retraces}x after warmup — a "
+        "ladder level compiled on the hot path"
+    )
+    # Symmetric walk => symmetric bounds, non-increasing toward the deepest
+    # level (the ladder monotonises them; recovery restores the base bound).
+    bounds = [p["quality_bound"] for p in phases]
+    assert bounds == [bounds[0], bounds[1], bounds[2], bounds[1], bounds[0]], (
+        f"recovery did not restore per-level bounds: {bounds}"
+    )
+    assert bounds[0] >= bounds[1] >= bounds[2], (
+        f"bounds not monotone down the ladder: {bounds}"
+    )
+    return dict(
+        level_walk=list(LEVEL_WALK),
+        warm_compiles=warm,
+        warmup_s=round(warmup_s, 3),
+        executables=server.executables,
+        retraces_after_warmup=retraces,
+        phases=phases,
+    )
+
+
+def collect(*, toy: bool = False, out_path: Path | None = None) -> dict:
+    scale = TOY if toy else FULL
+    if out_path is None:
+        out_path = TOY_OUT_PATH if toy else OUT_PATH
+    x = np.asarray(
+        GENERATORS["gaussian_mixture"](scale["n"], scale["d"], 0)
+    ).astype(np.float32)
+    config = SuCoConfig(
+        n_subspaces=scale["n_subspaces"], sqrt_k=scale["sqrt_k"],
+        kmeans_iters=scale["kmeans_iters"], seed=0,
+    )
+    t0 = time.perf_counter()
+    engine = SuCoEngine.build(
+        x, config, policy=EnginePolicy(alpha=0.05, beta=0.01, mode="streaming")
+    )
+    build_s = time.perf_counter() - t0
+    engine.warmup(batch_sizes=range(1, scale["max_batch"] + 1), ks=(10,))
+    payload = dict(
+        meta=dict(
+            schema="suco-serve-chaos-v1",
+            backend=jax.default_backend(),
+            toy=toy,
+            n=scale["n"],
+            d=scale["d"],
+            build_s=round(build_s, 3),
+        ),
+        degrade_recover=_run_degrade_recover(engine, scale),
+        overload=_run_overload(engine, scale),
+    )
+    out_path.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def run(*, toy: bool = False) -> list[Row]:
+    from benchmarks.serve import _overload_rows
+
+    payload = collect(toy=toy)
+    dr = payload["degrade_recover"]
+    rows: list[Row] = [(
+        "serve_chaos/degrade_recover",
+        dr["warmup_s"] * 1e6,
+        "levels=" + "/".join(map(str, dr["level_walk"])) + ";"
+        + "qbounds=" + "/".join(
+            f"{p['quality_bound']:.3f}" for p in dr["phases"]
+        ) + f";retraces={dr['retraces_after_warmup']}",
+    )]
+    return rows + _overload_rows(payload)
+
+
+if __name__ == "__main__":
+    for r in run(toy=True):
+        print(",".join(map(str, r)))

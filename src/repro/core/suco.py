@@ -99,6 +99,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import zipfile
 from typing import Iterable, Mapping, NamedTuple, Sequence
 
 import jax
@@ -132,6 +133,7 @@ __all__ = [
     "suco_query_fused",
     "STREAMING_MIN_N",
     "INDEX_ARTIFACT_VERSION",
+    "ArtifactError",
     "load_index_artifact",
     "EnginePolicy",
     "EngineStats",
@@ -153,6 +155,34 @@ _BUILD_MODES = ("auto", "dense", "chunked", "minibatch")
 # version-stamped so a serving process refuses artifacts it cannot trust.
 _ARTIFACT_MAGIC = "suco-index"
 INDEX_ARTIFACT_VERSION = 1
+
+# Keys every readable artifact must carry (the optional config_* block is
+# allowed to be absent; these are not).
+_ARTIFACT_REQUIRED_KEYS = (
+    "artifact",
+    "version",
+    "centroids1",
+    "centroids2",
+    "cell_ids",
+    "cell_counts",
+    "sqrt_k",
+    "spec_d",
+    "spec_n_subspaces",
+    "spec_perm",
+    "spec_bounds",
+)
+
+
+class ArtifactError(ValueError):
+    """A ``SuCoIndex.save`` artifact could not be loaded.
+
+    Raised with the offending path and what exactly failed — a foreign
+    file, a version mismatch (found vs expected), missing keys, or a
+    truncated/corrupt payload — instead of leaking a bare ``KeyError`` or
+    ``zipfile.BadZipFile`` into a serving process.  Subclasses
+    ``ValueError`` so existing ``pytest.raises(ValueError)`` gates and
+    caller-side handling keep working.
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -333,44 +363,72 @@ def build_index(x: jax.Array, config: SuCoConfig, *, spec: sub.SubspaceSpec | No
 def load_index_artifact(path) -> tuple[SuCoIndex, SuCoConfig | None]:
     """Load a ``SuCoIndex.save`` artifact -> ``(index, build config | None)``.
 
-    Validates the artifact tag and version before touching any payload;
-    an unknown version (or a foreign npz) raises ``ValueError`` instead of
-    silently deserialising garbage into a serving process.
+    Validates the artifact tag, version, and key inventory before touching
+    any payload; an unknown version, a foreign npz, missing keys, or a
+    truncated/corrupt file raises :class:`ArtifactError` (a ``ValueError``)
+    naming the path and the found-vs-expected state instead of leaking a
+    bare ``KeyError``/``BadZipFile`` into a serving process.
     """
-    with np.load(path, allow_pickle=False) as z:
+    try:
+        z = np.load(path, allow_pickle=False)
+    except (ValueError, OSError, EOFError, zipfile.BadZipFile) as e:
+        # A file truncated before the zip central directory fails here
+        # (BadZipFile) rather than at member read time.
+        raise ArtifactError(
+            f"{path!s}: not a readable npz ({type(e).__name__}: {e})"
+        ) from e
+    with z:
         names = set(z.files)
         if "artifact" not in names or str(z["artifact"][()]) != _ARTIFACT_MAGIC:
-            raise ValueError(f"{path!s} is not a {_ARTIFACT_MAGIC} artifact")
-        version = int(z["version"][()])
-        if version != INDEX_ARTIFACT_VERSION:
-            raise ValueError(
-                f"unsupported {_ARTIFACT_MAGIC} artifact version {version} "
-                f"(this build reads version {INDEX_ARTIFACT_VERSION})"
+            raise ArtifactError(f"{path!s} is not a {_ARTIFACT_MAGIC} artifact")
+        missing = [k for k in _ARTIFACT_REQUIRED_KEYS if k not in names]
+        if missing:
+            raise ArtifactError(
+                f"{path!s}: {_ARTIFACT_MAGIC} artifact is missing keys "
+                f"{missing} (found {sorted(names)}) — truncated or "
+                "incompletely written file"
             )
-        spec = sub.SubspaceSpec(
-            d=int(z["spec_d"][()]),
-            n_subspaces=int(z["spec_n_subspaces"][()]),
-            perm=tuple(int(p) for p in z["spec_perm"]),
-            bounds=tuple(int(b) for b in z["spec_bounds"]),
-        )
-        index = SuCoIndex(
-            centroids1=jnp.asarray(z["centroids1"]),
-            centroids2=jnp.asarray(z["centroids2"]),
-            cell_ids=jnp.asarray(z["cell_ids"]),
-            cell_counts=jnp.asarray(z["cell_counts"]),
-            spec=spec,
-            sqrt_k=int(z["sqrt_k"][()]),
-        )
-        config = None
-        if "config_n_subspaces" in names:
-            config = SuCoConfig(
-                n_subspaces=int(z["config_n_subspaces"][()]),
-                sqrt_k=int(z["config_sqrt_k"][()]),
-                kmeans_iters=int(z["config_kmeans_iters"][()]),
-                seed=int(z["config_seed"][()]),
-                build_mode=str(z["config_build_mode"][()]),
-                block_n=int(z["config_block_n"][()]),
+        try:
+            version = int(z["version"][()])
+            if version != INDEX_ARTIFACT_VERSION:
+                raise ArtifactError(
+                    f"{path!s}: unsupported {_ARTIFACT_MAGIC} artifact version "
+                    f"{version} (this build reads version "
+                    f"{INDEX_ARTIFACT_VERSION})"
+                )
+            spec = sub.SubspaceSpec(
+                d=int(z["spec_d"][()]),
+                n_subspaces=int(z["spec_n_subspaces"][()]),
+                perm=tuple(int(p) for p in z["spec_perm"]),
+                bounds=tuple(int(b) for b in z["spec_bounds"]),
             )
+            index = SuCoIndex(
+                centroids1=jnp.asarray(z["centroids1"]),
+                centroids2=jnp.asarray(z["centroids2"]),
+                cell_ids=jnp.asarray(z["cell_ids"]),
+                cell_counts=jnp.asarray(z["cell_counts"]),
+                spec=spec,
+                sqrt_k=int(z["sqrt_k"][()]),
+            )
+            config = None
+            if "config_n_subspaces" in names:
+                config = SuCoConfig(
+                    n_subspaces=int(z["config_n_subspaces"][()]),
+                    sqrt_k=int(z["config_sqrt_k"][()]),
+                    kmeans_iters=int(z["config_kmeans_iters"][()]),
+                    seed=int(z["config_seed"][()]),
+                    build_mode=str(z["config_build_mode"][()]),
+                    block_n=int(z["config_block_n"][()]),
+                )
+        except ArtifactError:
+            raise
+        except Exception as e:
+            # A member listed in the directory but truncated mid-payload
+            # (zlib error, zipfile CRC failure, short read) surfaces here.
+            raise ArtifactError(
+                f"{path!s}: {_ARTIFACT_MAGIC} artifact payload is corrupt "
+                f"({type(e).__name__}: {e}) — truncated file?"
+            ) from e
     return index, config
 
 
@@ -860,6 +918,8 @@ def batch_bucket(m: int, buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS) -> int:
     the local and sharded engines — one bucketing policy across the stack."""
     if m < 1:
         raise ValueError(f"batch size must be >= 1, got {m}")
+    if not buckets:
+        raise ValueError("buckets must be non-empty")
     for b in sorted(buckets):
         if m <= b:
             return int(b)
@@ -908,7 +968,17 @@ def autoscale_buckets(
         raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
     hist = {int(m): int(c) for m, c in histogram.items() if int(c) > 0}
     if not hist:
-        return tuple(sorted(set(fallback)))
+        # An all-zero histogram (every count 0) degenerates to the empty
+        # one: nothing observed, so the fallback buckets stand.  A server
+        # configured with no fallback would otherwise propose an empty
+        # bucket set and crash batch_bucket much later — fail here instead.
+        fb = tuple(sorted(set(int(b) for b in fallback)))
+        if not fb:
+            raise ValueError(
+                "autoscale_buckets: empty traffic histogram and empty "
+                "fallback bucket set — configure at least one bucket"
+            )
+        return fb
     if min(hist) < 1:
         raise ValueError(f"batch sizes must be >= 1, got {sorted(hist)[0]}")
     sizes = sorted(hist)
@@ -1042,6 +1112,43 @@ class EnginePolicy:
         )
         new.traffic.update(self.traffic)
         return new
+
+    def degraded(self, level: int) -> "EnginePolicy":
+        """The reduced-budget policy at degradation-ladder step ``level``.
+
+        Level 0 is this policy unchanged.  Each further level sheds work
+        along the knobs the paper exposes (Section 5.3.3 tuning ranges):
+
+        * ``beta`` halves per level — the candidate pool is the dominant
+          rerank cost, and shrinking it is what honestly lowers the
+          Theorem-2 floor (:func:`repro.core.theory.degraded_budget_bound`
+          charges the pool-spill term ``alpha**Ns / beta``).
+        * ``alpha`` shrinks mildly (x0.8 per level) — fewer activated
+          cells per subspace, cheaper SC-scoring.
+        * pinned ``tiles`` shrink ``survivor_cap`` with the pool (halved
+          per level, floored at 64 and kept a 64-multiple per the
+          tile-shape lint rule); autotuned tiles (``tiles=None``) need no
+          edit — the autotuner re-derives the cap from the reduced pool.
+
+        Deterministic in ``level`` and structural only (fresh traffic
+        Counter via ``dataclasses.replace``), so a ladder of pre-warmed
+        engines can be built once at server start and swapping levels
+        never retraces.
+        """
+        if level < 0:
+            raise ValueError(f"degradation level must be >= 0, got {level}")
+        if level == 0:
+            return self
+        tiles = self.tiles
+        if tiles is not None:
+            cap = max(64, (tiles.survivor_cap >> level) // 64 * 64)
+            tiles = dataclasses.replace(tiles, survivor_cap=cap)
+        return dataclasses.replace(
+            self,
+            alpha=max(self.alpha * 0.8**level, 1e-6),
+            beta=self.beta * 0.5**level,
+            tiles=tiles,
+        )
 
 
 class EngineStats(NamedTuple):
@@ -1387,6 +1494,26 @@ def jaxlint_entries():
             engine.x, engine.index, qb
         )
 
+    def _degraded_tiles(m: int) -> TileConfig:
+        p = EnginePolicy(mode="fused").degraded(1)
+        pool = max(k, int(p.beta * s["n"]))
+        return autotune_tiles(
+            s["n"], s["d"], m, pool,
+            n_subspaces=s["n_subspaces"], n_cells=s["sqrt_k"] ** 2,
+        )
+
+    def make_engine_degraded_bucket():
+        # The degradation ladder's level-1 engine: same entry point, reduced
+        # (alpha, beta) budget.  Proving the same scan/memory invariants
+        # here keeps the ladder inside docs/invariants.md — degrading under
+        # load must never regress the streaming guarantees.
+        x, q, index, _ = _lint_problem()
+        engine = SuCoEngine(x, index, EnginePolicy(mode="fused").degraded(1))
+        qb = q[: batch_bucket(5)]
+        return jax.make_jaxpr(functools.partial(engine._raw_query, k=k))(
+            engine.x, engine.index, qb
+        )
+
     def make_build_chunked():
         b = LINT_BUILD_SHAPES
         rng = np.random.default_rng(1)
@@ -1432,6 +1559,21 @@ def jaxlint_entries():
                 _fused_tiles(batch_bucket(5)).block_n
             ),
             note="one SuCoEngine per-(bucket, k) executable, fused mode",
+        ),
+        JaxprEntry(
+            name="suco.engine_degraded_bucket",
+            make=make_engine_degraded_bucket,
+            rules=scan_rules,
+            # The full-budget bound also covers the reduced pool: shrinking
+            # beta only shrinks the carried pool and rerank gather.
+            budget_bytes=lint_query_budget_bytes(
+                _degraded_tiles(batch_bucket(5)).block_n
+            ),
+            note=(
+                "degradation-ladder level-1 executable "
+                "(EnginePolicy.degraded): reduced (alpha, beta) budget, "
+                "same fused path and invariants"
+            ),
         ),
         JaxprEntry(
             name="suco.build_chunked",

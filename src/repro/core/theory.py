@@ -16,8 +16,10 @@ import numpy as np
 __all__ = [
     "GuaranteeReport",
     "subspace_statistics",
+    "estimate_subspace_statistics",
     "theorem1_bound",
     "theorem2_bound",
+    "degraded_budget_bound",
     "suggest_parameters",
 ]
 
@@ -77,6 +79,31 @@ def subspace_statistics(x: np.ndarray, q: np.ndarray, n_subspaces: int) -> tuple
     return float(zs.mean()), float(zs.std())
 
 
+def estimate_subspace_statistics(
+    x: np.ndarray,
+    n_subspaces: int,
+    *,
+    n_queries: int = 8,
+    n_points: int = 2048,
+    seed: int = 0,
+) -> tuple[float, float]:
+    """Deterministic sampled ``(m, sigma)`` estimate for a serving dataset.
+
+    :func:`subspace_statistics` needs a concrete query; a serving process
+    has none at policy time, so this draws ``n_queries`` probe queries from
+    the data itself, measures each against an ``n_points`` sample, and
+    averages — the same estimator the recall test harness applies per
+    query, collapsed to one number pair.  Deterministic in ``seed`` so a
+    degradation ladder's recall floors are stable across restarts.
+    """
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    xs = x[rng.choice(n, size=min(n_points, n), replace=False)]
+    qs = x[rng.choice(n, size=min(n_queries, n), replace=False)]
+    stats = [subspace_statistics(xs, q, n_subspaces) for q in qs]
+    return float(np.mean([s[0] for s in stats])), float(np.mean([s[1] for s in stats]))
+
+
 def theorem1_bound(m: float, sigma: float, n_subspaces: int, alpha: float) -> GuaranteeReport:
     """Theorem 1: SC-score ordering implies distance ordering w.p. >= 1/2-1/e^2.
 
@@ -124,6 +151,46 @@ def theorem2_bound(
         # is vacuous; the proof's recipe asks for a larger alpha/beta.
         return 0.0
     return max(0.0, 1.0 - v_kn / t**2)
+
+
+def degraded_budget_bound(
+    n: int,
+    k: int,
+    n_subspaces: int,
+    m: float,
+    sigma: float,
+    alpha: float,
+    beta: float,
+) -> float:
+    """Theorem-2 success bound recomputed for a reduced ``(alpha, beta)``
+    serving budget — the quantified floor a degraded-mode answer carries.
+
+    :func:`theorem2_bound` assumes the candidate set retains every
+    full-collision point; a load-shedding policy truncates the candidate
+    pool at ``beta * n`` entries, which breaks that premise in two ways:
+
+    * **infeasible pool** — ``int(beta * n) < k``: the pool cannot even
+      hold a top-k answer, so the guarantee is vacuous (0.0).  A
+      degradation ladder must not step past this point if it wants to
+      keep returning quantified answers.
+    * **pool spill** — the true neighbour can be evicted by spurious
+      full-collision points.  Per Definition 1 each subspace's activated
+      prefix covers ``alpha * n`` points, so under the proof's
+      independence step a random point fully collides w.p.
+      ``alpha ** Ns`` and the expected impostor count is
+      ``n * alpha**Ns``; Markov bounds the spill probability by
+      ``alpha**Ns / beta``.  The term is monotone in the budget: shrinking
+      ``beta`` at fixed ``alpha`` strictly lowers the floor.
+
+    Returns ``max(0, theorem2 - spill)`` clamped to [0, 1].
+    """
+    if beta <= 0.0:
+        return 0.0
+    if int(beta * n) < k:
+        return 0.0
+    base = theorem2_bound(n, k, n_subspaces, m, sigma, alpha)
+    spill = min(1.0, alpha**n_subspaces / beta)
+    return max(0.0, min(1.0, base - spill))
 
 
 def suggest_parameters(

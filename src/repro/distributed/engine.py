@@ -644,6 +644,8 @@ class ShardedEnginePool:
         self.index = shard_index(mesh, cfg, index)
         self.batch_buckets = tuple(batch_buckets)
         self._engines: dict[int, ShardedSuCoEngine] = {}
+        self._dead: set[int] = set()  # k-classes whose engine raised
+        self._rebound: dict[int, str] = {}  # dead k -> failure reason
         for k in ks:
             self.engine_for(k)
 
@@ -692,6 +694,12 @@ class ShardedEnginePool:
         """The ``k`` values with live engines."""
         return tuple(sorted(self._engines))
 
+    @property
+    def dead_ks(self) -> tuple[int, ...]:
+        """k-classes marked dead by :meth:`query_resilient` (their traffic
+        is rebound to healthy engines until :meth:`revive`)."""
+        return tuple(sorted(self._dead))
+
     def engine_for(self, k: int) -> ShardedSuCoEngine:
         """The pool member serving ``k`` (created on first use: a cold
         engine compiles on its first query, so pre-declare the traffic's
@@ -716,6 +724,70 @@ class ShardedEnginePool:
         """``q: (m, d), k -> (ids (m, k), dists (m, k))`` global top-k via
         the per-``k`` engine's bucketed executable."""
         return self.engine_for(k).query(q)
+
+    # ---- fault tolerance -------------------------------------------------
+
+    def _rebind_target(self, k: int) -> int:
+        """The healthy k-class serving a dead ``k``: the smallest live
+        ``k' >= k`` (its top-k' answer truncates to an *exact* top-k),
+        else the largest live ``k' < k`` (a shorter answer, still
+        quantified — the caller sees ``degraded=True`` either way)."""
+        live = [kk for kk in sorted(self._engines) if kk not in self._dead]
+        if not live:
+            raise RuntimeError(
+                f"ShardedEnginePool: no healthy engines left to rebind k={k} "
+                f"(dead: {sorted(self._dead)})"
+            )
+        for kk in live:
+            if kk >= k:
+                return kk
+        return live[-1]
+
+    def revive(self, k: int) -> None:
+        """Return a dead k-class to service (the recover half of a chaos
+        degrade/recover cycle).  A fresh engine replaces the dead one so a
+        poisoned ``query`` binding does not linger."""
+        if k in self._dead:
+            self._dead.discard(k)
+            self._rebound.pop(k, None)
+            self._engines.pop(k, None)
+            self.engine_for(k)
+
+    def query_resilient(
+        self, q: jax.Array, k: int
+    ) -> tuple[jax.Array, jax.Array, dict]:
+        """:meth:`query` that survives a dead/raising per-``k`` engine.
+
+        A non-``ValueError`` failure (a real engine does not raise on a
+        well-formed query — this is a dying shard binding) marks the
+        k-class dead and rebinds the request to a healthy engine
+        (:meth:`_rebind_target`); the answer is truncated to ``k`` when
+        the stand-in serves a larger k' (exact), or returned shorter when
+        only a smaller k' survives.  Returns ``(ids, dists, info)`` with
+        ``info = {"degraded": bool, "served_by": k', "reason": str}`` so
+        callers can mark degraded answers instead of silently passing
+        them off as primary ones.  ``ValueError`` (malformed input) is
+        re-raised unchanged — a bad query must not kill a healthy engine.
+        """
+        if k not in self._dead:
+            try:
+                ids, dists = self.engine_for(k).query(q)
+                return ids, dists, {"degraded": False, "served_by": k, "reason": ""}
+            except ValueError:
+                raise
+            except Exception as e:
+                self._dead.add(k)
+                self._rebound[k] = f"{type(e).__name__}: {e}"
+        k2 = self._rebind_target(k)
+        ids, dists = self.engine_for(k2).query(q)
+        if k2 > k:
+            ids, dists = ids[..., :k], dists[..., :k]
+        return ids, dists, {
+            "degraded": True,
+            "served_by": k2,
+            "reason": f"k={k} engine dead ({self._rebound.get(k, 'unknown')}), "
+                      f"rebound to k={k2}",
+        }
 
     def warmup(
         self,

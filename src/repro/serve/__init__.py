@@ -13,7 +13,26 @@ Both are re-exported here as the public serving API.
 from repro.launch.serve import Request, Server
 from repro.models.decode import decode_step, init_cache
 from repro.models.prefill import prefill
-from repro.serve.ann import AnnRequest, AnnServer, StepRecord, latency_summary
+from repro.serve.ann import (
+    AnnRequest,
+    AnnServer,
+    AsyncAnnServer,
+    DegradationLadder,
+    OverloadController,
+    StepRecord,
+    latency_summary,
+)
+from repro.serve.chaos import (
+    ChaosConfig,
+    ChaosEngine,
+    ChaosError,
+    ReplayReport,
+    VirtualClock,
+    flood_trace,
+    kill_pool_engine,
+    replay,
+    wrap_ladder,
+)
 
 __all__ = [
     "Request",
@@ -23,6 +42,18 @@ __all__ = [
     "prefill",
     "AnnRequest",
     "AnnServer",
+    "AsyncAnnServer",
+    "DegradationLadder",
+    "OverloadController",
     "StepRecord",
     "latency_summary",
+    "ChaosConfig",
+    "ChaosEngine",
+    "ChaosError",
+    "ReplayReport",
+    "VirtualClock",
+    "flood_trace",
+    "kill_pool_engine",
+    "replay",
+    "wrap_ladder",
 ]

@@ -1,0 +1,297 @@
+"""Deterministic fault injection for the ANN serving stack.
+
+Chaos testing of :mod:`repro.serve.ann` without wall clocks or real
+failures: a :class:`VirtualClock` replaces ``time.perf_counter`` (servers
+take ``clock``/``sleep`` callables for exactly this), and a
+:class:`ChaosEngine` wraps a real :class:`~repro.core.suco.SuCoEngine`,
+drawing every injected fault — engine exceptions, latency spikes — from
+one seeded ``numpy`` Generator whose consumption order is fixed by the
+replay's event order.  Replaying the same request trace with the same
+:class:`ChaosConfig` therefore reproduces the *identical* schedule:
+the same requests shed, expired, degraded, failed — byte-for-byte
+(:func:`replay` returns the outcome sets as frozensets so tests compare
+them directly).
+
+Injectors (all seeded, all off by default):
+
+* **engine exception** — ``p_engine_error`` chance a dispatch raises
+  :class:`ChaosError` (exercises retry-with-backoff + per-request
+  isolation);
+* **latency spike** — ``p_latency_spike`` chance a dispatch takes
+  ``latency_spike_s`` extra virtual seconds (exercises deadline expiry);
+* **malformed query** — :func:`flood_trace` poisons a fraction of
+  requests with NaN (exercises submit-time validation);
+* **queue flood** — :func:`flood_trace` draws arrivals faster than the
+  configured service time (exercises admission control + the
+  degradation ladder);
+* **shard death** — :func:`kill_pool_engine` makes one per-k engine of a
+  :class:`~repro.distributed.engine.ShardedEnginePool` raise on every
+  query (exercises k-class rebinding).
+
+Usage sketch (see ``tests/test_chaos.py`` / ``benchmarks/serve_chaos.py``)::
+
+    clock = VirtualClock()
+    chaos = ChaosEngine(engine, ChaosConfig(seed=0, p_engine_error=0.05),
+                        clock=clock)
+    server = AsyncAnnServer(chaos, clock=clock, sleep=clock.advance,
+                            max_queue=64, ladder=ladder,
+                            controller=OverloadController())
+    report = replay(server, flood_trace(...), clock)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.serve.ann import AnnRequest, AnnServer, latency_summary
+
+__all__ = [
+    "ChaosError",
+    "VirtualClock",
+    "ChaosConfig",
+    "ChaosEngine",
+    "wrap_ladder",
+    "ReplayReport",
+    "flood_trace",
+    "replay",
+    "kill_pool_engine",
+]
+
+
+class ChaosError(RuntimeError):
+    """The injected transient engine failure (never raised by real code)."""
+
+
+class VirtualClock:
+    """A deterministic clock: time moves only when ``advance`` is called.
+
+    Doubles as the server's ``clock`` (it is callable) and — via
+    ``advance`` — its ``sleep``, so retry backoff consumes virtual time
+    instead of stalling the test suite.
+    """
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"time cannot go backwards (dt={dt})")
+        self.t += float(dt)
+        return self.t
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded fault-injection plan for one replay."""
+
+    seed: int = 0
+    service_s: float = 0.001  # virtual execution time per dispatch
+    p_engine_error: float = 0.0  # chance a dispatch raises ChaosError
+    p_latency_spike: float = 0.0  # chance a dispatch stalls extra
+    latency_spike_s: float = 0.05  # the stall
+
+    def __post_init__(self):
+        for name in ("p_engine_error", "p_latency_spike"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+
+
+class ChaosEngine:
+    """A :class:`~repro.core.suco.SuCoEngine` proxy that injects faults.
+
+    Every ``query`` advances the virtual clock by ``service_s``, then
+    draws exactly two uniforms from the shared schedule — one for the
+    latency spike, one for the engine error — so the fault sequence is a
+    pure function of ``(seed, dispatch order)``; the replay's event loop
+    fixes the dispatch order, making whole replays reproducible.
+    Everything else (``policy``, ``compile_count``, ``index`` …)
+    delegates to the wrapped engine, so servers and ladders treat the
+    proxy as the real thing.
+    """
+
+    def __init__(
+        self,
+        engine,
+        config: ChaosConfig,
+        clock: VirtualClock,
+        *,
+        rng: np.random.Generator | None = None,
+    ):
+        self._engine = engine
+        self._config = config
+        self._clock = clock
+        # An injected rng lets several proxies (e.g. every level of a
+        # degradation ladder, via wrap_ladder) consume ONE fault schedule,
+        # keeping determinism a property of global dispatch order.
+        self._rng = np.random.default_rng(config.seed) if rng is None else rng
+        self.n_dispatches = 0
+        self.n_errors = 0
+        self.n_spikes = 0
+
+    def query(self, q, k: int):
+        c = self._config
+        self.n_dispatches += 1
+        # Fixed draw count per dispatch keeps the schedule aligned across
+        # replays even when an earlier injector fires.
+        u_spike, u_err = self._rng.random(2)
+        self._clock.advance(c.service_s)
+        if u_spike < c.p_latency_spike:
+            self.n_spikes += 1
+            self._clock.advance(c.latency_spike_s)
+        if u_err < c.p_engine_error:
+            self.n_errors += 1
+            raise ChaosError(
+                f"injected engine failure (dispatch #{self.n_dispatches})"
+            )
+        return self._engine.query(q, k=k)
+
+    def __getattr__(self, name):
+        return getattr(self._engine, name)
+
+
+def wrap_ladder(ladder, config: ChaosConfig, clock: VirtualClock):
+    """Wrap every engine of a :class:`~repro.serve.ann.DegradationLadder`
+    in :class:`ChaosEngine` proxies sharing ONE fault schedule.
+
+    A server with a ladder routes every batch through
+    ``ladder.engine_for(level)`` — wrapping only the base engine would
+    leave the degraded paths chaos-free.  The proxies share one seeded
+    Generator, so the fault sequence stays a pure function of the global
+    dispatch order regardless of which level serves each batch.  Returns
+    the ladder (mutated in place); pass ``ladder.engines[0]`` as the
+    server's engine so the level-0 path is the same proxy.
+    """
+    rng = np.random.default_rng(config.seed)
+    ladder.engines = [
+        ChaosEngine(e, config, clock, rng=rng) for e in ladder.engines
+    ]
+    return ladder
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayReport:
+    """Outcome of one chaos replay, keyed by request id.
+
+    The id sets are frozensets so determinism tests compare replays with
+    ``==``; ``summary`` is :func:`repro.serve.ann.latency_summary` over
+    every request of the trace and ``retraces`` is the executable-count
+    growth across the replay (0 = the zero-retrace invariant held under
+    chaos).
+    """
+
+    completed: frozenset[int]
+    shed: frozenset[int]
+    expired: frozenset[int]
+    failed: frozenset[int]
+    degraded: frozenset[int]
+    max_level: int
+    summary: dict
+    retraces: int
+
+    @property
+    def outcome_sets(self) -> tuple[frozenset[int], ...]:
+        """The determinism-test tuple: identical across equal replays."""
+        return (self.completed, self.shed, self.expired, self.failed, self.degraded)
+
+
+def flood_trace(
+    n_requests: int,
+    d: int,
+    *,
+    interarrival_s: float = 0.0002,
+    deadline_s: float | None = 0.05,
+    ks: Sequence[int] = (10,),
+    p_malformed: float = 0.0,
+    seed: int = 0,
+    queries: np.ndarray | None = None,
+) -> list[tuple[float, AnnRequest]]:
+    """A seeded ``(arrival_s, request)`` trace for :func:`replay`.
+
+    Arrivals are uniformly spaced at ``interarrival_s`` — set it below the
+    chaos ``service_s`` (times the batch fill) to flood the admission
+    queue.  A ``p_malformed`` fraction of requests is poisoned with NaN
+    in one coordinate, exercising submit-time validation inside otherwise
+    healthy traffic.  Queries are drawn from ``queries`` rows when given
+    (so answers are comparable to a clean run), else standard normal.
+    """
+    rng = np.random.default_rng(seed)
+    trace: list[tuple[float, AnnRequest]] = []
+    for i in range(n_requests):
+        if queries is not None:
+            row = queries[int(rng.integers(0, len(queries)))]
+            q = np.array(row, dtype=np.float32)  # jaxlint: sync-ok — host trace rows
+        else:
+            q = rng.standard_normal(d).astype(np.float32)
+        if p_malformed > 0.0 and rng.random() < p_malformed:
+            q[int(rng.integers(0, d))] = np.nan
+        k = int(ks[int(rng.integers(0, len(ks)))])
+        trace.append(
+            (i * interarrival_s, AnnRequest(i, q, k=k, deadline_s=deadline_s))
+        )
+    return trace
+
+
+def replay(
+    server: AnnServer,
+    trace: Sequence[tuple[float, AnnRequest]],
+    clock: VirtualClock,
+) -> ReplayReport:
+    """Drive ``server`` through an arrival trace on the virtual clock.
+
+    Event loop: admit every request whose arrival time has passed, then
+    run one server step (which advances the clock through the chaos
+    engine's service time); when the server is idle and the next arrival
+    is in the future, jump the clock to it.  The loop — and therefore the
+    fault schedule consumed from the chaos engine — is a deterministic
+    function of (trace, chaos seed, server configuration).
+    """
+    if any(t1 > t2 for (t1, _), (t2, _) in zip(trace, trace[1:])):
+        raise ValueError("trace must be sorted by arrival time")
+    exe_before = server.executables
+    i = 0
+    while True:
+        while i < len(trace) and trace[i][0] <= clock():
+            server.submit(trace[i][1])
+            i += 1
+        if server.queue:
+            server.step()
+        elif getattr(server, "inflight", 0):
+            server.flush()  # nothing left to dispatch right now: drain
+        elif i < len(trace):
+            clock.advance(trace[i][0] - clock())
+        else:
+            break
+    reqs = [r for _, r in trace]
+    done = [r for r in reqs if r.done]
+    return ReplayReport(
+        completed=frozenset(r.rid for r in done),
+        shed=frozenset(r.rid for r in reqs if r.shed),
+        expired=frozenset(r.rid for r in reqs if r.expired),
+        failed=frozenset(
+            r.rid for r in reqs if r.error is not None and not (r.shed or r.expired)
+        ),
+        degraded=frozenset(r.rid for r in done if r.degrade_level > 0),
+        max_level=max((r.degrade_level for r in done), default=0),
+        summary=latency_summary(reqs),
+        retraces=server.executables - exe_before,
+    )
+
+
+def kill_pool_engine(pool, k: int, reason: str = "injected shard death") -> None:
+    """Make ``pool``'s per-``k`` engine raise :class:`ChaosError` on every
+    query — the shard-death injector for
+    :class:`~repro.distributed.engine.ShardedEnginePool.query_resilient`,
+    which must rebind the dead k-class to a healthy engine."""
+    engine = pool.engine_for(k)
+
+    def _dead_query(q, k=k, **kw):
+        raise ChaosError(f"{reason} (k={k})")
+
+    engine.query = _dead_query

@@ -46,6 +46,7 @@ def test_registry_covers_the_serving_surface():
         "suco.query_fused",
         "suco.query_dense",
         "suco.engine_fused_bucket",
+        "suco.engine_degraded_bucket",
         "suco.build_chunked",
         "sc_linear.query",
         "sc_linear.merge_pool_scan",

@@ -151,6 +151,32 @@ _SCRIPT = textwrap.dedent(
         ])
         assert ov_k >= 0.9, f"pool k={k_r} disagrees with local engine: {ov_k}"
 
+    # Fault tolerance: a dead per-k engine rebinds its k-class to a healthy
+    # engine with a degraded-answer marker (truncating a larger-k answer is
+    # the exact top-k); ValueError passes through without killing anything;
+    # revive() restores primary service.
+    from repro.serve.chaos import kill_pool_engine
+    ids10 = np.asarray(pool.query(q, 10)[0])
+    _, _, info = pool.query_resilient(q, 5)
+    assert info == {"degraded": False, "served_by": 5, "reason": ""}
+    kill_pool_engine(pool, 5)
+    ids_r, dists_r, info = pool.query_resilient(q, 5)
+    assert info["degraded"] and info["served_by"] == 10, info
+    assert "k=5" in info["reason"] and "rebound" in info["reason"]
+    assert np.array_equal(np.asarray(ids_r), ids10[:, :5]), "rebind not exact"
+    assert pool.dead_ks == (5,)
+    try:
+        pool.query_resilient(q, ds.x.shape[0] + 1)
+        raise AssertionError("ValueError expected for malformed k")
+    except ValueError:
+        pass
+    assert pool.dead_ks == (5,), "malformed input must not kill an engine"
+    assert pool.compile_count == p_warm, "rebound serving retraced"
+    pool.revive(5)
+    assert pool.dead_ks == ()
+    _, _, info = pool.query_resilient(q, 5)
+    assert not info["degraded"], "revived k must serve primary again"
+
     print("DISTRIBUTED_OK", r, overlap, r2, overlap2)
     """
 )

@@ -91,6 +91,59 @@ def test_foreign_npz_rejected(tmp_path):
         load_index_artifact(path)
 
 
+def test_truncated_artifact_raises_clear_artifact_error(index, tmp_path):
+    """A bit-truncated artifact must raise ArtifactError naming the path —
+    never leak a bare KeyError/BadZipFile into a serving process.  Checked
+    at several cut points: before the zip directory, mid-payload, and a
+    structurally valid npz missing required keys."""
+    from repro.core.suco import ArtifactError
+
+    path = tmp_path / "trunc.npz"
+    index.save(path)
+    raw = path.read_bytes()
+    for frac in (0.25, 0.5, 0.9, 0.99):
+        path.write_bytes(raw[: int(len(raw) * frac)])
+        with pytest.raises(ArtifactError, match="trunc.npz") as ei:
+            load_index_artifact(path)
+        assert not isinstance(ei.value, KeyError)
+    # ArtifactError subclasses ValueError: existing callers keep working
+    path.write_bytes(raw[: len(raw) // 2])
+    with pytest.raises(ValueError):
+        SuCoIndex.load(path)
+
+
+def test_artifact_missing_keys_named_in_error(index, tmp_path):
+    from repro.core.suco import ArtifactError
+
+    path = tmp_path / "partial.npz"
+    index.save(path)
+    blob = dict(np.load(path))
+    for key in ("centroids1", "spec_perm", "sqrt_k"):
+        blob.pop(key)
+    with open(path, "wb") as f:
+        np.savez(f, **blob)
+    with pytest.raises(ArtifactError, match="missing keys") as ei:
+        load_index_artifact(path)
+    for key in ("centroids1", "spec_perm", "sqrt_k"):
+        assert key in str(ei.value)
+
+
+def test_artifact_version_error_reports_found_vs_expected(index, tmp_path):
+    from repro.core.suco import ArtifactError
+
+    path = tmp_path / "stale.npz"
+    index.save(path)
+    blob = dict(np.load(path))
+    blob["version"] = np.asarray(INDEX_ARTIFACT_VERSION + 3, np.int32)
+    with open(path, "wb") as f:
+        np.savez(f, **blob)
+    with pytest.raises(ArtifactError) as ei:
+        load_index_artifact(path)
+    msg = str(ei.value)
+    assert str(INDEX_ARTIFACT_VERSION + 3) in msg  # found
+    assert f"version {INDEX_ARTIFACT_VERSION}" in msg  # expected
+
+
 # ------------------------------- bucketing ----------------------------------
 
 

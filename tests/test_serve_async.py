@@ -151,9 +151,15 @@ def test_latency_summary_empty_is_zeroed(ds):
     keys = {
         "n_requests", "qps", "p50_ms", "p99_ms", "mean_ms", "max_ms",
         "queue_p50_ms", "queue_p99_ms", "exec_p50_ms", "exec_p99_ms",
+        "n_shed", "n_expired", "n_failed", "n_degraded",
+        "degraded_fraction", "deadline_hit_rate", "quality_bound_min",
     }
+    # deadline_hit_rate / quality_bound_min are vacuously 1.0 on an empty
+    # set (no deadline missed, no bound violated), not 0.0.
+    vacuous = {"deadline_hit_rate", "quality_bound_min"}
     for requests in ([], [AnnRequest(0, ds.queries[0], k=10)]):  # none done
         s = latency_summary(requests)
         assert set(s) == keys
         assert s["n_requests"] == 0
-        assert all(s[k] == 0.0 for k in keys - {"n_requests"})
+        assert all(s[k] == 0.0 for k in keys - {"n_requests"} - vacuous)
+        assert all(s[k] == 1.0 for k in vacuous)

@@ -1,0 +1,360 @@
+"""Resilient-serving contracts: submit-time validation, deadlines +
+oldest-deadline-first scheduling, bounded admission, the overload
+controller, the degradation ladder (quantified quality bounds, zero
+retraces across degrade/recover), fault isolation with retry, and the
+autoscaler's histogram edge cases."""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import EnginePolicy, SuCoConfig, SuCoEngine, build_index
+from repro.core.suco import autoscale_buckets, batch_bucket
+from repro.core.theory import degraded_budget_bound
+from repro.data import make_dataset
+from repro.serve.ann import (
+    AnnRequest,
+    AnnServer,
+    AsyncAnnServer,
+    DegradationLadder,
+    OverloadController,
+    latency_summary,
+)
+from repro.serve.chaos import VirtualClock
+
+CFG = SuCoConfig(n_subspaces=8, sqrt_k=16, kmeans_iters=4, seed=0)
+POLICY_BUCKETS = (4, 16)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("gaussian_mixture", 4000, 32, m=40, k=10, seed=0)
+
+
+@pytest.fixture(scope="module")
+def index(ds):
+    return build_index(jnp.asarray(ds.x), CFG)
+
+
+def _engine(ds, index):
+    return SuCoEngine(
+        jnp.asarray(ds.x), index,
+        EnginePolicy(alpha=0.05, beta=0.02, batch_buckets=POLICY_BUCKETS),
+    )
+
+
+# ---- satellite: submit-time validation ----------------------------------
+
+
+@pytest.mark.parametrize("server_cls", [AnnServer, AsyncAnnServer])
+def test_poison_query_rejected_at_submit_healthy_batch_unharmed(
+    ds, index, server_cls
+):
+    """A NaN query, a wrong-dim query and a k<1 request are all rejected
+    per-request at submit; the healthy requests around them complete with
+    correct answers."""
+    engine = _engine(ds, index)
+    engine.warmup(batch_sizes=(1, 4), ks=(10,))
+    server = server_cls(engine, max_batch=4)
+    nan_q = np.array(ds.queries[0], dtype=np.float32).copy()
+    nan_q[3] = np.nan
+    assert server.submit(AnnRequest(0, ds.queries[1], k=10)) is True
+    assert server.submit(AnnRequest(1, nan_q, k=10)) is False
+    assert server.submit(AnnRequest(2, ds.queries[2][:7], k=10)) is False
+    assert server.submit(AnnRequest(3, ds.queries[3], k=0)) is False
+    assert server.submit(AnnRequest(4, ds.queries[4], k=10)) is True
+    done = server.run_until_drained()
+    by = {r.rid: r for r in done}
+    assert len(done) == 5
+    assert "NaN" in by[1].error and not by[1].done
+    assert "query must be" in by[2].error
+    assert "k=0" in by[3].error
+    for rid in (0, 4):
+        r = by[rid]
+        assert r.done and r.error is None
+        want = engine.query(ds.queries[[1, 4][rid == 4]], k=10)
+        np.testing.assert_array_equal(r.ids, np.asarray(want.ids))
+
+
+# ---- deadlines ----------------------------------------------------------
+
+
+def test_deadline_scheduling_oldest_deadline_first(ds, index):
+    """With mixed deadlines, the tightest-deadline request leads the batch
+    (and fixes its k) regardless of queue rank; deadline-free traffic
+    stays FIFO."""
+    engine = _engine(ds, index)
+    engine.warmup(batch_sizes=(1, 4), ks=(5, 10))
+    clock = VirtualClock()
+    server = AnnServer(engine, max_batch=4, clock=clock, sleep=clock.advance)
+    server.submit(AnnRequest(0, ds.queries[0], k=10))
+    server.submit(AnnRequest(1, ds.queries[1], k=5, deadline_s=0.010))
+    server.submit(AnnRequest(2, ds.queries[2], k=5, deadline_s=0.500))
+    batch = server.step()
+    # rid 1 has the oldest deadline -> its k=5 class is served first,
+    # pulling rid 2 along and deferring the FIFO-first k=10 request.
+    assert [r.rid for r in batch] == [1, 2]
+    assert [r.rid for r in server.step()] == [0]
+
+
+def test_expired_requests_reported_distinctly(ds, index):
+    """A request whose deadline passes while queued expires at dispatch
+    time (completes-with-error, expired=True) and shows up under
+    n_expired, not n_failed."""
+    engine = _engine(ds, index)
+    engine.warmup(batch_sizes=(1, 4), ks=(10,))
+    clock = VirtualClock()
+    server = AnnServer(engine, max_batch=4, clock=clock, sleep=clock.advance)
+    server.submit(AnnRequest(0, ds.queries[0], k=10, deadline_s=0.005))
+    server.submit(AnnRequest(1, ds.queries[1], k=10))
+    clock.advance(0.02)  # the deadline passes while queued
+    done = server.run_until_drained()
+    by = {r.rid: r for r in done}
+    assert by[0].expired and not by[0].done and "expired" in by[0].error
+    assert by[1].done
+    s = latency_summary(done)
+    assert s["n_expired"] == 1 and s["n_failed"] == 0
+    assert s["deadline_hit_rate"] == 0.0  # the only deadlined request missed
+
+
+def test_deadline_hit_rate_counts_only_deadlined_requests(ds, index):
+    engine = _engine(ds, index)
+    engine.warmup(batch_sizes=(1, 4), ks=(10,))
+    server = AnnServer(engine, max_batch=4)
+    server.submit(AnnRequest(0, ds.queries[0], k=10, deadline_s=60.0))
+    server.submit(AnnRequest(1, ds.queries[1], k=10))  # no deadline
+    s = latency_summary(server.run_until_drained())
+    assert s["deadline_hit_rate"] == 1.0
+
+
+# ---- admission control --------------------------------------------------
+
+
+def test_bounded_admission_sheds_on_full(ds, index):
+    engine = _engine(ds, index)
+    engine.warmup(batch_sizes=(1, 4), ks=(10,))
+    server = AnnServer(engine, max_batch=4, max_queue=2)
+    accepted = server.submit_many(
+        [AnnRequest(i, ds.queries[i], k=10) for i in range(5)]
+    )
+    assert accepted == 2 and len(server.queue) == 2
+    shed = [r for r in server.completed if r.shed]
+    assert len(shed) == 3
+    assert all("queue full" in r.error and not r.done for r in shed)
+    done = server.run_until_drained()
+    s = latency_summary(done)
+    assert s["n_shed"] == 3 and s["n_requests"] == 2
+    with pytest.raises(ValueError, match="max_queue"):
+        AnnServer(engine, max_queue=0)
+
+
+# ---- overload controller ------------------------------------------------
+
+
+def test_overload_controller_hysteresis():
+    c = OverloadController(
+        max_level=2, high_depth=8, low_depth=2, high_wait_s=0.1,
+        patience=2, cooldown=2,
+    )
+    assert c.update(0, 0.0) == 0
+    # two consecutive hot observations -> step up (not one: patience=2)
+    assert c.update(10, 0.0) == 0
+    assert c.update(10, 0.0) == 1
+    # wait-driven overload counts too
+    assert c.update(3, 0.5) == 1
+    assert c.update(3, 0.5) == 2
+    # clamped at max_level
+    assert c.update(100, 1.0) == 2
+    assert c.update(100, 1.0) == 2
+    # middle ground (neither hot nor calm) holds the level
+    assert c.update(5, 0.01) == 2
+    # two calm observations -> step down, twice
+    assert c.update(0, 0.0) == 2
+    assert c.update(0, 0.0) == 1
+    assert c.update(0, 0.0) == 1
+    assert c.update(0, 0.0) == 0
+
+
+# ---- degradation ladder -------------------------------------------------
+
+
+def test_ladder_bounds_monotone_and_theorem2_derived(ds, index):
+    engine = _engine(ds, index)
+    ladder = DegradationLadder(engine, levels=2)
+    n = int(engine.x.shape[0])
+    ns = engine.index.spec.n_subspaces
+    raw = [
+        degraded_budget_bound(
+            n, 10, ns, ladder.m_stat, ladder.sigma_stat,
+            e.policy.alpha, e.policy.beta,
+        )
+        for e in ladder.engines
+    ]
+    bounds = [ladder.quality_bound(lv, 10) for lv in range(3)]
+    # monotonised min over the prefix, never above the raw per-level bound
+    for lv in range(3):
+        assert bounds[lv] == min(raw[: lv + 1])
+    assert bounds[0] >= bounds[1] >= bounds[2] >= 0.0
+    assert all(0.0 <= b <= 1.0 for b in bounds)
+
+
+def test_degrade_recover_cycle_zero_retraces_and_quantified_answers(ds, index):
+    """The acceptance invariant: a warmed ladder serves a forced
+    degrade -> recover cycle with zero retraces, every degraded answer
+    carrying its level's quality bound."""
+    engine = _engine(ds, index)
+    ladder = DegradationLadder(engine, levels=2)
+    ladder.warmup(batch_sizes=(1, 4), ks=(10,))
+    server = AnnServer(engine, max_batch=4, ladder=ladder)
+    before = server.executables
+    for level in (0, 1, 2, 1, 0):  # forced cycle (no controller)
+        server.level = level
+        server.submit_many(
+            [AnnRequest(100 * level + i, ds.queries[i], k=10) for i in range(4)]
+        )
+        batch = server.step()
+        assert [r.degrade_level for r in batch] == [level] * 4
+        for r in batch:
+            assert r.done
+            assert r.quality_bound == ladder.quality_bound(level, 10)
+    assert server.executables == before, "degrade/recover retraced"
+    assert all(s.compile_count == before for s in server.steps)
+    s = latency_summary(server.completed)
+    assert s["n_degraded"] == 12 and 0 < s["degraded_fraction"] < 1
+    assert s["quality_bound_min"] == ladder.quality_bound(2, 10)
+
+
+def test_controller_driven_degrade_on_backlog(ds, index):
+    """A deep backlog trips the controller and the batches after the trip
+    are served degraded, with bounds attached."""
+    engine = _engine(ds, index)
+    ladder = DegradationLadder(engine, levels=1)
+    ladder.warmup(batch_sizes=(1, 4), ks=(10,))
+    server = AnnServer(
+        engine, max_batch=4, ladder=ladder,
+        controller=OverloadController(
+            max_level=1, high_depth=8, low_depth=0, patience=1, cooldown=10,
+        ),
+    )
+    server.submit_many(
+        [AnnRequest(i, ds.queries[i % 40], k=10) for i in range(16)]
+    )
+    done = server.run_until_drained()
+    assert any(r.degrade_level == 1 for r in done)
+    for r in done:
+        if r.degrade_level == 1:
+            assert r.quality_bound == ladder.quality_bound(1, 10)
+
+
+# ---- fault isolation / retry -------------------------------------------
+
+
+class _FlakyEngine:
+    """Raises on the first ``fail_n`` dispatches, then delegates."""
+
+    def __init__(self, engine, fail_n):
+        self._engine = engine
+        self.fail_n = fail_n
+        self.calls = 0
+
+    def query(self, q, k):
+        self.calls += 1
+        if self.calls <= self.fail_n:
+            raise RuntimeError(f"transient dispatch error #{self.calls}")
+        return self._engine.query(q, k=k)
+
+    def __getattr__(self, name):
+        return getattr(self._engine, name)
+
+
+@pytest.mark.parametrize("server_cls", [AnnServer, AsyncAnnServer])
+def test_transient_dispatch_error_retried_once(ds, index, server_cls):
+    engine = _engine(ds, index)
+    engine.warmup(batch_sizes=(1, 4), ks=(10,))
+    clock = VirtualClock()
+    flaky = _FlakyEngine(engine, fail_n=1)
+    server = server_cls(flaky, max_batch=4, clock=clock, sleep=clock.advance)
+    server.submit_many([AnnRequest(i, ds.queries[i], k=10) for i in range(3)])
+    done = server.run_until_drained()
+    assert all(r.done and r.error is None for r in done)
+    assert all(r.retries == 1 for r in done)
+    want = engine.query(np.stack([np.asarray(ds.queries[i]) for i in range(3)]), k=10)
+    np.testing.assert_array_equal(
+        np.stack([r.ids for r in sorted(done, key=lambda r: r.rid)]),
+        np.asarray(want.ids),
+    )
+
+
+@pytest.mark.parametrize("server_cls", [AnnServer, AsyncAnnServer])
+def test_persistent_failure_isolates_per_request(ds, index, server_cls):
+    """When the batch fails its retry, requests are served one by one —
+    here the fallback singles succeed, so every request still completes."""
+    engine = _engine(ds, index)
+    engine.warmup(batch_sizes=(1, 4), ks=(10,))
+    clock = VirtualClock()
+    flaky = _FlakyEngine(engine, fail_n=2)  # batch + its retry both fail
+    server = server_cls(flaky, max_batch=4, clock=clock, sleep=clock.advance)
+    server.submit_many([AnnRequest(i, ds.queries[i], k=10) for i in range(3)])
+    done = server.run_until_drained()
+    assert all(r.done and r.error is None for r in done)
+    assert flaky.calls == 2 + 3  # batch, retry, then one call per request
+
+
+def test_always_failing_engine_fails_requests_not_server(ds, index):
+    engine = _engine(ds, index)
+    clock = VirtualClock()
+    flaky = _FlakyEngine(engine, fail_n=10**9)
+    server = AnnServer(flaky, max_batch=4, clock=clock, sleep=clock.advance)
+    server.submit_many([AnnRequest(i, ds.queries[i], k=10) for i in range(3)])
+    done = server.run_until_drained()
+    assert all(not r.done and "transient dispatch error" in r.error for r in done)
+    assert latency_summary(done)["n_failed"] == 3
+
+
+# ---- satellite: autoscaler histogram edge cases -------------------------
+
+
+def test_autoscale_all_zero_histogram_falls_back():
+    assert autoscale_buckets({4: 0, 8: 0}, 4, fallback=(1, 2)) == (1, 2)
+
+
+def test_autoscale_single_bin_histogram():
+    assert autoscale_buckets({7: 13}, 8) == (7,)
+    assert autoscale_buckets({7: 13}, 1) == (7,)
+
+
+def test_autoscale_empty_histogram_empty_fallback_is_clear_error():
+    with pytest.raises(ValueError, match="empty"):
+        autoscale_buckets({}, 4, fallback=())
+
+
+def test_batch_bucket_empty_buckets_is_clear_error():
+    with pytest.raises(ValueError, match="non-empty"):
+        batch_bucket(3, ())
+
+
+def test_policy_observe_then_autoscale_edge_histograms():
+    p = EnginePolicy()
+    p.observe([5] * 9)  # single-bin traffic
+    assert p.autoscale_buckets() == (5,)
+    assert p.autoscaled().batch_buckets == (5,)
+    p2 = EnginePolicy()
+    assert p2.autoscale_buckets() == tuple(sorted(set(p2.batch_buckets)))
+
+
+# ---- summary accounting -------------------------------------------------
+
+
+def test_summary_vacuous_fields_without_resilience_features(ds, index):
+    """A plain healthy run reports neutral resilience fields: nothing
+    shed/expired/degraded, hit rate and bound floor vacuously 1.0."""
+    engine = _engine(ds, index)
+    engine.warmup(batch_sizes=(1, 4), ks=(10,))
+    server = AnnServer(engine, max_batch=4)
+    server.submit_many([AnnRequest(i, ds.queries[i], k=10) for i in range(4)])
+    s = latency_summary(server.run_until_drained())
+    assert s["n_shed"] == s["n_expired"] == s["n_failed"] == s["n_degraded"] == 0
+    assert s["deadline_hit_rate"] == 1.0 and s["quality_bound_min"] == 1.0
+    assert math.isfinite(s["p99_ms"])

@@ -125,3 +125,42 @@ def test_theorem2_k_near_n_is_vacuous():
     not go negative or raise."""
     p = theorem2_bound(n=1000, k=999, n_subspaces=8, m=10.0, sigma=1.0, alpha=0.05)
     assert p == 0.0
+
+
+def test_degraded_budget_bound_contract():
+    """The degraded-mode floor: a probability, monotone non-increasing as
+    beta shrinks at fixed alpha (the pool-spill term grows), vacuous (0.0)
+    once the candidate pool cannot hold a top-k answer, and never above
+    the plain Theorem-2 bound for the same alpha."""
+    from repro.core.theory import degraded_budget_bound
+
+    common = dict(n=48_000, k=10, n_subspaces=8, m=8.0, sigma=2.0)
+    alpha = 0.05
+    betas = (0.02, 0.01, 0.005, 0.001)
+    bounds = [degraded_budget_bound(alpha=alpha, beta=b, **common) for b in betas]
+    assert all(0.0 <= b <= 1.0 for b in bounds)
+    for hi, lo in zip(bounds, bounds[1:]):
+        assert hi >= lo, (bounds, "beta-monotonicity broken")
+    base = theorem2_bound(alpha=alpha, **common)
+    assert all(b <= base for b in bounds)
+    # infeasible pool: int(beta * n) < k  ->  vacuous
+    assert degraded_budget_bound(alpha=alpha, beta=10 / (2 * 48_000), **common) == 0.0
+    assert degraded_budget_bound(alpha=alpha, beta=0.0, **common) == 0.0
+    assert degraded_budget_bound(alpha=alpha, beta=-0.1, **common) == 0.0
+
+
+def test_estimate_subspace_statistics_deterministic_and_plausible():
+    """The sampled (m, sigma) estimator is deterministic in its seed and
+    lands near the per-query statistic it averages."""
+    from repro.core.theory import estimate_subspace_statistics
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4096, 32)).astype(np.float32)
+    a = estimate_subspace_statistics(x, 8, seed=3)
+    b = estimate_subspace_statistics(x, 8, seed=3)
+    assert a == b
+    c = estimate_subspace_statistics(x, 8, seed=4)
+    assert a != c  # the seed really drives the sample
+    m_ref, s_ref = subspace_statistics(x[:2048], x[7], 8)
+    assert 0.5 * m_ref < a[0] < 2.0 * m_ref
+    assert 0.25 * s_ref < a[1] < 4.0 * s_ref
