@@ -69,12 +69,17 @@ def collect(sizes=SIZES, out_path: Path = OUT_PATH) -> dict:
         for mode in MODES:
             run = mode != "dense" or n <= DENSE_RUN_MAX_N
             results.append(_measure(x, mode, run=run))
+    from repro.core import EnginePolicy
+
     payload = dict(
         meta=dict(
             d=D,
             config={k: v for k, v in _CFG.items()},
             backend=jax.default_backend(),
             dense_run_max_n=DENSE_RUN_MAX_N,
+            # serving-side pool-merge impl in effect when this trajectory
+            # point was recorded (the serve artifact carries the same field)
+            merge_impl=EnginePolicy().merge_impl,
             schema="suco-index-build-v1",
         ),
         results=results,

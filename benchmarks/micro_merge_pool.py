@@ -1,12 +1,21 @@
 """Micro-benchmark: per-block cost of the streaming top-pool merge.
 
-Compares ``merge_topk_pool(impl="sort")`` (two-key sort of the (m, p+b)
-concat) against the default ``impl="topk"`` (single ``lax.top_k``
-selection) at streaming-engine shapes, and asserts they stay
-bit-identical under the streaming (ascending block id) invariant.
+Races the three ``merge_topk_pool`` impls at streaming-engine shapes —
+``"sort"`` (two-key sort of the (m, p+b) concat), ``"topk"`` (single
+``lax.top_k`` selection), and ``"counting"`` (counting-select over the
+integer score range 0..smax: bucket-count the block, invert the merge of
+two sorted runs without a scatter) — and asserts all three stay
+bit-identical under the streaming (ascending block id) invariant.  The
+fused engine's joint (score, dist, id) pool is covered by a second set of
+rows through ``merge_topk_pool_with_dists``.
+
+CI fast lane: ``python -m benchmarks.micro_merge_pool --toy``.
 """
 
 from __future__ import annotations
+
+import functools
+import sys
 
 import numpy as np
 import jax
@@ -14,9 +23,11 @@ import jax.numpy as jnp
 
 from benchmarks.common import Row, timeit
 from repro.core import merge_topk_pool
+from repro.core.sc_linear import merge_topk_pool_with_dists
 
-
-import functools
+SMAX = 8  # SC-score range: collision counts in 0..n_subspaces
+FULL = dict(m=32, n=131_072, shapes=((512, 4096), (1024, 8192)), repeats=5)
+TOY = dict(m=8, n=16_384, shapes=((128, 2048),), repeats=3)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "bn", "impl"))
@@ -29,7 +40,8 @@ def _run_stream(scores: jnp.ndarray, *, p: int, bn: int, impl: str):
     def step(carry, blk):
         ps, pi = carry
         blk_s, blk_i = blk
-        return merge_topk_pool(ps, pi, blk_s, blk_i, impl=impl), None
+        smax = SMAX if impl == "counting" else None
+        return merge_topk_pool(ps, pi, blk_s, blk_i, impl=impl, smax=smax), None
 
     blocks_s = scores.reshape(m, n // bn, bn).transpose(1, 0, 2)
     ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (m, n))
@@ -38,36 +50,101 @@ def _run_stream(scores: jnp.ndarray, *, p: int, bn: int, impl: str):
     return ps, pi
 
 
-def run() -> list[Row]:
+@functools.partial(jax.jit, static_argnames=("p", "bn", "impl"))
+def _run_stream_dists(scores, dists, *, p: int, bn: int, impl: str):
+    m, n = scores.shape
+    int_max = np.iinfo(np.int32).max
+    pool_s = jnp.full((m, p), -1, jnp.int32)
+    pool_d = jnp.full((m, p), jnp.inf, jnp.float32)
+    pool_i = jnp.full((m, p), int_max, jnp.int32)
+
+    def step(carry, blk):
+        ps, pd, pi = carry
+        blk_s, blk_d, blk_i = blk
+        smax = SMAX if impl == "counting" else None
+        return (
+            merge_topk_pool_with_dists(
+                ps, pd, pi, blk_s, blk_d, blk_i, impl=impl, smax=smax
+            ),
+            None,
+        )
+
+    blocks_s = scores.reshape(m, n // bn, bn).transpose(1, 0, 2)
+    blocks_d = dists.reshape(m, n // bn, bn).transpose(1, 0, 2)
+    ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (m, n))
+    blocks_i = ids.reshape(m, n // bn, bn).transpose(1, 0, 2)
+    carry, _ = jax.lax.scan(
+        step, (pool_s, pool_d, pool_i), (blocks_s, blocks_d, blocks_i)
+    )
+    return carry
+
+
+def run(*, toy: bool = False) -> list[Row]:
+    scale = TOY if toy else FULL
+    m, n, repeats = scale["m"], scale["n"], scale["repeats"]
     rows: list[Row] = []
     rng = np.random.default_rng(0)
-    m, n = 32, 131_072
-    scores = jnp.asarray(rng.integers(0, 9, size=(m, n)), jnp.int32)  # many ties
-    for p, bn in ((512, 4096), (1024, 8192)):
+    scores = jnp.asarray(rng.integers(0, SMAX + 1, size=(m, n)), jnp.int32)
+    dists = jnp.asarray(rng.random((m, n), np.float32))
+    for p, bn in scale["shapes"]:
+        n_blocks = n // bn
         res = {}
-        for impl in ("sort", "topk"):
+        for impl in ("sort", "topk", "counting"):
             fn = lambda impl=impl: jax.block_until_ready(
                 _run_stream(scores, p=p, bn=bn, impl=impl)
             )
             fn()  # compile outside the timed region
-            res[impl] = (timeit(fn, repeats=5), fn())
-        (us_s, (ss, si)), (us_t, (ts, ti)) = res["sort"], res["topk"]
-        bit_equal = bool(
-            np.array_equal(np.asarray(ss), np.asarray(ts))
-            and np.array_equal(np.asarray(si), np.asarray(ti))
+            res[impl] = (timeit(fn, repeats=repeats), fn())
+        (us_s, out_s), (us_t, out_t), (us_c, out_c) = (
+            res["sort"], res["topk"], res["counting"],
         )
-        n_blocks = n // bn
+        bit_equal = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for got in (out_s, out_c)
+            for a, b in zip(got, out_t)
+        )
         rows.append(
             (
                 f"micro/merge_pool-p{p}-bn{bn}",
-                us_t / n_blocks,
+                us_c / n_blocks,
+                f"topk_us_per_block={us_t / n_blocks:.1f};"
                 f"sort_us_per_block={us_s / n_blocks:.1f};"
-                f"speedup={us_s / us_t:.2f}x;bit_equal={bit_equal}",
+                f"counting_speedup_vs_topk={us_t / us_c:.2f}x;"
+                f"counting_speedup_vs_sort={us_s / us_c:.2f}x;"
+                f"bit_equal={bit_equal}",
+            )
+        )
+
+        # fused-engine joint pool: block width = survivor_cap-ish (pruned)
+        cap = max(p // 4, 64)
+        res_d = {}
+        for impl in ("topk", "counting"):
+            fn = lambda impl=impl: jax.block_until_ready(
+                _run_stream_dists(
+                    scores[:, : (n // bn) * cap],
+                    dists[:, : (n // bn) * cap],
+                    p=p, bn=cap, impl=impl,
+                )
+            )
+            fn()
+            res_d[impl] = (timeit(fn, repeats=repeats), fn())
+        (us_td, out_td), (us_cd, out_cd) = res_d["topk"], res_d["counting"]
+        bit_equal_d = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(out_cd, out_td)
+        )
+        rows.append(
+            (
+                f"micro/merge_pool_dists-p{p}-cap{cap}",
+                us_cd / n_blocks,
+                f"topk_us_per_block={us_td / n_blocks:.1f};"
+                f"counting_speedup_vs_topk={us_td / us_cd:.2f}x;"
+                f"bit_equal={bit_equal_d}",
             )
         )
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    for r in run(toy="--toy" in sys.argv[1:]):
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -319,6 +319,7 @@ def _run_fused(engine: SuCoEngine, scale: dict, mixes: list[dict], all_ks) -> li
     recs.insert(0, dict(
         name="_meta",
         mode=fused.mode,
+        merge_impl=fused.policy.merge_impl,
         tiles=dict(block_n=tiles.block_n, bm=tiles.bm, bn=tiles.bn,
                    survivor_cap=tiles.survivor_cap),
         warm_compiles=warm_compiles,
@@ -444,6 +445,7 @@ def collect(*, toy: bool = False, out_path: Path | None = None) -> dict:
                 alpha=policy.alpha,
                 beta=policy.beta,
                 block_n=policy.block_n,
+                merge_impl=policy.merge_impl,
                 batch_buckets=list(policy.batch_buckets),
                 max_batch=scale["max_batch"],
             ),

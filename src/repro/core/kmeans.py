@@ -423,9 +423,12 @@ def _final_assign(
     full-data inertia and takes the fused stats kernel.
 
     ``pair_sqrt_k > 0`` fuses the SuCo IMI occupancy histogram into the
-    scan (see :func:`assign_scan`); the Pallas kernels do not accumulate
-    it, so the TPU path returns None and the caller falls back to a
-    bincount over the assignments.
+    scan (see :func:`assign_scan`).  The Lloyd-path TPU route fuses it
+    too (:func:`repro.kernels.kmeans_assign.ops.kmeans_pair_assign_hist`:
+    the histogram accumulates on the MXU inside the assignment kernel);
+    only the minibatch TPU path — which additionally needs the full-data
+    inertia from the stats kernel — still returns None and leaves the
+    caller a bincount over the assignments.
     """
     b, n, _ = xs.shape
     if pallas:
@@ -433,6 +436,11 @@ def _final_assign(
 
         bn = block_n or 1024
         if not need_inertia:
+            if pair_sqrt_k:
+                a, counts = _ops.kmeans_pair_assign_hist(
+                    xs, centroids, bn=bn, impl="pallas"
+                )
+                return a, None, counts
             a = _ops.kmeans_assign_batched(xs, centroids, bn=bn, impl="pallas")
             return a, None, None
         a, _, _, inertia = _ops.kmeans_assign_stats(

@@ -118,7 +118,10 @@ from repro.core.sc_linear import (
 )
 from repro.core.tuning import TileConfig, autotune_build_block_n, autotune_tiles
 from repro.kernels.gather_rerank.ops import gather_rerank_block
-from repro.kernels.sc_score.ops import sc_scores_cells, sc_scores_cells_prefilter
+from repro.kernels.sc_score.ops import (
+    sc_scores_cells,
+    sc_scores_cells_prefilter_compact,
+)
 
 __all__ = [
     "SuCoConfig",
@@ -307,7 +310,7 @@ def _build(
     cell_ids = (a1 * sqrt_k + a2).astype(jnp.int32)  # (Ns, n)
     if res.cell_counts is not None:
         counts = res.cell_counts
-    else:  # Pallas final assignment (TPU) does not fuse the histogram
+    else:  # minibatch TPU final assignment (stats kernel) does not fuse it
         counts = jax.vmap(
             lambda c: jnp.bincount(c, length=sqrt_k * sqrt_k).astype(jnp.int32)
         )(cell_ids)
@@ -608,7 +611,10 @@ def _pool_size(n: int, k: int, beta: float) -> int:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "alpha", "beta", "metric", "block_n", "score_impl")
+    jax.jit,
+    static_argnames=(
+        "k", "alpha", "beta", "metric", "block_n", "score_impl", "merge_impl"
+    ),
 )
 def suco_query_streaming(
     x: jax.Array,
@@ -621,6 +627,7 @@ def suco_query_streaming(
     metric: Metric = "l2",
     block_n: int = 4096,
     score_impl: str = "auto",
+    merge_impl: str = "auto",
 ) -> QueryResult:
     """Algorithm 4 as a tiled streaming engine — bit-identical to the dense
     path, peak query memory O(m*(block_n + n_candidates)).
@@ -628,7 +635,10 @@ def suco_query_streaming(
     A ``lax.scan`` over ceil(n / block_n) data chunks: per chunk the
     collision counts come from the chunked SC-score kernel path
     (:func:`sc_scores_cells`), and a carried per-query top pool is merged
-    under the (score desc, id asc) order.  After the scan the pool equals
+    under the (score desc, id asc) order — ``merge_impl`` picks the merge
+    algorithm (:func:`repro.core.sc_linear.merge_topk_pool`; "auto"
+    resolves to the counting-select over the integer ``0..Ns`` score
+    range, bit-identical to ``top_k``).  After the scan the pool equals
     the dense ``top_k(scores, n_candidates)`` selection exactly (sentinels
     at score -1 / id INT32_MAX lose to every real point), so the exact
     re-rank returns the same ids/distances as :func:`suco_query`.
@@ -659,7 +669,11 @@ def suco_query_streaming(
         valid = gids < n  # mask chunk padding past the end of the data
         s = jnp.where(valid[None, :], s, -1)
         ids_b = jnp.broadcast_to(jnp.where(valid, gids, int_max), (m, bn))
-        return merge_topk_pool(pool_s, pool_i, s, ids_b), None
+        merged = merge_topk_pool(
+            pool_s, pool_i, s, ids_b,
+            impl=merge_impl, smax=index.spec.n_subspaces,
+        )
+        return merged, None
 
     init = (
         jnp.full((m, pool), -1, jnp.int32),
@@ -673,7 +687,9 @@ def suco_query_streaming(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "alpha", "beta", "metric", "tiles", "score_impl"),
+    static_argnames=(
+        "k", "alpha", "beta", "metric", "tiles", "score_impl", "merge_impl"
+    ),
 )
 def suco_query_fused(
     x: jax.Array,
@@ -686,6 +702,7 @@ def suco_query_fused(
     metric: Metric = "l2",
     tiles: TileConfig | None = None,
     score_impl: str = "auto",
+    merge_impl: str = "auto",
 ) -> QueryResult:
     """Algorithm 4 as a **single-pass fused engine**: score -> prune ->
     merge -> rerank in one scan over the data, bit-identical to the dense
@@ -693,26 +710,31 @@ def suco_query_fused(
 
     Per ``block_n``-point chunk, while the chunk is resident:
 
-    1. **score** — the fused chunk stage
-       (:func:`repro.kernels.sc_score.ops.sc_scores_cells_prefilter`)
-       computes SC-scores *and* the Pareto prefilter mask in one pass:
-       only rows whose score beats the carried pool minimum can possibly
-       enter the pool (pool entries with equal score always win the
-       (score desc, id asc) tie-break, having strictly smaller ids under
-       the streaming invariant), so everything else is pruned exactly.
-    2. **prune** — survivors are compacted into a ``survivor_cap``-wide
-       buffer in ascending-id order by binary-searching the keep-mask's
-       cumsum (no sort or scatter ever touches the ``(m, block_n)``
-       block), preserving the merge's lexicographic tie-break
-       bit-for-bit.
-    3. **rerank in-pass** — exact distances for the survivors — O(cap)
+    1. **score + prune, one launch** — the fused chunk stage
+       (:func:`repro.kernels.sc_score.ops.sc_scores_cells_prefilter_compact`)
+       computes SC-scores, the Pareto prefilter, *and* the survivor
+       compaction in a single kernel: only rows whose score beats the
+       carried pool minimum can possibly enter the pool (pool entries
+       with equal score always win the (score desc, id asc) tie-break,
+       having strictly smaller ids under the streaming invariant), and
+       the survivors come back already compacted into a
+       ``survivor_cap``-wide buffer in ascending-id order — in-kernel
+       cumsum + one-hot slot write while the score tile is resident, so
+       no sort, scatter, or second pass ever touches the
+       ``(m, block_n)`` block and the merge's lexicographic tie-break is
+       preserved bit-for-bit.  (The jnp oracle — the production CPU
+       path — runs the identical compaction as a binary search on the
+       keep-mask's cumsum.)
+    2. **rerank in-pass** — exact distances for the survivors — O(cap)
        rows of ``x`` per chunk, the rows just scored — are gathered by
        global id (:func:`repro.kernels.gather_rerank.ops.gather_rerank_block`,
        same fp reduction as :func:`repro.core.sc_linear.rerank_candidates`);
        ``x`` itself is never padded, copied, or streamed through the scan.
-    4. **merge** — the joint ``(sc_score, exact_dist, id)`` pool merges at
+    3. **merge** — the joint ``(sc_score, exact_dist, id)`` pool merges at
        width ``pool + survivor_cap`` instead of ``pool + block_n``
-       (:func:`repro.core.sc_linear.merge_topk_pool_with_dists`).
+       (:func:`repro.core.sc_linear.merge_topk_pool_with_dists`;
+       ``merge_impl`` selects the algorithm, "auto" resolving to the
+       counting-select over the integer ``0..Ns`` score range).
 
     A chunk whose survivor count exceeds ``survivor_cap`` for any query
     (cold pool on the first chunks, adversarial score ties) falls back via
@@ -761,32 +783,22 @@ def suco_query_fused(
         pool_s, pool_d, pool_i = carry
         blk, cells_b = inp  # (), (Ns, bn)
         thr = pool_s[:, -1]  # pool sorted desc -> last col is the minimum
-        s, keep = sc_scores_cells_prefilter(
-            ranks, cuts, cells_b, thr,
-            bm=tiles.bm, bn=tiles.bn, impl=score_impl,
-        )  # (m, bn) int32, (m, bn) bool
+        limit = jnp.minimum(n - blk * bn, bn)  # valid columns this chunk
+        s, surv_c, surv_s, total = sc_scores_cells_prefilter_compact(
+            ranks, cuts, cells_b, thr, limit,
+            cap=cap, bm=tiles.bm, bn=tiles.bn, impl=score_impl,
+        )  # (m, bn), (m, cap), (m, cap), (m) — all int32, s pre-masked
         gids = blk * bn + cols
-        valid = gids < n  # mask chunk padding past the end of the data
-        s = jnp.where(valid[None, :], s, -1)
-        keep = keep & valid[None, :]
-        ids_b = jnp.broadcast_to(jnp.where(valid, gids, int_max), (m, bn))
-        cnt = jnp.cumsum(keep, axis=1, dtype=jnp.int32)
+        ids_b = jnp.broadcast_to(jnp.where(cols < limit, gids, int_max), (m, bn))
 
         def pruned_merge(_):
-            # Compact survivors into cap slots in ascending-id order: the
-            # j-th survivor sits at the first column whose running count
-            # reaches j+1 — a binary search on the monotone cumsum, then
-            # cap-sized gathers.  Nothing sorts or scatters the (m, bn)
-            # block (XLA CPU scatter serializes; this stays vectorised).
-            surv_c = jax.vmap(
-                lambda row_cnt: jnp.searchsorted(row_cnt, slot + 1, side="left")
-            )(cnt)  # (m, cap)
-            surv_c = jnp.minimum(surv_c, bn - 1).astype(jnp.int32)
-            live = slot[None, :] < cnt[:, -1:]  # slot j holds a survivor
-            surv_s = jnp.where(live, jnp.take_along_axis(s, surv_c, axis=1), -1)
-            surv_i = jnp.where(
-                live, jnp.take_along_axis(ids_b, surv_c, axis=1), int_max
-            )
+            # The kernel already compacted the survivors into cap slots in
+            # ascending-id order while the score tile was resident — the
+            # host graph only rebuilds global ids from the chunk-local
+            # columns and masks empty slots to the sentinels.
+            live = slot[None, :] < total[:, None]  # slot j holds a survivor
+            surv_i = jnp.where(live, blk * bn + surv_c, int_max)
+            surv_sm = jnp.where(live, surv_s, -1)
             # survivors only ever touch O(cap) rows of x per chunk — the
             # rows just scored, fetched by global id (the op clips the
             # int_max sentinels; their distances are masked to +inf).
@@ -796,7 +808,8 @@ def suco_query_fused(
             dists = gather_rerank_block(surv_i, x, q, metric=metric, impl="jnp")
             dists = jnp.where(live, dists, inf)
             return merge_topk_pool_with_dists(
-                pool_s, pool_d, pool_i, surv_s, dists, surv_i
+                pool_s, pool_d, pool_i, surv_sm, dists, surv_i,
+                impl=merge_impl, smax=index.spec.n_subspaces,
             )
 
         def full_merge(_):
@@ -813,10 +826,11 @@ def suco_query_fused(
             dists = gather_rerank_block(top_i, x, q, metric=metric, impl="jnp")
             dists = jnp.where(top_i == int_max, inf, dists)
             return merge_topk_pool_with_dists(
-                pool_s, pool_d, pool_i, top_s, dists, top_i
+                pool_s, pool_d, pool_i, top_s, dists, top_i,
+                impl=merge_impl, smax=index.spec.n_subspaces,
             )
 
-        overflow = jnp.any(cnt[:, -1] > cap)
+        overflow = jnp.any(total > cap)
         return jax.lax.cond(overflow, full_merge, pruned_merge, None), None
 
     init = (
@@ -840,7 +854,8 @@ def suco_query_fused(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "alpha", "beta", "metric", "mode", "block_n", "score_impl", "tiles"
+        "k", "alpha", "beta", "metric", "mode", "block_n", "score_impl",
+        "tiles", "merge_impl",
     ),
 )
 def suco_query(
@@ -856,6 +871,7 @@ def suco_query(
     block_n: int = 4096,
     score_impl: str = "auto",
     tiles: TileConfig | None = None,
+    merge_impl: str = "auto",
 ) -> QueryResult:
     """Algorithm 4: k-ANN for a batch ``q: (m, d)`` using the SuCo index.
 
@@ -867,6 +883,11 @@ def suco_query(
     dense path is jnp-only and ignores it.  ``block_n`` sizes the legacy
     streaming path's chunks; the fused path tiles itself from ``tiles``
     (``None`` = autotune, see :func:`repro.core.tuning.autotune_tiles`).
+    ``merge_impl`` ("auto" | "topk" | "sort" | "counting") selects the
+    pool-merge algorithm for the streaming/fused paths
+    (:func:`repro.core.sc_linear.merge_topk_pool`); every impl is
+    bit-identical, and "auto" resolves to the counting-select over the
+    integer ``0..Ns`` score range.  The dense path ignores it.
     """
     n = x.shape[0]
     if mode not in ("auto", "dense", "streaming", "fused"):
@@ -882,6 +903,7 @@ def suco_query(
             metric=metric,
             tiles=tiles,
             score_impl=score_impl,
+            merge_impl=merge_impl,
         )
     if mode == "streaming":
         return suco_query_streaming(
@@ -894,6 +916,7 @@ def suco_query(
             metric=metric,
             block_n=block_n,
             score_impl=score_impl,
+            merge_impl=merge_impl,
         )
     c = sub.collision_count(n, alpha)
     scores = suco_scores(index, q, c, metric)  # (m, n)
@@ -1060,6 +1083,7 @@ class EnginePolicy:
     metric: Metric = "l2"
     mode: str = "auto"  # "auto" | "dense" | "streaming" | "fused"
     score_impl: str = "auto"  # chunked scorer kernel dispatch
+    merge_impl: str = "auto"  # pool-merge algorithm (sc_linear.merge_topk_pool)
     block_n: int = 4096  # legacy streaming chunk size
     tiles: TileConfig | None = None  # fused-path tiling (None = autotune)
     batch_buckets: tuple[int, ...] = DEFAULT_BATCH_BUCKETS
@@ -1249,7 +1273,7 @@ class SuCoEngine:
         return suco_query(
             x, index, q, k=k, alpha=p.alpha, beta=p.beta, metric=p.metric,
             mode=self._mode, block_n=p.block_n, score_impl=p.score_impl,
-            tiles=p.tiles,
+            tiles=p.tiles, merge_impl=p.merge_impl,
         )
 
     def tiles_for(self, m: int, k: int) -> TileConfig | None:
@@ -1462,11 +1486,19 @@ def jaxlint_entries():
             )
         )(x, q)
 
+    # Lint tiles are pinned to the *static* memory model: the measured
+    # limits vary per host, and the lint gate must prove the identical
+    # canonical shapes (and bounded-intermediate budgets) everywhere.
+    from repro.core.tuning import static_backend_limits
+
+    lint_limits = static_backend_limits()
+
     def _fused_tiles(m: int) -> TileConfig:
         pool = max(k, int(beta * s["n"]))
         return autotune_tiles(
             s["n"], s["d"], m, pool,
             n_subspaces=s["n_subspaces"], n_cells=s["sqrt_k"] ** 2,
+            limits=lint_limits,
         )
 
     def make_fused():
@@ -1488,7 +1520,10 @@ def jaxlint_entries():
 
     def make_engine_bucket():
         x, q, index, _ = _lint_problem()
-        engine = SuCoEngine(x, index, EnginePolicy(mode="fused"))
+        engine = SuCoEngine(
+            x, index,
+            EnginePolicy(mode="fused", tiles=_fused_tiles(batch_bucket(5))),
+        )
         qb = q[: batch_bucket(5)]  # one warmed (bucket=8, k) executable
         return jax.make_jaxpr(functools.partial(engine._raw_query, k=k))(
             engine.x, engine.index, qb
@@ -1500,6 +1535,7 @@ def jaxlint_entries():
         return autotune_tiles(
             s["n"], s["d"], m, pool,
             n_subspaces=s["n_subspaces"], n_cells=s["sqrt_k"] ** 2,
+            limits=lint_limits,
         )
 
     def make_engine_degraded_bucket():

@@ -14,18 +14,31 @@ budget on CPU), which is what "as fast as the hardware allows" means for a
 bandwidth-bound scan: the chunk a step touches should be served from the
 closest memory level, and the merge should run as rarely as that allows.
 
+The memory limits the tiler plans against are *measured*, not guessed:
+:func:`backend_limits` probes the active backend once per host (cache-knee
+timing sweep on CPU, the runtime's reported allocator ceiling for device
+memory) and caches the quantised result on disk and in-process — see the
+"Measured limits" section below.  The static ``_BACKEND_LIMITS`` table
+survives as the prior for absent hardware and as the
+``REPRO_MEASURED_LIMITS=0`` escape hatch.
+
 The autotuner is *deterministic* and *shape-only*: given the same
 ``(n, d, m, pool)`` and backend it always returns the same
-:class:`TileConfig`, so jitted executables keyed on tile sizes never
-retrace between identical requests (the serving stack's zero-retrace
-invariant).  Every knob can still be pinned by hand through
+:class:`TileConfig` within a host, so jitted executables keyed on tile
+sizes never retrace between identical requests (the serving stack's
+zero-retrace invariant).  Every knob can still be pinned by hand through
 :class:`~repro.core.suco.EnginePolicy` / :class:`~repro.core.suco.SuCoConfig`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+import json
+import os
+import time
 import warnings
+from pathlib import Path
 
 import jax
 
@@ -33,6 +46,8 @@ __all__ = [
     "MemoryLimits",
     "TileConfig",
     "backend_limits",
+    "measured_backend_limits",
+    "static_backend_limits",
     "autotune_tiles",
     "autotune_build_block_n",
 ]
@@ -52,7 +67,9 @@ class MemoryLimits:
     hbm_bytes: int
 
 
-# Conservative defaults per backend; unknown backends fall back to "cpu".
+# Static priors per backend: the fallback when the measured probe is
+# disabled, fails, or is asked about a backend this host does not run.
+# Unknown backends fall back to "cpu".
 _BACKEND_LIMITS: dict[str, MemoryLimits] = {
     # ~16 MB VMEM per TensorCore; leave half for Pallas double-buffering.
     "tpu": MemoryLimits(fast_bytes=8 * 2**20, hbm_bytes=16 * 2**30),
@@ -63,24 +80,232 @@ _BACKEND_LIMITS: dict[str, MemoryLimits] = {
 }
 
 
+# --------------------------------------------------------------------------
+# Measured limits: probe the host once, cache per backend
+# --------------------------------------------------------------------------
+#
+# The static table above is a *prior*, not a measurement: the serving host's
+# actual cache topology and device memory decide whether a streamed chunk is
+# bandwidth-cheap.  ``backend_limits`` therefore runs a tiny calibration for
+# the backend this process is actually executing on — a timed reduction
+# sweep to find the cache knee (CPU) and the runtime's reported allocator
+# ceiling for device memory — and quantises the result so timing noise
+# cannot leak into tile shapes.  The probe runs at most once per host per
+# backend: results persist as JSON under ``$REPRO_TUNE_CACHE_DIR`` (default
+# ``~/.cache/repro/tuning``), keyed by device kind, and an in-process
+# ``lru_cache`` keeps the value bit-stable for jit static arguments — the
+# zero-retrace invariant.  ``REPRO_MEASURED_LIMITS=0`` disables the probe
+# entirely (static table only); backends other than the active one always
+# use the static prior (there is no hardware to measure).
+
+_MEASURE_ENV = "REPRO_MEASURED_LIMITS"  # "0" -> static table only
+_CACHE_DIR_ENV = "REPRO_TUNE_CACHE_DIR"  # override the on-disk cache dir
+_PROBE_VERSION = 1
+_HBM_QUANTUM = 1 << 30  # device memory quantised down to 1 GiB
+_FAST_MIN = 1 << 20  # measured fast memory clamps to [1 MiB, 64 MiB]
+_FAST_MAX = 1 << 26
+# A working set counts as cache-resident while its best per-byte reduction
+# time stays within this factor of the small-set baseline; the first size
+# past it is the knee.
+_KNEE_FACTOR = 1.6
+
+
+def _probe_cache_dir() -> Path:
+    env = os.environ.get(_CACHE_DIR_ENV)
+    if env:
+        return Path(env)
+    xdg = os.environ.get("XDG_CACHE_HOME")
+    base = Path(xdg) if xdg else Path(os.path.expanduser("~")) / ".cache"
+    return base / "repro" / "tuning"
+
+
+def _device_kind(backend: str) -> str:
+    try:
+        devs = jax.devices(backend)
+    except RuntimeError:
+        return ""
+    return devs[0].device_kind if devs else ""
+
+
+def _measure_hbm_bytes(backend: str) -> int | None:
+    """Device-memory ceiling: the runtime's own allocator limit where the
+    platform reports one (TPU/GPU ``memory_stats``), physical RAM on CPU."""
+    try:
+        dev = jax.devices(backend)[0]
+    except (RuntimeError, IndexError):
+        return None
+    try:
+        stats = dev.memory_stats() or {}
+    except Exception:
+        stats = {}
+    if stats.get("bytes_limit"):
+        return int(stats["bytes_limit"])
+    try:  # CPU backends rarely report allocator stats: physical RAM
+        return int(os.sysconf("SC_PHYS_PAGES")) * int(os.sysconf("SC_PAGE_SIZE"))
+    except (AttributeError, OSError, ValueError):
+        return None
+
+
+def _measure_cpu_fast_bytes() -> tuple[int | None, dict]:
+    """Find the cache knee with a timed reduction sweep.
+
+    Reduces float32 working sets of power-of-two sizes (256 KiB..64 MiB,
+    best-of-3 per size, ~16 MiB of traffic per timing) and returns half the
+    largest size whose per-byte time stays within ``_KNEE_FACTOR`` of the
+    small-set baseline — half, because the streamed chunk shares the level
+    with the kernel's double buffers.  Power-of-two candidates make the
+    result self-quantising: run-to-run timing noise must move the knee a
+    full octave to change the answer.
+    """
+    import numpy as np
+
+    sizes = [1 << p for p in range(18, 27)]
+    per_byte = []
+    for size in sizes:
+        arr = np.ones(size // 4, np.float32)
+        reps = max(1, (1 << 24) // size)
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                arr.sum()
+            best = min(best, (time.perf_counter() - t0) / (reps * size))
+        per_byte.append(best)
+    trace = {"sizes": sizes, "per_byte_ns": [t * 1e9 for t in per_byte]}
+    base = min(per_byte[:2])
+    fast = None
+    for size, t in zip(sizes, per_byte):
+        if t <= base * _KNEE_FACTOR:
+            fast = size
+        else:
+            break
+    if fast is None:
+        return None, trace
+    return _clamp(fast // 2, _FAST_MIN, _FAST_MAX), trace
+
+
+def _probe_limits(backend: str) -> tuple[MemoryLimits, dict]:
+    static = _BACKEND_LIMITS[backend]
+    hbm = _measure_hbm_bytes(backend)
+    hbm = (
+        max(_HBM_QUANTUM, _round_down(hbm, _HBM_QUANTUM))
+        if hbm
+        else static.hbm_bytes
+    )
+    trace: dict = {}
+    if backend == "cpu":
+        fast, trace = _measure_cpu_fast_bytes()
+        fast = fast if fast is not None else static.fast_bytes
+    else:
+        # VMEM / L2-slice budgets are not queryable through memory_stats;
+        # keep the per-backend prior and measure only the memory ceiling.
+        fast = static.fast_bytes
+    return MemoryLimits(fast_bytes=fast, hbm_bytes=hbm), trace
+
+
+@functools.lru_cache(maxsize=None)
+def _measured_limits(backend: str) -> MemoryLimits:
+    kind = _device_kind(backend)
+    path = _probe_cache_dir() / f"limits_{backend}.json"
+    try:
+        rec = json.loads(path.read_text())
+        if (
+            rec.get("version") == _PROBE_VERSION
+            and rec.get("backend") == backend
+            and rec.get("device_kind") == kind
+        ):
+            return MemoryLimits(int(rec["fast_bytes"]), int(rec["hbm_bytes"]))
+    except (OSError, ValueError, KeyError, TypeError):
+        pass  # missing / stale / corrupt cache: re-probe and rewrite
+    limits, trace = _probe_limits(backend)
+    rec = {
+        "version": _PROBE_VERSION,
+        "backend": backend,
+        "device_kind": kind,
+        "fast_bytes": limits.fast_bytes,
+        "hbm_bytes": limits.hbm_bytes,
+        "probe": trace,
+    }
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_name(f"{path.name}.{os.getpid()}.tmp")
+        tmp.write_text(json.dumps(rec, indent=2, sort_keys=True) + "\n")
+        os.replace(tmp, path)
+    except OSError:
+        pass  # unwritable cache dir: the in-process lru_cache still holds
+    return limits
+
+
+def static_backend_limits(backend: str | None = None) -> MemoryLimits:
+    """The static prior for ``backend`` (default: active), never measured.
+
+    For callers that need *host-independent* limits — the jaxlint entry
+    hooks pin their canonical tile shapes and bounded-intermediate budgets
+    to this model so the lint gate proves the same thing on every machine,
+    while serving plans against the measured truth."""
+    if backend is None:
+        backend = jax.default_backend()
+    if backend not in _BACKEND_LIMITS:
+        raise ValueError(
+            f"static_backend_limits: unknown backend {backend!r} "
+            f"(known: {sorted(_BACKEND_LIMITS)})"
+        )
+    return _BACKEND_LIMITS[backend]
+
+
+def measured_backend_limits(
+    backend: str | None = None, *, refresh: bool = False
+) -> MemoryLimits:
+    """Measured :class:`MemoryLimits` for ``backend`` (default: active).
+
+    Probes at most once per host per backend (JSON cache keyed by device
+    kind, plus an in-process ``lru_cache``); ``refresh=True`` drops both
+    caches and re-measures.  Only meaningful for the active backend —
+    others return the static prior via the same code path."""
+    if backend is None:
+        backend = jax.default_backend()
+    if backend not in _BACKEND_LIMITS:
+        raise ValueError(
+            f"measured_backend_limits: unknown backend {backend!r} "
+            f"(known: {sorted(_BACKEND_LIMITS)})"
+        )
+    if backend != jax.default_backend():
+        return _BACKEND_LIMITS[backend]
+    if refresh:
+        _measured_limits.cache_clear()
+        try:
+            (_probe_cache_dir() / f"limits_{backend}.json").unlink()
+        except OSError:
+            pass
+    return _measured_limits(backend)
+
+
 def backend_limits(backend: str | None = None) -> MemoryLimits:
     """Memory limits for ``backend`` (default: the active jax backend).
 
-    An unknown backend string falls back to the conservative CPU numbers —
-    with an explicit warning, since silently tiling a new accelerator with
-    CPU-sized chunks is a performance bug that should surface in logs."""
+    For the backend this process is running on, the limits are *measured*
+    (see :func:`measured_backend_limits`) unless ``REPRO_MEASURED_LIMITS=0``
+    pins the static table; other backends use the static prior.  An unknown
+    backend string falls back to the CPU model — with an explicit warning,
+    since silently tiling a new accelerator with CPU-sized chunks is a
+    performance bug that should surface in logs."""
+    active = jax.default_backend()
     if backend is None:
-        backend = jax.default_backend()
-    limits = _BACKEND_LIMITS.get(backend)
-    if limits is None:
+        backend = active
+    if backend not in _BACKEND_LIMITS:
         warnings.warn(
             f"backend_limits: unknown backend {backend!r}; falling back to "
             f"the conservative 'cpu' memory model "
             f"(known: {sorted(_BACKEND_LIMITS)})",
             stacklevel=2,
         )
-        limits = _BACKEND_LIMITS["cpu"]
-    return limits
+        backend = "cpu"
+    if backend == active and os.environ.get(_MEASURE_ENV, "1") != "0":
+        try:
+            return _measured_limits(backend)
+        except Exception:  # probe failure is never fatal: static prior
+            pass
+    return _BACKEND_LIMITS[backend]
 
 
 @dataclasses.dataclass(frozen=True)

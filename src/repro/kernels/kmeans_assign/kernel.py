@@ -114,6 +114,99 @@ def kmeans_assign_batched_kernel(
     )(x, centroids)
 
 
+def _pair_assign_hist_kernel(
+    x1_ref, x2_ref, c1_ref, c2_ref, w_ref, a1_ref, a2_ref, counts_ref
+):
+    j = pl.program_id(1)  # point-block index (innermost -> counts revisit)
+
+    @pl.when(j == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    d1 = _sqdist_block(x1_ref, c1_ref)  # (bn, k)
+    d2 = _sqdist_block(x2_ref, c2_ref)  # (bn, k)
+    a1 = jnp.argmin(d1, axis=1)  # (bn,)
+    a2 = jnp.argmin(d2, axis=1)
+    a1_ref[...] = a1.astype(jnp.int32)[None, :, None]
+    a2_ref[...] = a2.astype(jnp.int32)[None, :, None]
+    # The pair-cell histogram counts[c1, c2] factorises exactly as the
+    # matmul of the two weighted one-hots — sum_p oh1[p, c1] * oh2[p, c2]
+    # — so the (bn, k^2) flat-cell one-hot never exists: one (k, k) MXU
+    # contraction per block, f32-exact (counts < 2^24), padded points
+    # zeroed by the weight row.
+    _, kh, kw = counts_ref.shape
+    w = w_ref[...].astype(jnp.float32)[0]  # (bn,) 0/1 point weights
+    oh1 = (
+        a1[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, kh), 1)
+    ).astype(jnp.float32) * w[:, None]  # (bn, kh)
+    oh2 = (
+        a2[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, kw), 1)
+    ).astype(jnp.float32)  # (bn, kw)
+    counts_ref[...] += jax.lax.dot_general(
+        oh1,
+        oh2,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[None]  # (1, kh, kw)
+
+
+@functools.partial(jax.jit, static_argnames=("ns", "bn", "interpret"))
+def kmeans_pair_assign_hist_kernel(
+    x: jax.Array,  # (2*ns, n, s) paired half-subspace points
+    centroids: jax.Array,  # (2*ns, k, s) paired codebooks
+    weights: jax.Array,  # (1, n) 0/1 point weights
+    *,
+    ns: int,
+    bn: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused final assignment + IMI occupancy histogram for SuCo's paired
+    half-subspace layout: rows ``[:ns]`` of ``x``/``centroids`` are first
+    halves, ``[ns:]`` second halves of the same subspaces.
+
+    ``-> (a1 (ns, n, 1) int32, a2 (ns, n, 1) int32, counts (ns, kh, kw)
+    f32)`` where ``counts[i, c1, c2]`` is the weighted occupancy of IMI
+    cell ``c1 * k + c2`` in subspace ``i`` — the histogram that used to be
+    a second pass over the assignments rides the assignment kernel's grid.
+    Both halves of a subspace are visited in the *same* grid step (the
+    operands are passed twice with index maps offset by ``ns``), so the
+    pair cell is known while both argmin rows are still in VMEM and the
+    histogram accumulates into a revisiting ``(1, kh, kw)`` tile across
+    the (innermost) point-block dimension.
+
+    Caller pre-pads ``n % bn == 0`` and sizes ``kh``/``kw`` of the counts
+    tile; padded centroid rows must never win the argmin and padded points
+    carry weight 0.
+    """
+    _, n, s = x.shape
+    k = centroids.shape[1]
+    kh = -(-k // 8) * 8
+    kw = -(-k // 128) * 128
+    grid = (ns, n // bn)
+    return pl.pallas_call(
+        _pair_assign_hist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, s), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bn, s), lambda i, j: (i + ns, j, 0)),
+            pl.BlockSpec((1, k, s), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, k, s), lambda i, j: (i + ns, 0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn, 1), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bn, 1), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, kh, kw), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ns, n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((ns, n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((ns, kh, kw), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, x, centroids, centroids, weights)
+
+
 def _accumulate_stats(x_ref, c_ref, w_ref, sums_ref, counts_ref, inertia_ref):
     """Shared stats body: distance + argmin + weighted one-hot fold into the
     revisiting accumulator tiles.  Returns the block's argmin row."""

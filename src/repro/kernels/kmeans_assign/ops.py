@@ -20,11 +20,13 @@ import jax.numpy as jnp
 from repro.kernels.kmeans_assign.kernel import (
     kmeans_assign_batched_kernel,
     kmeans_assign_kernel,
+    kmeans_pair_assign_hist_kernel,
     kmeans_stats_kernel,
 )
 from repro.kernels.kmeans_assign.ref import (
     kmeans_assign_batched_ref,
     kmeans_assign_ref,
+    kmeans_pair_assign_hist_ref,
     kmeans_stats_ref,
 )
 
@@ -134,12 +136,54 @@ def kmeans_assign_stats(
     return a_out, sums[:, :k, :s], counts[:, :k], inertia[:, 0]
 
 
+@functools.partial(jax.jit, static_argnames=("bn", "impl", "interpret"))
+def kmeans_pair_assign_hist(
+    x: jax.Array,
+    centroids: jax.Array,
+    *,
+    bn: int = 1024,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused final assignment + IMI occupancy histogram:
+    ``(2*Ns, n, s), (2*Ns, k, s) -> (assign (2*Ns, n) int32,
+    cell_counts (Ns, k*k) int32)``.
+
+    SuCo's build needs both the final assignments *and* the per-subspace
+    IMI cell occupancy ``bincount(a1 * k + a2)``; this op produces both in
+    one streaming kernel pass — the histogram accumulates on the MXU as a
+    matmul of the two halves' one-hots into a revisiting ``(k, k)`` tile,
+    so no second pass over the assignments (and no scatter) ever runs.
+
+    ``impl``: "jnp" | "pallas" | "auto" (pallas iff running on TPU).
+    """
+    b = x.shape[0]
+    if b % 2:
+        raise ValueError(f"paired layout needs an even batch, got B={b}")
+    if _route_to_ref(impl, interpret):
+        return kmeans_pair_assign_hist_ref(x, centroids)
+    ns = b // 2
+    xp, cp, bn_, n, k, _ = _pad_batched(x, centroids, bn)
+    np_ = xp.shape[1]
+    w = (jnp.arange(np_, dtype=jnp.int32) < n).astype(jnp.float32)[None, :]
+    a1, a2, counts = kmeans_pair_assign_hist_kernel(
+        xp, cp, w, ns=ns, bn=bn_, interpret=interpret
+    )
+    a = jnp.concatenate([a1, a2], axis=0)[:, :n, 0]
+    # padded centroid rows never win the argmin, so their occupancy rows/
+    # columns are zero and the (real k)^2 slice is the exact histogram
+    counts = counts[:, :k, :k].reshape(ns, k * k).astype(jnp.int32)
+    return a, counts
+
+
 __all__ = [
     "kmeans_assign",
     "kmeans_assign_batched",
     "kmeans_assign_stats",
+    "kmeans_pair_assign_hist",
     "kmeans_assign_ref",
     "kmeans_assign_batched_ref",
+    "kmeans_pair_assign_hist_ref",
     "kmeans_stats_ref",
 ]
 
@@ -173,6 +217,17 @@ def jaxlint_entries():
         return jax.make_jaxpr(
             lambda x, c, w: kmeans_stats_kernel(
                 x, c, w, bn=bn, with_assign=True, interpret=True
+            )
+        )(
+            S((b, n, s), jnp.float32),
+            S((b, k, s), jnp.float32),
+            S((1, n), jnp.float32),
+        )
+
+    def make_pair_hist():
+        return jax.make_jaxpr(
+            lambda x, c, w: kmeans_pair_assign_hist_kernel(
+                x, c, w, ns=b // 2, bn=bn, interpret=True
             )
         )(
             S((b, n, s), jnp.float32),
@@ -214,6 +269,24 @@ def jaxlint_entries():
                 },
             },
             note="fused Lloyd sufficient statistics",
+        ),
+        TileEntry(
+            name="kernels.kmeans_assign.pair_hist",
+            make=make_pair_hist,
+            contract={
+                **TILE_CONTRACT,
+                "block_align": {
+                    0: ((1, 8), (2, 128)),  # x first halves (1, bn, s)
+                    1: ((1, 8), (2, 128)),  # x second halves (1, bn, s)
+                    2: ((1, 8), (2, 128)),  # centroids 1 (1, k, s)
+                    3: ((1, 8), (2, 128)),  # centroids 2 (1, k, s)
+                    4: ((1, 128),),  # weights (1, bn)
+                    5: ((1, 8),),  # a1 out (1, bn, 1)
+                    6: ((1, 8),),  # a2 out (1, bn, 1)
+                    7: ((1, 8), (2, 128)),  # counts (1, kh, kw)
+                },
+            },
+            note="fused pair assignment + MXU IMI occupancy histogram",
         ),
         JaxprEntry(
             name="kernels.kmeans_assign.oracle",

@@ -23,6 +23,27 @@ def kmeans_assign_batched_ref(x: jax.Array, centroids: jax.Array) -> jax.Array:
     return jax.vmap(kmeans_assign_ref)(x, centroids)
 
 
+def kmeans_pair_assign_hist_ref(
+    x: jax.Array, centroids: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused pair assignment + IMI histogram kernel.
+
+    ``x: (2*Ns, n, s)``, ``centroids: (2*Ns, k, s)`` in SuCo's paired
+    half-subspace layout -> ``(assign (2*Ns, n) int32, cell_counts
+    (Ns, k*k) int32)`` with ``cell_counts[i, a1*k + a2]`` the occupancy of
+    each IMI cell.
+    """
+    b = x.shape[0]
+    ns = b // 2
+    k = centroids.shape[1]
+    a = kmeans_assign_batched_ref(x, centroids)  # (2*Ns, n)
+    cells = a[:ns] * k + a[ns:]  # (Ns, n)
+    counts = jax.vmap(
+        lambda c: jnp.bincount(c, length=k * k).astype(jnp.int32)
+    )(cells)
+    return a, counts
+
+
 def kmeans_stats_ref(
     x: jax.Array, centroids: jax.Array, weights: jax.Array | None = None
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:

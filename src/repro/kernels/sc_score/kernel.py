@@ -82,6 +82,138 @@ def _cells_prefilter_kernel(
         keep_ref[...] = (score_ref[...] > thr.T).astype(jnp.int32)
 
 
+def _cells_prefilter_compact_kernel(
+    rank_ref, cut_ref, thr_ref, limit_ref, cell_ref,
+    score_ref, svcol_ref, svscore_ref, cnt_ref,
+    *, n_sub: int, bn: int, cap: int,
+):
+    j = pl.program_id(1)  # column-block index (sequential -> cnt accumulates)
+    i = pl.program_id(2)  # subspace index (innermost)
+
+    @pl.when((j == 0) & (i == 0))
+    def _init_survivors():
+        svcol_ref[...] = jnp.zeros_like(svcol_ref)
+        svscore_ref[...] = jnp.full_like(svscore_ref, -1)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    @pl.when(i == 0)
+    def _init_scores():
+        score_ref[...] = jnp.zeros_like(score_ref)
+
+    r = rank_ref[0]  # (bm, K) per-query cell ranks
+    cut = cut_ref[...].astype(jnp.int32)  # (1, bm) activation cutoffs
+    cells = cell_ref[0]  # (bn,) chunk cell ids
+    g = jnp.take(r, cells, axis=1)  # (bm, bn) rank of each point's cell
+    score_ref[...] += (g <= cut.T).astype(jnp.int32)
+
+    # Survivor compaction, fused into the last subspace visit: while the
+    # completed score tile is resident, columns past ``limit`` are masked
+    # to the -1 sentinel, the Pareto prefilter picks the survivors, and a
+    # running in-block cumsum assigns each survivor its destination slot.
+    # The slot write is a one-hot matmul on the MXU (scatter-free; each
+    # slot is written exactly once across the whole column sweep, so the
+    # += against the -1/0 initialisation recovers the exact value: the
+    # one-hot contraction sums integers < 2^24, exact in f32).  The
+    # (bm, bn, cap) one-hot is the kernel's VMEM high-water mark —
+    # ~bm*bn*cap*4 bytes, 4 MB at the (8, 512, 256) defaults — which the
+    # autotuner's survivor_cap model keeps inside the fast-memory budget.
+    @pl.when(i == n_sub - 1)
+    def _compact():
+        bm = score_ref.shape[0]
+        col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+        s = jnp.where(col < limit_ref[0, 0], score_ref[...], -1)
+        score_ref[...] = s
+        thr = thr_ref[...].astype(jnp.int32)  # (1, bm) pool minima
+        keep = s > thr.T  # (bm, bn)
+        incl = jnp.cumsum(keep.astype(jnp.int32), axis=1)  # (bm, bn)
+        base = cnt_ref[...][:, 0]  # (bm,) survivors before this block
+        dest = base[:, None] + incl - 1  # slot of each kept column
+        write = keep & (dest < cap)
+        onehot = (
+            (dest[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (bm, bn, cap), 2))
+            & write[:, :, None]
+        ).astype(jnp.float32)
+        batch_contract = (((1,), (1,)), ((0,), (0,)))
+        svscore_ref[...] += jax.lax.dot_general(
+            (s + 1).astype(jnp.float32), onehot,
+            dimension_numbers=batch_contract,
+            preferred_element_type=jnp.float32,
+        ).astype(jnp.int32)
+        svcol_ref[...] += jax.lax.dot_general(
+            col.astype(jnp.float32), onehot,
+            dimension_numbers=batch_contract,
+            preferred_element_type=jnp.float32,
+        ).astype(jnp.int32)
+        cnt_ref[...] += incl[:, -1:]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "cap", "interpret"))
+def sc_score_cells_prefilter_compact_kernel(
+    ranks: jax.Array,  # (Ns, m, K) per-(subspace, query) cell ranks
+    cuts: jax.Array,  # (Ns, m) activation cutoff ranks
+    thr: jax.Array,  # (1, m) carried pool minimum score per query
+    limit: jax.Array,  # (1, 1) number of valid (non-padding) columns
+    cells: jax.Array,  # (Ns, bc) cell ids of one data chunk
+    *,
+    bm: int = 8,
+    bn: int = 512,
+    cap: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused chunk stage with in-kernel survivor compaction.
+
+    :func:`sc_score_cells_prefilter_kernel` taken one step further: instead
+    of a keep-mask that the host graph still has to cumsum/searchsorted/
+    gather, the kernel emits the compacted survivors directly — the fused
+    query's score->prune stage becomes *one* kernel launch per chunk.
+
+    Outputs (all int32):
+
+    * ``scores (m, bc)`` — the chunk scores, columns ``>= limit`` masked
+      to the -1 sentinel (the caller no longer masks padding itself);
+    * ``surv_cols (m, cap)`` — chunk-local column of the j-th survivor in
+      ascending-column order (0 for empty slots);
+    * ``surv_scores (m, cap)`` — its score (-1 for empty slots);
+    * ``count (m, 1)`` — the *true* survivor count, which may exceed
+      ``cap`` (overflow slots are dropped; the caller detects
+      ``count > cap`` and falls back to an exact full merge).
+
+    The survivor tiles revisit across the whole (column-block, subspace)
+    grid sweep, so the running count threads destination slots across
+    column blocks without any host round trip.  Caller pre-pads
+    ``m % bm == bc % bn == 0`` and ``cap % 128 == 0``.
+    """
+    n_sub, m, k_cells = ranks.shape
+    bc = cells.shape[1]
+    grid = (m // bm, bc // bn, n_sub)
+    return pl.pallas_call(
+        functools.partial(
+            _cells_prefilter_compact_kernel, n_sub=n_sub, bn=bn, cap=cap
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, k_cells), lambda i, j, k: (k, i, 0)),
+            pl.BlockSpec((1, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((1, bm), lambda i, j, k: (0, i)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, cap), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, cap), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, bc), jnp.int32),
+            jax.ShapeDtypeStruct((m, cap), jnp.int32),
+            jax.ShapeDtypeStruct((m, cap), jnp.int32),
+            jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ranks, cuts, thr, limit, cells)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def sc_score_cells_prefilter_kernel(
     ranks: jax.Array,  # (Ns, m, K) per-(subspace, query) cell ranks

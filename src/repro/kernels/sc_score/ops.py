@@ -9,10 +9,12 @@ import jax.numpy as jnp
 
 from repro.kernels.sc_score.kernel import (
     sc_score_cells_kernel,
+    sc_score_cells_prefilter_compact_kernel,
     sc_score_cells_prefilter_kernel,
     sc_score_kernel,
 )
 from repro.kernels.sc_score.ref import (
+    sc_score_cells_prefilter_compact_ref,
     sc_score_cells_prefilter_ref,
     sc_score_cells_ref,
     sc_score_ref,
@@ -135,13 +137,79 @@ def sc_scores_cells_prefilter(
     return out_s[:m, :bc], out_k[:m, :bc].astype(bool)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("cap", "bm", "bn", "impl", "interpret")
+)
+def sc_scores_cells_prefilter_compact(
+    ranks: jax.Array,  # (Ns, m, K) per-(subspace, query) cell ranks
+    cuts: jax.Array,  # (Ns, m) activation cutoff ranks
+    cells: jax.Array,  # (Ns, bc) chunk cell ids
+    thr: jax.Array,  # (m,) carried pool minimum score per query
+    limit: jax.Array,  # () count of valid chunk columns (traced ok)
+    *,
+    cap: int,
+    bm: int = 8,
+    bn: int = 512,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One-launch chunk stage for the single-pass engine:
+    ``-> (scores, surv_cols, surv_scores, count)``.
+
+    :func:`sc_scores_cells_prefilter` plus the survivor compaction the
+    fused query used to run as a host-graph cumsum/searchsorted/gather —
+    here it happens while the score tile is still resident, so the whole
+    score -> prune stage is a single ``pallas_call`` per chunk.  Outputs
+    (all int32): the chunk scores with columns ``>= limit`` masked to the
+    -1 sentinel, the compacted chunk-local survivor columns and their
+    scores (``(m, cap)``, ascending-column order, 0 / -1 in empty slots),
+    and the *true* per-query survivor count (``(m,)``, may exceed ``cap``
+    — the caller's exact-fallback signal; overflowed slots are dropped).
+
+    Same ``impl`` dispatch and padding contract as
+    :func:`sc_scores_cells`; padded query rows get ``thr = INT32_MAX`` so
+    they never survive, and ``cap`` is rounded up to a lane multiple for
+    the kernel then sliced back.
+    """
+    if impl == "jnp" or (impl == "auto" and jax.default_backend() != "tpu"):
+        return sc_score_cells_prefilter_compact_ref(
+            ranks, cuts, cells, thr, limit, cap=cap
+        )
+    n_sub, m, k_cells = ranks.shape
+    bc = cells.shape[1]
+    int_max = jnp.iinfo(jnp.int32).max
+    bm_ = min(bm, _round_up(m, 8))
+    bn_ = min(bn, _round_up(bc, 128))
+    mp, bcp = _round_up(m, bm_), _round_up(bc, bn_)
+    kp = _round_up(k_cells, 128)
+    capp = _round_up(cap, 128)
+    rp = jnp.pad(
+        ranks, ((0, 0), (0, mp - m), (0, kp - k_cells)),
+        constant_values=int_max,
+    )
+    cutp = jnp.pad(cuts, ((0, 0), (0, mp - m)), constant_values=-1)
+    thrp = jnp.pad(
+        thr[None, :].astype(jnp.int32), ((0, 0), (0, mp - m)),
+        constant_values=int_max,
+    )
+    limp = jnp.reshape(limit, (1, 1)).astype(jnp.int32)
+    cellp = jnp.pad(cells, ((0, 0), (0, bcp - bc)))
+    out_s, out_c, out_ss, out_n = sc_score_cells_prefilter_compact_kernel(
+        rp, cutp, thrp, limp, cellp, bm=bm_, bn=bn_, cap=capp,
+        interpret=interpret,
+    )
+    return out_s[:m, :bc], out_c[:m, :cap], out_ss[:m, :cap], out_n[:m, 0]
+
+
 __all__ = [
     "sc_scores_fused",
     "sc_scores_cells",
     "sc_scores_cells_prefilter",
+    "sc_scores_cells_prefilter_compact",
     "sc_score_ref",
     "sc_score_cells_ref",
     "sc_score_cells_prefilter_ref",
+    "sc_score_cells_prefilter_compact_ref",
 ]
 
 
@@ -189,6 +257,39 @@ def jaxlint_entries():
             S((ns, bc), jnp.int32),
         )
 
+    def make_prefilter_compact():
+        return jax.make_jaxpr(
+            lambda r, c, t, lim, ce: sc_score_cells_prefilter_compact_kernel(
+                r, c, t, lim, ce, bm=8, bn=512, cap=128, interpret=True
+            )
+        )(
+            S((ns, m, K), jnp.int32),
+            S((ns, m), jnp.int32),
+            S((1, m), jnp.int32),
+            S((1, 1), jnp.int32),
+            S((ns, bc), jnp.int32),
+        )
+
+    def make_prefilter_compact_scan():
+        # The compact kernel as the fused query runs it: inside the chunk
+        # scan.  Gates the in-kernel compaction (cumsum + one-hot matmul)
+        # against the no-scatter/no-sort and accumulator-dtype rules.
+        def scan_compact(r, c, t, lim, cells_blocks):
+            def step(carry, ce):
+                outs = sc_score_cells_prefilter_compact_kernel(
+                    r, c, t, lim, ce, bm=8, bn=512, cap=128, interpret=True
+                )
+                return carry, outs[3]
+            return jax.lax.scan(step, jnp.zeros((), jnp.int32), cells_blocks)
+
+        return jax.make_jaxpr(scan_compact)(
+            S((ns, m, K), jnp.int32),
+            S((ns, m), jnp.int32),
+            S((1, m), jnp.int32),
+            S((1, 1), jnp.int32),
+            S((4, ns, bc), jnp.int32),
+        )
+
     def make_fused():
         return jax.make_jaxpr(
             lambda q, x, tau: sc_score_kernel(q, x, tau, bm=8, bn=512, interpret=True)
@@ -234,6 +335,34 @@ def jaxlint_entries():
                 },
             },
             note="fused chunk stage: scores + Pareto-prefilter mask",
+        ),
+        TileEntry(
+            name="kernels.sc_score.cells_prefilter_compact",
+            make=make_prefilter_compact,
+            contract={
+                **TILE_CONTRACT,
+                "block_align": {
+                    0: ((1, 8), (2, 128)),  # ranks (1, bm, K)
+                    1: ((1, 8),),  # cuts (1, bm)
+                    2: ((1, 8),),  # thr (1, bm)
+                    # 3: limit (1, 1) scalar — no alignment demand
+                    4: ((1, 128),),  # cells (1, bn)
+                    5: ((0, 8), (1, 128)),  # scores (bm, bn)
+                    6: ((0, 8), (1, 128)),  # surv_cols (bm, cap)
+                    7: ((0, 8), (1, 128)),  # surv_scores (bm, cap)
+                    8: ((0, 8),),  # count (bm, 1)
+                },
+            },
+            note="one-launch chunk stage: scores + in-kernel survivor compaction",
+        ),
+        JaxprEntry(
+            name="kernels.sc_score.prefilter_compact_scan",
+            make=make_prefilter_compact_scan,
+            rules=("no-scatter-in-scan", "pinned-accumulator"),
+            note=(
+                "compact kernel inside the chunk scan: the in-kernel "
+                "compaction stays scatter/sort-free"
+            ),
         ),
         TileEntry(
             name="kernels.sc_score.fused_distance",

@@ -33,6 +33,44 @@ def sc_score_cells_prefilter_ref(
     return s, s > thr[:, None]
 
 
+def sc_score_cells_prefilter_compact_ref(
+    ranks: jax.Array,
+    cuts: jax.Array,
+    cells: jax.Array,
+    thr: jax.Array,
+    limit: jax.Array,
+    *,
+    cap: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused score + prefilter + survivor-compaction stage.
+
+    ``thr: (m,)`` is the per-query carried pool minimum and ``limit`` the
+    (possibly traced) count of valid chunk columns; columns at or past it
+    are masked to the -1 score sentinel and can never survive.  Returns
+    ``(scores (m, bc), surv_cols (m, cap), surv_scores (m, cap),
+    count (m,))``: the j-th survivor (ascending column order, exactly the
+    keep-mask compaction the fused query used to run on the host) sits at
+    slot j; empty slots hold column 0 / score -1; ``count`` is the true
+    survivor count and may exceed ``cap`` (the caller's overflow signal).
+    The compaction is a binary search on the keep-mask's monotone cumsum —
+    no sort or scatter touches the ``(m, bc)`` block.
+    """
+    bc = cells.shape[1]
+    s = sc_score_cells_ref(ranks, cuts, cells)
+    col = jnp.arange(bc, dtype=jnp.int32)
+    s = jnp.where(col[None, :] < limit, s, -1)
+    keep = s > thr[:, None]
+    cnt = jnp.cumsum(keep.astype(jnp.int32), axis=1)
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    surv = jax.vmap(lambda row: jnp.searchsorted(row, slot + 1, side="left"))(cnt)
+    surv = jnp.minimum(surv, bc - 1).astype(jnp.int32)
+    total = cnt[:, -1]
+    live = slot[None, :] < total[:, None]
+    surv_cols = jnp.where(live, surv, 0)
+    surv_scores = jnp.where(live, jnp.take_along_axis(s, surv, axis=1), -1)
+    return s, surv_cols, surv_scores, total
+
+
 def sc_score_ref(qs: jax.Array, xs: jax.Array, tau: jax.Array) -> jax.Array:
     """``qs: (Ns,m,s), xs: (Ns,n,s), tau: (Ns,m) -> (m,n)`` int32 scores."""
     qf, xf = qs.astype(jnp.float32), xs.astype(jnp.float32)

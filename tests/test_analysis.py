@@ -50,9 +50,14 @@ def test_registry_covers_the_serving_surface():
         "suco.build_chunked",
         "sc_linear.query",
         "sc_linear.merge_pool_scan",
+        "sc_linear.merge_pool_counting_scan",
+        "sc_linear.merge_pool_with_dists_scan",
         "tuning.autotune_tiles",
         "kernels.sc_score.cells",
         "kernels.sc_score.cells_prefilter",
+        "kernels.sc_score.cells_prefilter_compact",
+        "kernels.sc_score.prefilter_compact_scan",
+        "kernels.kmeans_assign.pair_hist",
         "kernels.sc_score.fused_distance",
         "kernels.sc_score.oracle",
         "kernels.gather_rerank.kernel",

@@ -237,6 +237,29 @@ def test_engine_bit_identical_to_suco_query(ds, index):
             )
 
 
+def test_engine_merge_impl_switch_zero_retrace(ds, index):
+    """merge_impl is jit-static and rides EnginePolicy: warming an engine
+    on either impl compiles once per (bucket, k), serving after warmup
+    never retraces across the switch, and the counting-select merge
+    answers bit-identically to the baseline top_k merge."""
+    x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
+    results = {}
+    for impl in ("topk", "counting"):
+        policy = dataclasses.replace(POLICY, mode="fused", merge_impl=impl)
+        engine = SuCoEngine(x, index, policy)
+        engine.warmup(batch_sizes=(1, 4), ks=(10,))
+        warm = engine.compile_count
+        assert warm == 1  # sizes 1..4 share one bucket
+        for m in (1, 2, 4):
+            results[impl, m] = engine.query(q[:m], k=10)
+        retraces_after_warmup = engine.compile_count - warm
+        assert retraces_after_warmup == 0, impl
+    for m in (1, 2, 4):
+        a, b = results["topk", m], results["counting", m]
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+
+
 def test_engine_single_query_form(ds, index):
     x, q = jnp.asarray(ds.x), jnp.asarray(ds.queries)
     engine = SuCoEngine(x, index, POLICY)

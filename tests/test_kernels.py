@@ -138,6 +138,41 @@ def test_kmeans_stats_without_assign():
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
 
 
+@settings(max_examples=10, deadline=None)
+@given(
+    ns=st.integers(1, 4),
+    n=st.integers(1, 200),
+    k=st.integers(2, 30),
+    s=st.integers(1, 20),
+    seed=st.integers(0, 99),
+)
+def test_kmeans_pair_assign_hist_sweep(ns, n, k, s, seed):
+    """Fused pair assignment + IMI histogram: Pallas (interpret) vs oracle.
+    Assignments must be bit-identical to the batched kernel and the
+    histogram exact (one-hot matmul accumulates small integers in f32)."""
+    from repro.kernels.kmeans_assign.ops import kmeans_pair_assign_hist
+    from repro.kernels.kmeans_assign.ref import kmeans_pair_assign_hist_ref
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2 * ns, n, s)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(2 * ns, k, s)), jnp.float32)
+    a, counts = kmeans_pair_assign_hist(x, c, bn=64, impl="pallas", interpret=True)
+    aw, cw = kmeans_pair_assign_hist_ref(x, c)
+    assert a.dtype == jnp.int32 and counts.dtype == jnp.int32
+    assert (np.asarray(a) == np.asarray(aw)).all()
+    assert (np.asarray(counts) == np.asarray(cw)).all()
+    assert int(np.asarray(counts).sum()) == ns * n
+
+
+def test_kmeans_pair_assign_hist_rejects_odd_batch():
+    from repro.kernels.kmeans_assign.ops import kmeans_pair_assign_hist
+
+    x = jnp.zeros((3, 16, 4), jnp.float32)
+    c = jnp.zeros((3, 5, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        kmeans_pair_assign_hist(x, c, impl="jnp")
+
+
 # --------------------------- gather_rerank ----------------------------------
 
 
@@ -358,6 +393,46 @@ def test_sc_score_cells_prefilter_sweep(ns, m, k_cells, bc, seed):
     # the fused stage never perturbs the plain scores
     plain = sc_score_cells_ref(ranks, cuts, cells)
     assert (np.asarray(got_s) == np.asarray(plain)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    ns=st.integers(1, 8),
+    m=st.integers(1, 16),
+    k_cells=st.integers(4, 200),
+    bc=st.integers(1, 600),
+    cap=st.integers(1, 300),
+    seed=st.integers(0, 99),
+)
+def test_sc_score_cells_prefilter_compact_sweep(ns, m, k_cells, bc, cap, seed):
+    """Fused score + prune + in-kernel survivor compaction: Pallas
+    (interpret) vs jnp oracle, exact — including ragged tails (limit < bc),
+    overflow (total > cap, first ``cap`` survivors in ascending column
+    order), and the sentinel fill of dead slots."""
+    from repro.kernels.sc_score.ops import sc_scores_cells_prefilter_compact
+    from repro.kernels.sc_score.ref import sc_score_cells_prefilter_compact_ref
+
+    rng = np.random.default_rng(seed)
+    ranks = jnp.asarray(
+        np.stack([
+            np.stack([rng.permutation(k_cells) for _ in range(m)])
+            for _ in range(ns)
+        ]),
+        jnp.int32,
+    )
+    cuts = jnp.asarray(rng.integers(-1, k_cells, size=(ns, m)), jnp.int32)
+    cells = jnp.asarray(rng.integers(0, k_cells, size=(ns, bc)), jnp.int32)
+    thr = jnp.asarray(rng.integers(-1, ns + 1, size=(m,)), jnp.int32)
+    limit = jnp.int32(int(rng.integers(0, bc + 1)))
+    got = sc_scores_cells_prefilter_compact(
+        ranks, cuts, cells, thr, limit, cap=cap, impl="pallas", interpret=True
+    )
+    want = sc_score_cells_prefilter_compact_ref(
+        ranks, cuts, cells, thr, limit, cap=cap
+    )
+    for g, w in zip(got, want):
+        assert g.dtype == jnp.int32
+        assert (np.asarray(g) == np.asarray(w)).all()
 
 
 def test_sc_score_cells_equals_dense_suco_scores():

@@ -6,11 +6,17 @@ to pin the three algebraic facts the serving subsystem is built on:
 
 * :func:`repro.core.sc_linear.merge_topk_pool` is **chunking-invariant**
   (any ascending-id block partition reproduces the dense lexicographic
-  top-p selection bit-for-bit, under both impls), **order-invariant**
+  top-p selection bit-for-bit, under all three impls), **order-invariant**
   under ``impl="sort"`` (arbitrary block arrival order — the contract the
   docstring offers callers outside the streaming invariant), and its
   merged pool is a **fixed point** under sentinel merges (idempotence:
   draining an exhausted stream any number of times changes nothing).
+  The **counting-select** impl is additionally pinned **bitwise equal**
+  to the ``lax.top_k`` baseline on single merges of lawful pools — ties
+  at every score level, all-equal scores, duplicate ids across pool and
+  block, non-divisible widths, pools down to ``p=1`` — with and without
+  carried distances, and ``impl="auto"`` resolves to it exactly when the
+  scores are integer-ranged.
 * ``batch_bucket`` **padding never changes results**: the rowwise
   distance path is bitwise invariant to zero-padded batch rows, which is
   the exact property that makes a padded engine bucket return the
@@ -30,7 +36,7 @@ except ImportError:
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.distances import pairwise_dist
-from repro.core.sc_linear import merge_topk_pool
+from repro.core.sc_linear import merge_topk_pool, merge_topk_pool_with_dists
 from repro.core.suco import (
     DEFAULT_BATCH_BUCKETS,
     autoscale_buckets,
@@ -51,14 +57,15 @@ def _lex_topk(scores: np.ndarray, ids: np.ndarray, p: int):
     return np.asarray(out_s), np.asarray(out_i)
 
 
-def _merge_blocks(blocks, p: int, impl: str):
+def _merge_blocks(blocks, p: int, impl: str, smax=None):
     """Fold (scores, ids) blocks into a sentinel-initialised top-p pool."""
     m = blocks[0][0].shape[0]
     pool_s = jnp.full((m, p), -1, jnp.int32)
     pool_i = jnp.full((m, p), INT_MAX, jnp.int32)
     for s, i in blocks:
         pool_s, pool_i = merge_topk_pool(
-            pool_s, pool_i, jnp.asarray(s), jnp.asarray(i), impl=impl
+            pool_s, pool_i, jnp.asarray(s), jnp.asarray(i), impl=impl,
+            smax=smax,
         )
     return np.asarray(pool_s), np.asarray(pool_i)
 
@@ -93,9 +100,10 @@ def test_merge_topk_pool_chunking_invariant(case):
         np.pad(ids, ((0, 0), (0, p)), constant_values=INT_MAX),
         p,
     )
-    for impl in ("topk", "sort"):
+    for impl in ("topk", "sort", "counting"):
         got_s, got_i = _merge_blocks(
-            [(scores[:, a:b], ids[:, a:b]) for a, b in cuts], p, impl
+            [(scores[:, a:b], ids[:, a:b]) for a, b in cuts], p, impl,
+            smax=3 if impl == "counting" else None,
         )
         np.testing.assert_array_equal(got_s, want_s, err_msg=f"{impl} scores")
         np.testing.assert_array_equal(got_i, want_i, err_msg=f"{impl} ids")
@@ -125,8 +133,9 @@ def test_merge_topk_pool_idempotent_on_exhausted_stream(case):
     m, n = scores.shape
     ids = np.broadcast_to(np.arange(n, dtype=np.int32), (m, n))
     blocks = [(scores[:, a:b], ids[:, a:b]) for a, b in cuts]
-    for impl in ("topk", "sort"):
-        pool_s, pool_i = _merge_blocks(blocks, p, impl)
+    for impl in ("topk", "sort", "counting"):
+        smax = 3 if impl == "counting" else None
+        pool_s, pool_i = _merge_blocks(blocks, p, impl, smax=smax)
         sent_s = np.full((m, 7), -1, np.int32)
         sent_i = np.full((m, 7), INT_MAX, np.int32)
         again_s, again_i = pool_s, pool_i
@@ -134,9 +143,76 @@ def test_merge_topk_pool_idempotent_on_exhausted_stream(case):
             again_s, again_i = merge_topk_pool(
                 jnp.asarray(again_s), jnp.asarray(again_i),
                 jnp.asarray(sent_s), jnp.asarray(sent_i), impl=impl,
+                smax=smax,
             )
         np.testing.assert_array_equal(np.asarray(again_s), pool_s)
         np.testing.assert_array_equal(np.asarray(again_i), pool_i)
+
+
+@st.composite
+def _sorted_pool_and_block(draw):
+    """A lawful carried pool (sorted desc, sentinel tail) plus one incoming
+    block — the single-merge shape the counting impl must reproduce
+    bit-for-bit against the ``lax.top_k`` baseline.  Three score styles
+    stress the tie structure: random over the full 0..smax range (ties at
+    every level once smax is small), dense binary ties, and all-equal."""
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    m = draw(st.integers(1, 4))
+    p = draw(st.integers(1, 13))  # deliberately non-divisible, down to 1
+    bw = draw(st.integers(1, 37))
+    smax = draw(st.integers(0, 8))
+    style = draw(st.integers(0, 2))  # 0 random, 1 dense ties, 2 all-equal
+
+    def scores(shape):
+        if style == 2:
+            return np.full(shape, smax, np.int32)
+        hi = min(1, smax) if style == 1 else smax
+        return rng.integers(0, hi + 1, size=shape).astype(np.int32)
+
+    ps = -np.sort(-scores((m, p)), axis=1)  # pool rows sorted desc
+    live = rng.integers(0, p + 1, size=m)  # sentinel tail per row
+    dead = np.arange(p)[None, :] >= live[:, None]
+    ps = np.where(dead, -1, ps).astype(np.int32)
+    # ids are free to duplicate across pool and block: both impls select
+    # positionally, so parity must not depend on id uniqueness
+    pi = np.where(dead, INT_MAX, rng.integers(0, 50, size=(m, p)))
+    pd = np.where(dead, np.inf, rng.normal(size=(m, p))).astype(np.float32)
+    bs = scores((m, bw))
+    bi = rng.integers(0, 50, size=(m, bw)).astype(np.int32)
+    bd = rng.normal(size=(m, bw)).astype(np.float32)
+    return ps, pd, pi.astype(np.int32), bs, bd, bi, smax
+
+
+@given(_sorted_pool_and_block())
+@settings(max_examples=30)
+def test_counting_merge_bitwise_equals_topk(case):
+    """The counting-select merge is a drop-in for the lax.top_k baseline:
+    bit-identical pools for every tie structure (ties at every score
+    level, all-equal scores, duplicate ids across pool and block), pool
+    widths down to p=1, and non-divisible block widths — and
+    ``impl="auto"`` resolves to it exactly when the scores are declared
+    integer-ranged."""
+    ps, _pd, pi, bs, _bd, bi, smax = case
+    args = tuple(map(jnp.asarray, (ps, pi, bs, bi)))
+    want = merge_topk_pool(*args, impl="topk")
+    got = merge_topk_pool(*args, impl="counting", smax=smax)
+    auto = merge_topk_pool(*args, impl="auto", smax=smax)
+    for g, a, w in zip(got, auto, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(g))
+
+
+@given(_sorted_pool_and_block())
+@settings(max_examples=20)
+def test_counting_merge_with_dists_bitwise_equals_topk(case):
+    """Same contract for the fused engine's joint (score, dist, id) pool:
+    the carried exact distances ride the identical selection."""
+    ps, pd, pi, bs, bd, bi, smax = case
+    args = tuple(map(jnp.asarray, (ps, pd, pi, bs, bd, bi)))
+    want = merge_topk_pool_with_dists(*args, impl="topk")
+    got = merge_topk_pool_with_dists(*args, impl="counting", smax=smax)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
 @st.composite
