@@ -20,8 +20,13 @@ runs the resilience smoke (``BENCH_serve_chaos.json``): a forced
 degrade/recover walk down the degradation ladder with
 ``retraces_after_warmup == 0`` asserted, plus the flood-overload replay
 comparing admission control + degradation against an uncontrolled
-server.  ``--toy`` is the CI smoke form for any of these: shrunk sizes,
-writes the ``*.toy.json`` artifact.
+server.  ``--suite serve_mutation`` runs the live-mutation lane (insert
+throughput, tombstone-delete visibility, warm re-index handoff with a
+~0 swap pause and recall before/after the re-cluster) and merges a
+``mutation`` section into ``BENCH_serve.json`` — run it after ``serve``
+so one artifact carries the whole serving trajectory.  ``--toy`` is the
+CI smoke form for any of these: shrunk sizes, writes the ``*.toy.json``
+artifact.
 """
 
 from __future__ import annotations
@@ -49,6 +54,7 @@ SUITES = {
     "serve": "benchmarks.serve",
     "serve_async": "benchmarks.serve:run_async",
     "serve_chaos": "benchmarks.serve_chaos",
+    "serve_mutation": "benchmarks.serve_mutation",
 }
 
 

@@ -1,0 +1,227 @@
+"""Live-mutation serving suite: insert throughput, swap pause, recall
+across a re-cluster.
+
+Run via ``python -m benchmarks.run --suite serve_mutation --toy`` — the
+CI lane for the ISSUE-9 mutation surface.  Emits a ``mutation`` section
+*into* ``BENCH_serve.json`` (``.toy.json`` under ``--toy``), merging with
+whatever the ``serve`` suite wrote earlier in the same run so one
+artifact carries the whole serving trajectory; run it after ``serve``
+(CI does) or standalone (a minimal artifact is created).
+
+Three tracked claims:
+
+* ``insert`` — slot-insert throughput through a serving
+  :class:`~repro.serve.ann.AnnServer` (points/s, host wall time), with
+  queries interleaved between batches and
+  ``retraces_after_warmup == 0`` asserted across the whole mutation run.
+* ``delete`` — tombstone throughput plus the query-visible contract:
+  the batch dispatched right after a delete contains none of the ids.
+* ``swap`` — the warm re-index handoff: live-corpus gather + ``minibatch``
+  re-cluster + successor warmup happen off the serving path (reported as
+  ``prepare_s``), and the :meth:`~repro.serve.ann.AnnServer.swap` call
+  itself — the only moment the serving surface is touched — is the
+  ``swap_pause`` row, which must be orders of magnitude below a single
+  query step (~0).  Recall@k against brute force over the live corpus is
+  reported before and after the re-cluster: the handoff must not cost
+  answer quality.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+
+from benchmarks.common import Row
+from benchmarks.serve import FULL, OUT_PATH, TOY, TOY_OUT_PATH
+from repro.core import EnginePolicy, SuCoConfig, SuCoEngine
+from repro.core.suco import build_index
+from repro.data import GENERATORS
+from repro.serve.ann import AnnServer
+from repro.serve.mutation import DriftMonitor, warm_like
+
+# Mutation load relative to the corpus: insert 10%, delete 10%.
+MUTATION_FRACTION = 0.10
+QUERY_BURSTS = 4  # query batches interleaved between mutation batches
+
+
+def _brute_recall(engine: SuCoEngine, queries: np.ndarray, k: int) -> float:
+    """Mean recall@k of the engine answer vs brute force on live points."""
+    res = engine.query(queries, k=k)
+    ids = np.asarray(res.ids)
+    x = np.asarray(engine.x)
+    tomb = np.asarray(engine.index.tombstone)
+    live = np.flatnonzero(~tomb)
+    hits = 0
+    for i, q in enumerate(queries):
+        d2 = ((x[live] - q[None]) ** 2).sum(axis=1)
+        want = set(live[np.argsort(d2)[:k]].tolist())
+        hits += len(want & set(map(int, ids[i])))
+    return hits / (len(queries) * k)
+
+
+def _run_mutation(scale: dict) -> dict:
+    n, d = scale["n"], scale["d"]
+    k = 10
+    x = np.asarray(GENERATORS["gaussian_mixture"](n, d, 0)).astype(np.float32)
+    config = SuCoConfig(
+        n_subspaces=scale["n_subspaces"], sqrt_k=scale["sqrt_k"],
+        kmeans_iters=scale["kmeans_iters"], seed=0,
+    )
+    policy = EnginePolicy(alpha=0.05, beta=0.01, mode="streaming")
+    n_mut = max(int(n * MUTATION_FRACTION), 64)
+    t0 = time.perf_counter()
+    engine = SuCoEngine(
+        jax.numpy.asarray(x), build_index(jax.numpy.asarray(x), config),
+        policy, capacity=n + n_mut,
+    )
+    build_s = time.perf_counter() - t0
+    server = AnnServer(engine, max_batch=scale["max_batch"])
+    engine.warmup(batch_sizes=(1, scale["max_batch"]), ks=(k,))
+    exe0 = server.executables
+
+    rng = np.random.default_rng(0)
+    queries = x[rng.integers(0, n, size=scale["max_batch"])]
+    new_rows = (
+        x[rng.integers(0, n, size=n_mut)]
+        + 0.05 * rng.standard_normal((n_mut, d)).astype(np.float32)
+    )
+
+    # -- insert throughput, queries interleaved -----------------------------
+    batch = max(n_mut // QUERY_BURSTS, 1)
+    t0 = time.perf_counter()
+    for i in range(0, n_mut, batch):
+        server.insert(new_rows[i:i + batch])
+        engine.query(queries, k=k)
+    insert_s = time.perf_counter() - t0
+    insert = dict(
+        n_inserted=n_mut,
+        batch=batch,
+        wall_s=round(insert_s, 4),
+        points_per_s=round(n_mut / insert_s, 1),
+        retraces_after_warmup=server.executables - exe0,
+    )
+
+    # -- delete + visibility -----------------------------------------------
+    dead = rng.choice(n, size=n_mut, replace=False)
+    t0 = time.perf_counter()
+    n_deleted = server.delete(dead)
+    delete_s = time.perf_counter() - t0
+    ids_after = np.asarray(engine.query(queries, k=k).ids)
+    leaked = int(np.isin(ids_after, dead).sum())
+    assert leaked == 0, f"{leaked} tombstoned ids served after delete"
+    delete = dict(
+        n_deleted=int(n_deleted),
+        wall_s=round(delete_s, 4),
+        points_per_s=round(n_deleted / delete_s, 1),
+        tombstoned_ids_served=leaked,
+    )
+
+    # -- drift + warm re-index handoff -------------------------------------
+    monitor = DriftMonitor().capture(engine)
+    recall_before = _brute_recall(engine, queries, k)
+    drift = monitor.observe(engine)
+    t0 = time.perf_counter()
+    tomb = np.asarray(engine.index.tombstone)
+    live = np.flatnonzero(~tomb)
+    x_live = jax.numpy.asarray(np.asarray(engine.x)[live])
+    successor = SuCoEngine(
+        x_live,
+        build_index(x_live, dataclasses.replace(config, build_mode="minibatch")),
+        EnginePolicy(alpha=0.05, beta=0.01, mode="streaming"),
+        capacity=len(live) + n_mut,
+    )
+    warm_like(successor, engine)
+    prepare_s = time.perf_counter() - t0
+    exe_post_warm = successor.compile_count
+    t0 = time.perf_counter()
+    server.swap(successor)
+    swap_pause_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    engine.release_retired()  # deferred predecessor-executable teardown
+    release_s = time.perf_counter() - t0
+    # Answers must keep flowing on the successor with zero retrace; ids
+    # renumbered by the compaction, so recall is re-measured vs brute force.
+    recall_after = _brute_recall(engine, queries, k)
+    step_ids = np.asarray(engine.query(queries, k=k).ids)
+    assert step_ids.shape == (len(queries), k)
+    retraces_successor = successor.compile_count - exe_post_warm
+    assert retraces_successor == 0, "handoff retraced on the successor"
+    swap = dict(
+        n_live=int(len(live)),
+        drift_tv=round(drift.tv_distance, 4),
+        drift_dead_fraction=round(drift.dead_fraction, 4),
+        prepare_s=round(prepare_s, 4),
+        swap_pause_s=round(swap_pause_s, 6),
+        release_s=round(release_s, 6),
+        recall_before=round(recall_before, 4),
+        recall_after=round(recall_after, 4),
+        retraces_after_warmup=retraces_successor,
+    )
+    return dict(
+        build_s=round(build_s, 3),
+        capacity=n + n_mut,
+        insert=insert,
+        delete=delete,
+        swap=swap,
+    )
+
+
+def collect(*, toy: bool = False, out_path: Path | None = None) -> dict:
+    scale = TOY if toy else FULL
+    if out_path is None:
+        out_path = TOY_OUT_PATH if toy else OUT_PATH
+    section = _run_mutation(scale)
+    # Merge into the serve artifact: one file carries the whole serving
+    # trajectory.  Standalone runs create a minimal artifact.
+    if out_path.exists():
+        payload = json.loads(out_path.read_text())
+    else:
+        payload = dict(
+            meta=dict(
+                schema="suco-serve-v1",
+                backend=jax.default_backend(),
+                toy=toy,
+                n=scale["n"],
+                d=scale["d"],
+            )
+        )
+    payload["mutation"] = section
+    out_path.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def run(*, toy: bool = False) -> list[Row]:
+    payload = collect(toy=toy)
+    m = payload["mutation"]
+    ins, dele, swap = m["insert"], m["delete"], m["swap"]
+    return [
+        (
+            "serve_mutation/insert",
+            ins["wall_s"] / max(ins["n_inserted"], 1) * 1e6,
+            f"points_per_s={ins['points_per_s']};"
+            f"retraces={ins['retraces_after_warmup']}",
+        ),
+        (
+            "serve_mutation/delete",
+            dele["wall_s"] / max(dele["n_deleted"], 1) * 1e6,
+            f"points_per_s={dele['points_per_s']};"
+            f"tombstoned_served={dele['tombstoned_ids_served']}",
+        ),
+        (
+            "serve_mutation/swap",
+            swap["swap_pause_s"] * 1e6,
+            f"prepare_s={swap['prepare_s']};"
+            f"recall={swap['recall_before']}->{swap['recall_after']};"
+            f"retraces={swap['retraces_after_warmup']}",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run(toy=True):
+        print(",".join(map(str, r)))

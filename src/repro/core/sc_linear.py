@@ -22,6 +22,7 @@ from repro.core.distances import Metric, pairwise_dist
 
 __all__ = [
     "QueryResult",
+    "candidate_pool_size",
     "sc_scores_from_subspaces",
     "sc_linear_query",
     "rerank",
@@ -29,6 +30,25 @@ __all__ = [
     "merge_topk_pool",
     "merge_topk_pool_with_dists",
 ]
+
+
+def candidate_pool_size(n: int, k: int, beta: float) -> int:
+    """Candidate-pool width for an Alg. 1 re-rank: ``beta * n`` clamped to
+    ``[k, n]``.
+
+    The single source of truth for every ``beta * n`` call site (local
+    dense/streaming/fused queries, SC-Linear, the sharded engine).  The
+    upper clamp matters once ``n`` is a *live* count — after deletions
+    ``int(beta * n_total)`` can exceed the survivors, and the lower clamp
+    keeps the pool at least ``k`` wide however small ``beta * n`` gets.
+    The result is never larger than ``max(k, n)``; callers validate
+    ``k <= n`` separately.
+    """
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    return max(k, min(int(beta * n), n))
 
 
 class QueryResult(NamedTuple):
@@ -85,6 +105,16 @@ def rerank_candidates(
         # batch size, so zero-padded serving batches (SuCoEngine buckets)
         # rerank bit-identically to the unpadded computation.
         d = pairwise_dist(qi[None], xc, metric, impl="rowwise")[0]  # (p,)
+        # Score < 0 marks a non-candidate slot: pool sentinels and (under
+        # live mutation) tombstoned rows.  Real SC-scores are >= 0, so this
+        # is a no-op on full immutable pools, and it guarantees a masked
+        # slot can never win the distance top_k however close its row is.
+        bad = (
+            jnp.inf
+            if jnp.issubdtype(d.dtype, jnp.floating)
+            else jnp.iinfo(d.dtype).max
+        )
+        d = jnp.where(cs_i < 0, bad, d)
         neg, pos = jax.lax.top_k(-d, k)
         ids = jnp.take(cand_i, pos)
         return QueryResult(ids.astype(jnp.int32), -neg, jnp.take(cs_i, pos))
@@ -370,7 +400,7 @@ def sc_linear_query(
     qs = subspace.split_padded(spec, qp)  # (Ns, m, s)
     c = subspace.collision_count(n, alpha)
     scores = sc_scores_from_subspaces(xs, qs, c, metric)  # (m, n)
-    n_candidates = max(k, int(beta * n))
+    n_candidates = candidate_pool_size(n, k, beta)
     return rerank(x, q, scores, k, n_candidates, metric)
 
 
@@ -386,7 +416,7 @@ def jaxlint_entries():
     n, d, m, k = 4_096, 32, 8, 10
     alpha, beta = 0.05, 0.05
     spec = subspace.contiguous_spec(d, 8)
-    pool = max(k, int(beta * n))
+    pool = candidate_pool_size(n, k, beta)
 
     def make_query():
         S = jax.ShapeDtypeStruct

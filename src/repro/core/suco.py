@@ -99,6 +99,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import os
+import tempfile
 import zipfile
 from typing import Iterable, Mapping, NamedTuple, Sequence
 
@@ -108,9 +110,10 @@ import numpy as np
 
 from repro.core import subspace as sub
 from repro.core.distances import Metric, pairwise_dist
-from repro.core.kmeans import kmeans_batched
+from repro.core.kmeans import assign_scan, block_batched, kmeans_batched
 from repro.core.sc_linear import (
     QueryResult,
+    candidate_pool_size,
     merge_topk_pool,
     merge_topk_pool_with_dists,
     rerank,
@@ -137,7 +140,9 @@ __all__ = [
     "STREAMING_MIN_N",
     "INDEX_ARTIFACT_VERSION",
     "ArtifactError",
+    "CapacityError",
     "load_index_artifact",
+    "assign_points",
     "EnginePolicy",
     "EngineStats",
     "SuCoEngine",
@@ -156,8 +161,11 @@ _BUILD_MODES = ("auto", "dense", "chunked", "minibatch")
 
 # SuCoIndex.save/load artifact contract: a plain .npz, tagged and
 # version-stamped so a serving process refuses artifacts it cannot trust.
+# Version 2 added the optional "tombstone" key (live-mutation deletes);
+# version-1 artifacts load unchanged with no tombstones.
 _ARTIFACT_MAGIC = "suco-index"
-INDEX_ARTIFACT_VERSION = 1
+INDEX_ARTIFACT_VERSION = 2
+_ARTIFACT_READABLE_VERSIONS = (1, 2)
 
 # Keys every readable artifact must carry (the optional config_* block is
 # allowed to be absent; these are not).
@@ -185,6 +193,16 @@ class ArtifactError(ValueError):
     ``zipfile.BadZipFile`` into a serving process.  Subclasses
     ``ValueError`` so existing ``pytest.raises(ValueError)`` gates and
     caller-side handling keep working.
+    """
+
+
+class CapacityError(ValueError):
+    """A mutable :class:`SuCoEngine` ran out of pre-allocated insert slots.
+
+    Raised by :meth:`SuCoEngine.insert` when the batch does not fit in the
+    remaining ``capacity`` — the signal for the serving layer to trigger a
+    re-index + swap (:mod:`repro.serve.mutation`) onto a larger successor.
+    Subclasses ``ValueError`` for uniform caller-side handling.
     """
 
 
@@ -216,7 +234,16 @@ class SuCoConfig:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class SuCoIndex:
-    """The SuCo index: centroid codebooks + dense IMI occupancy arrays."""
+    """The SuCo index: centroid codebooks + dense IMI occupancy arrays.
+
+    ``tombstone`` (live mutation, optional): a ``(n,) bool`` mask, True for
+    deleted (or not-yet-inserted) slots.  ``None`` — the build/load default
+    — means every point is live; the immutable query graphs are unchanged.
+    A present mask is threaded through every query path's keep-mask so a
+    tombstoned id can never enter a candidate pool.  ``cell_counts`` always
+    reflects the *live* points only (deletes decrement it), keeping the
+    Dynamic-Activation prefix honest after mutation.
+    """
 
     centroids1: jax.Array  # (Ns, sqrtK, h_max)
     centroids2: jax.Array  # (Ns, sqrtK, h_max)
@@ -224,6 +251,7 @@ class SuCoIndex:
     cell_counts: jax.Array  # (Ns, K) int32
     spec: sub.SubspaceSpec = dataclasses.field(metadata=dict(static=True))
     sqrt_k: int = dataclasses.field(metadata=dict(static=True))
+    tombstone: jax.Array | None = None  # (n,) bool, True = deleted slot
 
     @property
     def n_cells(self) -> int:
@@ -233,12 +261,88 @@ class SuCoIndex:
     def n_points(self) -> int:
         return self.cell_ids.shape[1]
 
+    @property
+    def n_live(self) -> int:
+        """Live (non-tombstoned) point count; ``n_points`` when immutable."""
+        if self.tombstone is None:
+            return self.n_points
+        return self.n_points - int(jnp.sum(self.tombstone))
+
     def memory_bytes(self) -> int:
         """Index footprint (the paper's `O(sqrt(K) d + n Ns)` claim)."""
-        return sum(
-            a.size * a.dtype.itemsize
-            for a in (self.centroids1, self.centroids2, self.cell_ids, self.cell_counts)
+        arrays = [self.centroids1, self.centroids2, self.cell_ids, self.cell_counts]
+        if self.tombstone is not None:
+            arrays.append(self.tombstone)
+        return sum(a.size * a.dtype.itemsize for a in arrays)
+
+    # ---- live mutation ---------------------------------------------------
+
+    def insert(self, x_new: jax.Array, *, block_n: int = 4096) -> "SuCoIndex":
+        """Append ``x_new: (b, d)`` points, assigned to the existing
+        centroids — paper Alg. 2's assignment step only, no re-cluster.
+
+        Returns a new index with ``b`` extra live columns: ``cell_ids``
+        grows by the chunked :func:`~repro.core.kmeans.assign_scan`
+        assignment (the same pass the streaming build runs per chunk),
+        ``cell_counts`` absorbs the new occupancy, and the tombstone mask
+        (when present) extends with ``False``.  Ids of existing points are
+        stable; the new points get ids ``n_points .. n_points + b - 1``.
+        Shapes change, so engines serving a fixed-capacity layout use
+        :meth:`SuCoEngine.insert` (slot writes, zero retrace) instead.
+        """
+        x_new = jnp.asarray(x_new)
+        if x_new.ndim == 1:
+            x_new = x_new[None]
+        if x_new.ndim != 2 or x_new.shape[-1] != self.spec.d:
+            raise ValueError(
+                f"points must be (b, {self.spec.d}), got {x_new.shape}"
+            )
+        cells, counts_delta, _ = assign_points(
+            x_new, self.centroids1, self.centroids2,
+            spec=self.spec, sqrt_k=self.sqrt_k, block_n=block_n,
         )
+        tomb = self.tombstone
+        if tomb is not None:
+            tomb = jnp.concatenate([tomb, jnp.zeros(x_new.shape[0], bool)])
+        return dataclasses.replace(
+            self,
+            cell_ids=jnp.concatenate([self.cell_ids, cells], axis=1),
+            cell_counts=self.cell_counts + counts_delta,
+            tombstone=tomb,
+        )
+
+    def delete(self, ids) -> "SuCoIndex":
+        """Tombstone the given point ids (idempotent; duplicate ids fine).
+
+        Returns a new index whose tombstone mask marks the ids deleted and
+        whose ``cell_counts`` drops the *newly* deleted points' occupancy —
+        re-deleting an already-dead id changes nothing.  Shapes are
+        preserved, so a :class:`SuCoEngine` can rebind the result without
+        retracing.
+        """
+        ids = np.unique(np.asarray(ids, dtype=np.int64))
+        if ids.size == 0:
+            return self
+        if ids[0] < 0 or ids[-1] >= self.n_points:
+            raise ValueError(
+                f"ids must be in [0, {self.n_points}), got range "
+                f"[{ids[0]}, {ids[-1]}]"
+            )
+        ids = jnp.asarray(ids, jnp.int32)
+        tomb = (
+            jnp.zeros(self.n_points, bool)
+            if self.tombstone is None
+            else self.tombstone
+        )
+        newly = jnp.logical_not(tomb[ids])  # idempotence: only live ids count
+        tomb = tomb.at[ids].set(True)
+        # Drop the newly dead points from the IMI occupancy so the
+        # Dynamic-Activation prefix keeps targeting live mass.
+        dead_cells = self.cell_ids[:, ids]  # (Ns, b)
+        rows = jnp.arange(self.cell_ids.shape[0], dtype=jnp.int32)[:, None]
+        w = jnp.broadcast_to(newly.astype(jnp.int32), dead_cells.shape)
+        counts = self.cell_counts.at[rows, dead_cells].add(-w)
+        return dataclasses.replace(self, cell_counts=counts, tombstone=tomb)
 
     def save(self, path, config: SuCoConfig | None = None) -> None:
         """Persist the index as a version-stamped ``.npz`` artifact.
@@ -249,6 +353,13 @@ class SuCoIndex:
         reconstruct the index without the original build.  Round trips are
         bit-identical.  Written via an open file handle so the exact
         ``path`` is honoured (``np.savez`` alone appends ``.npz``).
+
+        The write is **atomic**: the payload lands in a same-directory
+        temp file, is fsynced, and is ``os.replace``d onto ``path`` — a
+        crash mid-write can never truncate or corrupt an artifact a
+        serving process is about to (re)load.  This is what lets the
+        re-index handoff (:mod:`repro.serve.mutation`) publish successor
+        artifacts under a live server.
         """
         payload: dict[str, np.ndarray] = {
             "artifact": np.asarray(_ARTIFACT_MAGIC),
@@ -263,6 +374,8 @@ class SuCoIndex:
             "spec_perm": np.asarray(self.spec.perm, np.int32),
             "spec_bounds": np.asarray(self.spec.bounds, np.int32),
         }
+        if self.tombstone is not None:
+            payload["tombstone"] = np.asarray(self.tombstone, np.uint8)
         if config is not None:
             payload.update(
                 config_n_subspaces=np.asarray(config.n_subspaces, np.int32),
@@ -272,8 +385,26 @@ class SuCoIndex:
                 config_build_mode=np.asarray(config.build_mode),
                 config_block_n=np.asarray(config.block_n, np.int32),
             )
-        with open(path, "wb") as f:
-            np.savez(f, **payload)
+        path = os.fspath(path)
+        parent = os.path.dirname(path) or "."
+        # Same directory: os.replace is atomic only within a filesystem.
+        fd, tmp = tempfile.mkstemp(
+            dir=parent, prefix=os.path.basename(path) + ".", suffix=".tmp"
+        )
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **payload)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            # A failed write must not leave temp litter next to the live
+            # artifact; the artifact itself was never touched.
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     @classmethod
     def load(cls, path) -> "SuCoIndex":
@@ -363,6 +494,39 @@ def build_index(x: jax.Array, config: SuCoConfig, *, spec: sub.SubspaceSpec | No
     return SuCoIndex(c1, c2, cell_ids, counts, spec=spec, sqrt_k=config.sqrt_k)
 
 
+@functools.partial(jax.jit, static_argnames=("spec", "sqrt_k", "block_n"))
+def assign_points(
+    x_new: jax.Array,
+    centroids1: jax.Array,
+    centroids2: jax.Array,
+    *,
+    spec: sub.SubspaceSpec,
+    sqrt_k: int,
+    block_n: int = 4096,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Assign ``x_new: (b, d)`` to existing centroids, chunked.
+
+    The incremental-insert core: exactly the build's final-assignment pass
+    (:func:`repro.core.kmeans.assign_scan` with the fused IMI histogram)
+    over just the new points.  Returns ``(cell_ids (Ns, b) int32,
+    counts_delta (Ns, K) int32, inertia () f32)`` — the occupancy delta to
+    add to ``cell_counts`` and the new points' assignment inertia (the
+    drift monitor's statistic: rising per-point insert inertia vs. the
+    build baseline means the centroids no longer describe the data).
+    """
+    ns = spec.n_subspaces
+    b = x_new.shape[0]
+    xp = sub.permute(spec, x_new)
+    h1, h2 = sub.split_halves_padded(spec, xp)  # 2 x (Ns, b, h_max)
+    both = jnp.concatenate([h1, h2], axis=0)  # (2Ns, b, h_max)
+    cents = jnp.concatenate([centroids1, centroids2], axis=0)
+    blocks, valid = block_batched(both, block_n)
+    a, inertia, counts = assign_scan(blocks, valid, cents, pair_sqrt_k=sqrt_k)
+    a = a[:, :b]
+    cells = (a[:ns] * sqrt_k + a[ns:]).astype(jnp.int32)  # (Ns, b)
+    return cells, counts, jnp.sum(inertia)
+
+
 def load_index_artifact(path) -> tuple[SuCoIndex, SuCoConfig | None]:
     """Load a ``SuCoIndex.save`` artifact -> ``(index, build config | None)``.
 
@@ -393,7 +557,7 @@ def load_index_artifact(path) -> tuple[SuCoIndex, SuCoConfig | None]:
             )
         try:
             version = int(z["version"][()])
-            if version != INDEX_ARTIFACT_VERSION:
+            if version not in _ARTIFACT_READABLE_VERSIONS:
                 raise ArtifactError(
                     f"{path!s}: unsupported {_ARTIFACT_MAGIC} artifact version "
                     f"{version} (this build reads version "
@@ -405,6 +569,14 @@ def load_index_artifact(path) -> tuple[SuCoIndex, SuCoConfig | None]:
                 perm=tuple(int(p) for p in z["spec_perm"]),
                 bounds=tuple(int(b) for b in z["spec_bounds"]),
             )
+            # "tombstone" is the one version-2 key; absent (every v1
+            # artifact, and v2 saves of never-mutated indexes) means all
+            # points are live.
+            tombstone = (
+                jnp.asarray(z["tombstone"].astype(bool))
+                if "tombstone" in names
+                else None
+            )
             index = SuCoIndex(
                 centroids1=jnp.asarray(z["centroids1"]),
                 centroids2=jnp.asarray(z["centroids2"]),
@@ -412,6 +584,7 @@ def load_index_artifact(path) -> tuple[SuCoIndex, SuCoConfig | None]:
                 cell_counts=jnp.asarray(z["cell_counts"]),
                 spec=spec,
                 sqrt_k=int(z["sqrt_k"][()]),
+                tombstone=tombstone,
             )
             config = None
             if "config_n_subspaces" in names:
@@ -606,8 +779,9 @@ def suco_cell_ranks(
 
 
 def _pool_size(n: int, k: int, beta: float) -> int:
-    """Candidate-pool size — must mirror :func:`repro.core.sc_linear.rerank`."""
-    return max(k, min(max(k, int(beta * n)), n))
+    """Candidate-pool size — the shared clamped form
+    (:func:`repro.core.sc_linear.candidate_pool_size`)."""
+    return candidate_pool_size(n, k, beta)
 
 
 @functools.partial(
@@ -660,13 +834,24 @@ def suco_query_streaming(
     int_max = jnp.iinfo(jnp.int32).max
     cells = jnp.pad(index.cell_ids, ((0, 0), (0, n_blocks * bn - n)))
     cells = cells.reshape(cells.shape[0], n_blocks, bn).transpose(1, 0, 2)
+    # Tombstones ride the scan as a per-chunk keep mask; an index without
+    # them (tombstone=None — a zero-leaf pytree entry) scans the identical
+    # immutable graph.
+    keep_blocks = None
+    if index.tombstone is not None:
+        keepp = jnp.pad(
+            jnp.logical_not(index.tombstone), (0, n_blocks * bn - n)
+        )
+        keep_blocks = keepp.reshape(n_blocks, bn)
 
     def step(carry, inp):
         pool_s, pool_i = carry
-        blk, cells_b = inp  # (), (Ns, bn)
+        blk, cells_b, keep_b = inp  # (), (Ns, bn), (bn,) | None
         s = sc_scores_cells(ranks, cuts, cells_b, impl=score_impl)  # (m, bn)
         gids = blk * bn + jnp.arange(bn, dtype=jnp.int32)
         valid = gids < n  # mask chunk padding past the end of the data
+        if keep_b is not None:
+            valid = jnp.logical_and(valid, keep_b)  # and tombstoned slots
         s = jnp.where(valid[None, :], s, -1)
         ids_b = jnp.broadcast_to(jnp.where(valid, gids, int_max), (m, bn))
         merged = merge_topk_pool(
@@ -680,7 +865,7 @@ def suco_query_streaming(
         jnp.full((m, pool), int_max, jnp.int32),
     )
     (pool_s, pool_i), _ = jax.lax.scan(
-        step, init, (jnp.arange(n_blocks, dtype=jnp.int32), cells)
+        step, init, (jnp.arange(n_blocks, dtype=jnp.int32), cells, keep_blocks)
     )
     return rerank_candidates(x, q, pool_i, pool_s, k, metric)
 
@@ -772,6 +957,15 @@ def suco_query_fused(
     int_max = jnp.iinfo(jnp.int32).max
     cells = jnp.pad(index.cell_ids, ((0, 0), (0, n_blocks * bn - n)))
     cells = cells.reshape(cells.shape[0], n_blocks, bn).transpose(1, 0, 2)
+    # Tombstones fold into the fused stage's existing keep-mask (the
+    # Pareto prefilter) — no new kernel; tombstone=None traces the
+    # identical immutable graph (None contributes no scan leaves).
+    keep_blocks = None
+    if index.tombstone is not None:
+        keepp = jnp.pad(
+            jnp.logical_not(index.tombstone), (0, n_blocks * bn - n)
+        )
+        keep_blocks = keepp.reshape(n_blocks, bn)
     dist_dtype = (
         jnp.float32 if metric == "l2" else jnp.result_type(x.dtype, q.dtype)
     )
@@ -781,22 +975,33 @@ def suco_query_fused(
 
     def step(carry, inp):
         pool_s, pool_d, pool_i = carry
-        blk, cells_b = inp  # (), (Ns, bn)
+        blk, cells_b, keep_b = inp  # (), (Ns, bn), (bn,) | None
         thr = pool_s[:, -1]  # pool sorted desc -> last col is the minimum
         limit = jnp.minimum(n - blk * bn, bn)  # valid columns this chunk
         s, surv_c, surv_s, total = sc_scores_cells_prefilter_compact(
-            ranks, cuts, cells_b, thr, limit,
+            ranks, cuts, cells_b, thr, limit, keep_b,
             cap=cap, bm=tiles.bm, bn=tiles.bn, impl=score_impl,
         )  # (m, bn), (m, cap), (m, cap), (m) — all int32, s pre-masked
         gids = blk * bn + cols
-        ids_b = jnp.broadcast_to(jnp.where(cols < limit, gids, int_max), (m, bn))
+        col_ok = cols < limit
+        if keep_b is not None:
+            # Tombstoned columns must not enter the overflow fallback's
+            # top_k either: sentinel ids make their distances +inf below.
+            col_ok = jnp.logical_and(col_ok, keep_b)
+        ids_b = jnp.broadcast_to(jnp.where(col_ok, gids, int_max), (m, bn))
 
         def pruned_merge(_):
             # The kernel already compacted the survivors into cap slots in
             # ascending-id order while the score tile was resident — the
             # host graph only rebuilds global ids from the chunk-local
-            # columns and masks empty slots to the sentinels.
-            live = slot[None, :] < total[:, None]  # slot j holds a survivor
+            # columns and masks empty slots to the sentinels.  A slot is
+            # live iff it is below the survivor count AND carries a real
+            # (>= 0) score — the second clause is vacuous for immutable
+            # indexes (survivors beat thr >= -1) and masks the Pallas
+            # path's post-hoc tombstoned survivors under mutation.
+            live = jnp.logical_and(
+                slot[None, :] < total[:, None], surv_s >= 0
+            )
             surv_i = jnp.where(live, blk * bn + surv_c, int_max)
             surv_sm = jnp.where(live, surv_s, -1)
             # survivors only ever touch O(cap) rows of x per chunk — the
@@ -839,7 +1044,7 @@ def suco_query_fused(
         jnp.full((m, pool), int_max, jnp.int32),
     )
     (pool_s, pool_d, pool_i), _ = jax.lax.scan(
-        step, init, (jnp.arange(n_blocks, dtype=jnp.int32), cells)
+        step, init, (jnp.arange(n_blocks, dtype=jnp.int32), cells, keep_blocks)
     )
     # Final selection == rerank_candidates' top_k on the carried pool:
     # ascending distance, ties to the earlier (score desc, id asc) slot.
@@ -920,7 +1125,12 @@ def suco_query(
         )
     c = sub.collision_count(n, alpha)
     scores = suco_scores(index, q, c, metric)  # (m, n)
-    n_candidates = max(k, int(beta * n))
+    if index.tombstone is not None:
+        # Tombstoned points score -1 — below every live point, and
+        # rerank_candidates masks negative-score slots to +inf distance,
+        # so a deleted id can neither crowd out pool slots nor be returned.
+        scores = jnp.where(index.tombstone[None, :], -1, scores)
+    n_candidates = candidate_pool_size(n, k, beta)
     return rerank(x, q, scores, k, n_candidates, metric)
 
 
@@ -1203,6 +1413,8 @@ class SuCoEngine:
         x: jax.Array,
         index: SuCoIndex,
         policy: EnginePolicy | None = None,
+        *,
+        capacity: int | None = None,
     ):
         self.x = jnp.asarray(x)
         self.index = index
@@ -1215,6 +1427,39 @@ class SuCoEngine:
             raise ValueError(
                 f"data dim {self.x.shape[-1]} != index spec d={index.spec.d}"
             )
+        if self.x.shape[0] != index.n_points:
+            raise ValueError(
+                f"data rows {self.x.shape[0]} != index points {index.n_points}"
+            )
+        n0 = self.x.shape[0]
+        if capacity is not None:
+            # Mutable layout: pre-pad (x, index) to `capacity` slots so
+            # inserts are in-place slot writes — shapes (and therefore the
+            # warmed executables) never change.  Empty slots are tombstoned
+            # (never scored, never returned) and uncounted in cell_counts.
+            if capacity < n0:
+                raise ValueError(
+                    f"capacity={capacity} must be >= current n={n0}"
+                )
+            tomb = (
+                jnp.zeros(n0, bool) if index.tombstone is None
+                else index.tombstone
+            )
+            self.x = jnp.pad(self.x, ((0, capacity - n0), (0, 0)))
+            self.index = dataclasses.replace(
+                index,
+                cell_ids=jnp.pad(
+                    index.cell_ids, ((0, 0), (0, capacity - n0))
+                ),
+                tombstone=jnp.concatenate(
+                    [tomb, jnp.ones(capacity - n0, bool)]
+                ),
+            )
+        self._capacity = capacity
+        self._next_slot = n0
+        self._n_live = self.index.n_live  # host int, maintained on mutation
+        self._insert_inertia = 0.0  # drift statistic: sum over inserts
+        self._inserted = 0
         mode = policy.mode
         if mode == "auto":
             # fused is the streaming-scale default: same answers as the
@@ -1228,6 +1473,7 @@ class SuCoEngine:
         self._padded = 0
         self._buckets_seen: set[tuple[int, int]] = set()
         self._jit = jax.jit(self._raw_query, static_argnames=("k",))
+        self._retired_jit = None  # predecessor executables parked by swap
 
     # ---- lifecycle -------------------------------------------------------
 
@@ -1263,6 +1509,135 @@ class SuCoEngine:
     def save(self, path, config: SuCoConfig | None = None) -> None:
         """Persist this engine's index artifact (see :meth:`SuCoIndex.save`)."""
         self.index.save(path, config)
+
+    # ---- live mutation ---------------------------------------------------
+
+    def _require_mutable(self, op: str) -> None:
+        if self._capacity is None:
+            raise ValueError(
+                f"{op} needs a mutable engine — construct with "
+                "capacity=<max points> (pre-padded slots keep the warmed "
+                "executables' shapes fixed); this engine is immutable"
+            )
+
+    def insert(self, x_new: jax.Array) -> np.ndarray:
+        """Insert ``x_new: (b, d)`` (or one ``(d,)`` point) into free slots.
+
+        Assignment to the existing centroids reuses the chunked build pass
+        (:func:`assign_points`); ``cell_ids``/``cell_counts`` and the
+        tombstone mask update in place (functional ``.at[]`` writes on the
+        same shapes — the warmed query executables never retrace).  Returns
+        the assigned slot ids (stable: slots are never reused until a
+        re-index).  Raises :class:`CapacityError` when the batch does not
+        fit in the remaining capacity — the re-index trigger.
+        """
+        self._require_mutable("insert")
+        x_new = jnp.asarray(x_new, self.x.dtype)
+        if x_new.ndim == 1:
+            x_new = x_new[None]
+        if x_new.ndim != 2 or x_new.shape[-1] != self.index.spec.d:
+            raise ValueError(
+                f"points must be (b, {self.index.spec.d}), got {x_new.shape}"
+            )
+        b = x_new.shape[0]
+        if self._next_slot + b > self._capacity:
+            raise CapacityError(
+                f"insert of {b} points exceeds capacity "
+                f"{self._capacity} (next free slot {self._next_slot}) — "
+                "re-index onto a larger successor engine"
+            )
+        cells, counts_delta, inertia = assign_points(
+            x_new, self.index.centroids1, self.index.centroids2,
+            spec=self.index.spec, sqrt_k=self.index.sqrt_k,
+            block_n=self.policy.block_n,
+        )
+        slots = np.arange(self._next_slot, self._next_slot + b)
+        sl = jnp.asarray(slots, jnp.int32)
+        self.index = dataclasses.replace(
+            self.index,
+            cell_ids=self.index.cell_ids.at[:, sl].set(cells),
+            cell_counts=self.index.cell_counts + counts_delta,
+            tombstone=self.index.tombstone.at[sl].set(False),
+        )
+        self.x = self.x.at[sl].set(x_new)
+        self._next_slot += b
+        self._n_live += b
+        self._insert_inertia += float(inertia)
+        self._inserted += b
+        return slots
+
+    def delete(self, ids) -> int:
+        """Tombstone the given slot ids; returns how many were newly dead.
+
+        Delegates to :meth:`SuCoIndex.delete` (idempotent, occupancy-
+        correcting) and rebinds the same-shape result — zero retrace.
+        """
+        self._require_mutable("delete")
+        before = self.index
+        self.index = before.delete(ids)
+        newly = int(jnp.sum(before.tombstone != self.index.tombstone))
+        self._n_live -= newly
+        return newly
+
+    def swap(self, successor: "SuCoEngine") -> None:
+        """Atomically become ``successor`` — the warm re-index handoff.
+
+        The successor must already be warmed over at least this engine's
+        seen ``(bucket, k)`` set (build it, :meth:`warmup` it, then swap):
+        the whole point is that no request ever waits on a compile or is
+        dropped across the handoff.  Adoption rebinds every serving field
+        in place, so callers holding this engine object — servers, ladders
+        — cut over atomically; in-flight results computed on the old
+        executables stay valid (their device buffers are unaffected).
+        """
+        if successor is self:
+            return
+        missing = self._buckets_seen - successor._buckets_seen
+        if missing:
+            raise ValueError(
+                "swap target is not warmed over the live traffic mix — "
+                f"missing (bucket, k) executables {sorted(missing)}; "
+                "run successor.warmup(...) over the seen mix first"
+            )
+        self.x = successor.x
+        self.index = successor.index
+        self.policy = successor.policy
+        self._mode = successor._mode
+        # Dropping the last reference to the old jitted dispatcher tears
+        # down its compiled executables synchronously (tens of ms) — done
+        # inline that teardown WOULD be the swap pause.  Park it instead;
+        # release_retired() frees it off the serving path.
+        self._retired_jit = self._jit
+        self._jit = successor._jit
+        self._capacity = successor._capacity
+        self._next_slot = successor._next_slot
+        self._n_live = successor._n_live
+        self._insert_inertia = successor._insert_inertia
+        self._inserted = successor._inserted
+        self._buckets_seen = set(
+            self._buckets_seen | successor._buckets_seen
+        )
+
+    def release_retired(self) -> None:
+        """Free the predecessor executables a :meth:`swap` parked.
+
+        Compiled-executable teardown is synchronous and slow relative to a
+        query step, so ``swap`` defers it; call this from a maintenance
+        point (between steps, after the handoff settles) to reclaim the
+        memory without the teardown ever appearing inside the cutover."""
+        self._retired_jit = None
+
+    def _rebind(
+        self, x: jax.Array, index: SuCoIndex, *, n_live: int, next_slot: int
+    ) -> None:
+        """Adopt mutated ``(x, index)`` in place — same shapes and treedef
+        as the current ones, so the warmed executables keep hitting.  The
+        propagation hook for sibling engines (degradation-ladder levels)
+        that share this engine's data."""
+        self.x = x
+        self.index = index
+        self._n_live = n_live
+        self._next_slot = next_slot
 
     # ---- query -----------------------------------------------------------
 
@@ -1310,8 +1685,10 @@ class SuCoEngine:
                 f"queries must be (m, {self.index.spec.d}) or "
                 f"({self.index.spec.d},), got {q.shape}"
             )
-        if not 1 <= k <= self.x.shape[0]:
-            raise ValueError(f"k={k} must be in [1, n={self.x.shape[0]}]")
+        if not 1 <= k <= self.n_live:
+            # k is bounded by the LIVE count: with tombstones, asking for
+            # more neighbours than live points would leak sentinel ids.
+            raise ValueError(f"k={k} must be in [1, n={self.n_live}]")
         m = q.shape[0]
         b = batch_bucket(m, self.policy.batch_buckets)
         if b != m:
@@ -1365,6 +1742,33 @@ class SuCoEngine:
     @property
     def n_points(self) -> int:
         return self.x.shape[0]
+
+    @property
+    def n_live(self) -> int:
+        """Live (non-tombstoned, non-empty-slot) point count — the honest
+        ``n`` for k-validation and quality bounds under mutation."""
+        return self._n_live
+
+    @property
+    def capacity(self) -> int | None:
+        """Total slots of a mutable engine (``None`` = immutable)."""
+        return self._capacity
+
+    @property
+    def free_slots(self) -> int:
+        """Remaining insert slots (0 for immutable engines)."""
+        if self._capacity is None:
+            return 0
+        return self._capacity - self._next_slot
+
+    @property
+    def insert_inertia_per_point(self) -> float:
+        """Mean assignment inertia over all points inserted so far — the
+        drift monitor's statistic (rising vs. the build-time baseline
+        means the centroids no longer describe the incoming data)."""
+        if not self._inserted:
+            return 0.0
+        return self._insert_inertia / self._inserted
 
     @property
     def compile_count(self) -> int:
@@ -1510,6 +1914,22 @@ def jaxlint_entries():
             )
         )(x, q)
 
+    def make_fused_tombstoned():
+        # The live-mutation variant of the fused entry: a ~10% tombstone
+        # mask threads through the prefilter keep-mask (docs/index_mutation.md).
+        # Same scan rules and budget — the extra arrays (one bool per point,
+        # one per chunk column) are smaller than every budgeted term.
+        x, q, index, _ = _lint_problem()
+        rng = np.random.default_rng(7)
+        tomb = jnp.asarray(rng.random(s["n"]) < 0.1)
+        tindex = dataclasses.replace(index, tombstone=tomb)
+        return jax.make_jaxpr(
+            lambda xx, qq: suco_query_fused(
+                xx, tindex, qq, k=k, alpha=alpha, beta=beta,
+                tiles=_fused_tiles(s["m"]),
+            )
+        )(x, q)
+
     def make_dense():
         x, q, index, _ = _lint_problem()
         return jax.make_jaxpr(
@@ -1575,6 +1995,17 @@ def jaxlint_entries():
             rules=scan_rules,
             budget_bytes=lint_query_budget_bytes(_fused_tiles(s["m"]).block_n),
             note="single-pass fused query: score/prune/merge/rerank per chunk",
+        ),
+        JaxprEntry(
+            name="suco.query_fused_tombstoned",
+            make=make_fused_tombstoned,
+            rules=scan_rules,
+            budget_bytes=lint_query_budget_bytes(_fused_tiles(s["m"]).block_n),
+            note=(
+                "fused query over a tombstoned (live-mutation) index: the "
+                "delete mask folds into the prefilter keep-mask — same "
+                "scan, same memory budget, no new kernel"
+            ),
         ),
         JaxprEntry(
             name="suco.query_dense",

@@ -49,7 +49,7 @@ from repro.core.suco import (
 from repro.core import subspace as sub
 from repro.core.distances import pairwise_sqdist
 from repro.core.kmeans import assign_scan, block_batched, lloyd_stats_scan
-from repro.core.sc_linear import merge_topk_pool
+from repro.core.sc_linear import candidate_pool_size, merge_topk_pool
 from repro.core.tuning import autotune_build_block_n, autotune_tiles
 from repro.distributed.compat import pcast_varying, shard_map_compat
 from repro.kernels.sc_score.ops import sc_scores_cells
@@ -122,7 +122,7 @@ def resolved_query_block_n(mesh: Mesh, cfg: DistSuCoConfig, n: int, d: int) -> i
         return cfg.block_n
     n_loc = max(n // _n_point_shards(mesh, cfg), 1)
     d_loc = max(d // mesh.shape[cfg.model_axis], 1)
-    m_cand = max(cfg.k, int(cfg.beta * n_loc))
+    m_cand = candidate_pool_size(n_loc, cfg.k, cfg.beta)
     return autotune_tiles(
         n_loc, d_loc, cfg.q_chunk, m_cand,
         n_subspaces=max(cfg.n_subspaces // mesh.shape[cfg.model_axis], 1),
@@ -304,7 +304,7 @@ def make_query_fn(mesh: Mesh, cfg: DistSuCoConfig, n: int, d: int, mq: int):
     n_pt_shards = math.prod(mesh.shape[a] for a in pa)
     n_loc = n // n_pt_shards
     target = sub.collision_count(n, cfg.alpha)
-    m_cand = max(k, int(cfg.beta * n_loc))
+    m_cand = candidate_pool_size(n_loc, k, cfg.beta)
     q_chunk = min(cfg.q_chunk, mq)
     if mq % q_chunk:
         raise ValueError(f"mq={mq} must divide by q_chunk={q_chunk}")
@@ -615,7 +615,8 @@ class ShardedEnginePool:
     """Per-``k`` pool of :class:`ShardedSuCoEngine` over one placed dataset.
 
     A sharded engine bakes ``k`` into its config (per-shard candidate
-    pools are sized ``max(k, beta * n_local)``), so heterogeneous-``k``
+    pools are sized ``candidate_pool_size(n_local, k, beta)``), so
+    heterogeneous-``k``
     traffic cannot share one engine without retracing or serialising on a
     single ``k``.  The pool places ``(x, index)`` on the mesh exactly once
     and keeps one engine per ``k`` — all sharing the placed arrays (a

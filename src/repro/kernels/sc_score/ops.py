@@ -146,6 +146,7 @@ def sc_scores_cells_prefilter_compact(
     cells: jax.Array,  # (Ns, bc) chunk cell ids
     thr: jax.Array,  # (m,) carried pool minimum score per query
     limit: jax.Array,  # () count of valid chunk columns (traced ok)
+    keep_cols: jax.Array | None = None,  # (bc,) bool live-column mask
     *,
     cap: int,
     bm: int = 8,
@@ -166,6 +167,17 @@ def sc_scores_cells_prefilter_compact(
     and the *true* per-query survivor count (``(m,)``, may exceed ``cap``
     — the caller's exact-fallback signal; overflowed slots are dropped).
 
+    ``keep_cols`` (optional ``(bc,) bool``, default all-live) is the
+    live-mutation tombstone mask: False columns are deleted points.  The
+    jnp oracle folds it into the validity mask exactly like ``limit`` (a
+    dead column scores -1, never survives, never consumes a compaction
+    slot).  The Pallas path keeps the existing kernel — no new kernel for
+    mutation — and post-masks instead: dead columns' scores and any dead
+    survivors' slot scores drop to -1; ``count`` then *overcounts* dead
+    survivors, which is conservative (the caller's exact overflow fallback
+    fires at worst more often, and its top_k sees the masked -1 scores, so
+    answers are unchanged).
+
     Same ``impl`` dispatch and padding contract as
     :func:`sc_scores_cells`; padded query rows get ``thr = INT32_MAX`` so
     they never survive, and ``cap`` is rounded up to a lane multiple for
@@ -173,7 +185,7 @@ def sc_scores_cells_prefilter_compact(
     """
     if impl == "jnp" or (impl == "auto" and jax.default_backend() != "tpu"):
         return sc_score_cells_prefilter_compact_ref(
-            ranks, cuts, cells, thr, limit, cap=cap
+            ranks, cuts, cells, thr, limit, keep_cols, cap=cap
         )
     n_sub, m, k_cells = ranks.shape
     bc = cells.shape[1]
@@ -198,7 +210,13 @@ def sc_scores_cells_prefilter_compact(
         rp, cutp, thrp, limp, cellp, bm=bm_, bn=bn_, cap=capp,
         interpret=interpret,
     )
-    return out_s[:m, :bc], out_c[:m, :cap], out_ss[:m, :cap], out_n[:m, 0]
+    out_s = out_s[:m, :bc]
+    out_c, out_ss, out_n = out_c[:m, :cap], out_ss[:m, :cap], out_n[:m, 0]
+    if keep_cols is not None:
+        out_s = jnp.where(keep_cols[None, :], out_s, -1)
+        dead_slot = jnp.logical_not(jnp.take(keep_cols, out_c))
+        out_ss = jnp.where(dead_slot, -1, out_ss)
+    return out_s, out_c, out_ss, out_n
 
 
 __all__ = [

@@ -39,6 +39,7 @@ def sc_score_cells_prefilter_compact_ref(
     cells: jax.Array,
     thr: jax.Array,
     limit: jax.Array,
+    keep_cols: jax.Array | None = None,
     *,
     cap: int,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
@@ -46,8 +47,12 @@ def sc_score_cells_prefilter_compact_ref(
 
     ``thr: (m,)`` is the per-query carried pool minimum and ``limit`` the
     (possibly traced) count of valid chunk columns; columns at or past it
-    are masked to the -1 score sentinel and can never survive.  Returns
-    ``(scores (m, bc), surv_cols (m, cap), surv_scores (m, cap),
+    are masked to the -1 score sentinel and can never survive.
+    ``keep_cols`` (optional, ``(bc,) bool``) further restricts the valid
+    columns — the live-mutation tombstone mask: a False column is masked
+    to -1 exactly like one past ``limit``, so deleted points neither
+    survive nor occupy compaction slots nor count toward ``count``.
+    Returns ``(scores (m, bc), surv_cols (m, cap), surv_scores (m, cap),
     count (m,))``: the j-th survivor (ascending column order, exactly the
     keep-mask compaction the fused query used to run on the host) sits at
     slot j; empty slots hold column 0 / score -1; ``count`` is the true
@@ -58,7 +63,10 @@ def sc_score_cells_prefilter_compact_ref(
     bc = cells.shape[1]
     s = sc_score_cells_ref(ranks, cuts, cells)
     col = jnp.arange(bc, dtype=jnp.int32)
-    s = jnp.where(col[None, :] < limit, s, -1)
+    ok = col[None, :] < limit
+    if keep_cols is not None:
+        ok = jnp.logical_and(ok, keep_cols[None, :])
+    s = jnp.where(ok, s, -1)
     keep = s > thr[:, None]
     cnt = jnp.cumsum(keep.astype(jnp.int32), axis=1)
     slot = jnp.arange(cap, dtype=jnp.int32)

@@ -241,7 +241,7 @@ class DegradationLadder:
                 seed=stats_seed,
             )
         self.m_stat, self.sigma_stat = float(stats[0]), float(stats[1])
-        self._bounds: dict[tuple[int, int], float] = {}
+        self._bounds: dict[tuple[int, int, int], float] = {}
 
     @property
     def max_level(self) -> int:
@@ -251,13 +251,36 @@ class DegradationLadder:
         """The engine serving ``level`` (clamped to the ladder)."""
         return self.engines[min(max(level, 0), self.max_level)]
 
+    def rebind(self) -> None:
+        """Propagate the base engine's live ``(x, index)`` to every sibling.
+
+        Levels 1+ were constructed over level 0's arrays; after an in-place
+        mutation on the base (insert / delete) they must be re-pointed at
+        the mutated arrays or degraded answers would be served from the
+        pre-mutation corpus — including already-tombstoned ids.  Shapes and
+        treedef are unchanged, so the siblings' warmed executables keep
+        hitting (no retrace).
+        """
+        base = self.engines[0]
+        for sib in self.engines[1:]:
+            sib._rebind(
+                base.x, base.index,
+                n_live=base.n_live, next_slot=base._next_slot,
+            )
+
     def quality_bound(self, level: int, k: int) -> float:
-        """The monotonised Theorem-2 success floor at ``(level, k)``."""
+        """The monotonised Theorem-2 success floor at ``(level, k)``.
+
+        Computed against the *live* point count, not the build-time one:
+        inserts and tombstoned deletes move ``n``, and a floor quoted for
+        a corpus size that no longer exists is not a guarantee.  The cache
+        key carries ``n`` so mutation invalidates stale entries for free.
+        """
         level = min(max(level, 0), self.max_level)
-        key = (level, k)
+        base = self.engines[0]
+        n = int(base.n_live)
+        key = (level, k, n)
         if key not in self._bounds:
-            base = self.engines[0]
-            n = int(base.x.shape[0])
             ns = base.index.spec.n_subspaces
             self._bounds[key] = min(
                 theory.degraded_budget_bound(
@@ -347,7 +370,10 @@ class AnnServer:
         """Admission-time validation: reject malformed requests here, with a
         per-request error, instead of failing a whole batch at dispatch."""
         d = self.engine.index.spec.d
-        n = int(self.engine.x.shape[0])
+        # k is bounded by the LIVE point count: tombstoned slots can never
+        # appear in an answer, so admitting k > n_live would promise more
+        # distinct neighbours than exist.
+        n = int(getattr(self.engine, "n_live", self.engine.x.shape[0]))
         q = np.asarray(req.query)  # jaxlint: sync-ok — host payload
         if q.ndim != 1 or q.shape[0] != d or not np.issubdtype(q.dtype, np.number):
             return f"query must be ({d},), got shape {q.shape} dtype {q.dtype}"
@@ -468,6 +494,75 @@ class AnnServer:
             if self.ladder is not None
             else self.engine.compile_count
         )
+
+    # ---- live mutation ---------------------------------------------------
+
+    def insert(self, x_new) -> np.ndarray:
+        """Insert points into the serving engine between steps; returns the
+        assigned slot ids.  Ladder siblings are re-pointed at the mutated
+        arrays so degraded answers see the same live corpus."""
+        slots = self.engine.insert(x_new)
+        if self.ladder is not None:
+            self.ladder.rebind()
+        return slots
+
+    def delete(self, ids) -> int:
+        """Tombstone ids in the serving engine between steps; returns how
+        many were newly deleted.  From the next dispatched batch on, no
+        answer — base or degraded — can contain a tombstoned id."""
+        n_newly = self.engine.delete(ids)
+        if self.ladder is not None:
+            self.ladder.rebind()
+        return n_newly
+
+    def swap(self, engine: SuCoEngine, *, ladder: DegradationLadder | None = None) -> None:
+        """Hand the whole serving surface over to a warmed successor.
+
+        ``engine`` replaces the base engine via :meth:`SuCoEngine.swap`
+        (in-place adoption — object identity is preserved, so everything
+        holding ``self.engine`` cuts over atomically).  When a degradation
+        ladder is installed a successor ``ladder`` built over ``engine``
+        must be supplied, warmed level-for-level; every level's warm
+        contract is checked *before* any level is mutated, so a failed
+        swap leaves the server fully on the old surface.  Queued requests
+        are untouched — the next ``step`` dispatches on the successor.
+        """
+        if self.ladder is not None:
+            if ladder is None:
+                raise ValueError(
+                    "server has a degradation ladder installed — pass a "
+                    "warmed successor ladder built over the new engine"
+                )
+            if ladder.engines[0] is not engine:
+                raise ValueError(
+                    "successor ladder must be built over the successor "
+                    "engine (ladder.engines[0] is not the engine passed)"
+                )
+            if len(ladder.engines) != len(self.ladder.engines):
+                raise ValueError(
+                    f"successor ladder has {len(ladder.engines)} levels, "
+                    f"serving ladder has {len(self.ladder.engines)} — swap "
+                    "level-for-level or rebuild the server"
+                )
+            pairs = list(zip(self.ladder.engines, ladder.engines))
+        else:
+            pairs = [(self.engine, engine)]
+        # Check every level's warm contract before mutating any: a swap is
+        # all-or-nothing across the ladder.
+        for lv, (old, new) in enumerate(pairs):
+            missing = old._buckets_seen - new._buckets_seen
+            if missing:
+                raise ValueError(
+                    f"swap target level {lv} is not warmed over the live "
+                    f"traffic mix — missing (bucket, k) executables "
+                    f"{sorted(missing)}; warm the successor first"
+                )
+        for old, new in pairs:
+            old.swap(new)
+        if self.ladder is not None:
+            self.ladder.m_stat = ladder.m_stat
+            self.ladder.sigma_stat = ladder.sigma_stat
+            self.ladder._bounds = {}
 
     # ---- fault isolation -------------------------------------------------
 
@@ -722,6 +817,18 @@ class AsyncAnnServer(AnnServer):
         while self._inflight:
             done.extend(self._retire())
         return done
+
+    def swap(self, engine: SuCoEngine, *, ladder: DegradationLadder | None = None) -> None:
+        """Retire every in-flight batch on the old engine, then cut over.
+
+        In-flight device buffers would stay valid across the cutover (jax
+        arrays are immutable), but retiring them first keeps the handoff
+        contract simple: every answer delivered after ``swap`` returns was
+        computed on the successor.  Queued-but-undispatched requests ride
+        through and dispatch on the new engine — nothing is dropped.
+        """
+        self.flush()
+        super().swap(engine, ladder=ladder)
 
     def run_until_drained(self) -> list[AnnRequest]:
         while self.queue:

@@ -251,6 +251,12 @@ def replay(
     is in the future, jump the clock to it.  The loop — and therefore the
     fault schedule consumed from the chaos engine — is a deterministic
     function of (trace, chaos seed, server configuration).
+
+    A trace entry may carry a *callable* instead of a request: it is
+    invoked as ``event(server)`` at its scheduled time — the hook the
+    mutate-while-serving tests use to script inserts, deletes, and warm
+    handoffs between dispatches — and is excluded from the request
+    accounting (``summary`` and the outcome sets cover requests only).
     """
     if any(t1 > t2 for (t1, _), (t2, _) in zip(trace, trace[1:])):
         raise ValueError("trace must be sorted by arrival time")
@@ -258,7 +264,11 @@ def replay(
     i = 0
     while True:
         while i < len(trace) and trace[i][0] <= clock():
-            server.submit(trace[i][1])
+            ev = trace[i][1]
+            if callable(ev):
+                ev(server)  # scripted mutation / handoff action
+            else:
+                server.submit(ev)
             i += 1
         if server.queue:
             server.step()
@@ -268,7 +278,7 @@ def replay(
             clock.advance(trace[i][0] - clock())
         else:
             break
-    reqs = [r for _, r in trace]
+    reqs = [r for _, r in trace if not callable(r)]
     done = [r for r in reqs if r.done]
     return ReplayReport(
         completed=frozenset(r.rid for r in done),

@@ -1,0 +1,389 @@
+"""Drift-triggered re-cluster and warm handoff for a mutating serving index.
+
+The engine layer gives live mutation its mechanics — slot inserts against
+frozen centroids (:meth:`repro.core.suco.SuCoEngine.insert`), tombstoned
+deletes (:meth:`~repro.core.suco.SuCoEngine.delete`), and the atomic warm
+:meth:`~repro.core.suco.SuCoEngine.swap`.  This module adds the *policy*
+that decides when mutation has degraded the index enough to rebuild it,
+and the orchestration that performs the rebuild without the serving
+process dropping a request:
+
+* :class:`DriftMonitor` — compares the live per-subspace cell-occupancy
+  distribution against a baseline snapshot (total-variation distance),
+  alongside the tombstone dead fraction, the slot fill fraction, and the
+  ratio of insert assignment inertia to the baseline corpus inertia.
+  TaCo's observation (PAPERS.md) is the design driver: re-cluster when
+  the *observed* collision/occupancy statistics drift from what the
+  centroids were trained on, not on a wall-clock timer.
+* :class:`MutationManager` — owns the insert/delete/re-index lifecycle
+  over an :class:`~repro.serve.ann.AnnServer`: external-key bookkeeping
+  across slot renumbering, the ``minibatch`` re-cluster of the live
+  corpus into a successor engine, per-level warmup of the successor over
+  exactly the ``(bucket, k)`` traffic the old surface has served, and
+  the final :meth:`~repro.serve.ann.AnnServer.swap`.
+
+The handoff contract (``docs/index_mutation.md``): the successor is
+warmed *before* the swap, the swap itself is in-place adoption on the
+old engine objects, and queued requests ride through — so across the
+whole re-index, ``retraces_after_warmup == 0`` on both engines and no
+request is dropped, failed, or served a tombstoned id.
+
+CPU-scale usage sketch (see ``tests/test_mutation_serving.py``)::
+
+    manager = MutationManager(server, build_config)
+    manager.insert(new_rows)          # slot inserts, no retrace
+    manager.delete(stale_keys)        # tombstones, invisible next batch
+    report = manager.maybe_reindex()  # re-cluster + warm swap if drifted
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.suco import (
+    CapacityError,
+    SuCoConfig,
+    SuCoEngine,
+    assign_points,
+    build_index,
+)
+from repro.serve.ann import AnnServer, DegradationLadder
+
+__all__ = [
+    "DriftReport",
+    "DriftMonitor",
+    "MutationManager",
+    "warm_like",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftReport:
+    """One drift observation: the statistics and which thresholds fired."""
+
+    tv_distance: float  # max over subspaces, occupancy vs baseline
+    dead_fraction: float  # tombstoned fraction of assigned slots
+    fill_fraction: float  # assigned slots / capacity
+    inertia_ratio: float  # insert assignment inertia / baseline (1.0 = none)
+    reasons: tuple[str, ...]  # empty = no re-cluster needed
+
+    @property
+    def triggered(self) -> bool:
+        return bool(self.reasons)
+
+
+def _occupancy(counts: np.ndarray) -> np.ndarray:
+    """Per-subspace live-count distribution ``(Ns, K) -> (Ns, K)`` rows
+    summing to 1 (uniform for an empty subspace, so TV stays defined)."""
+    counts = np.maximum(counts.astype(np.float64), 0.0)
+    tot = counts.sum(axis=1, keepdims=True)
+    k = counts.shape[1]
+    return np.where(tot > 0, counts / np.maximum(tot, 1.0), 1.0 / k)
+
+
+class DriftMonitor:
+    """Occupancy/inertia drift detector against a captured baseline.
+
+    :meth:`capture` snapshots the engine's live per-subspace cell
+    occupancy and the mean per-point assignment inertia of the live
+    corpus under the current centroids; :meth:`observe` compares the
+    engine's current statistics against that snapshot and returns a
+    :class:`DriftReport` whose ``reasons`` name every threshold crossed:
+
+    * ``tv_threshold`` — maximum per-subspace total-variation distance
+      between the live occupancy distribution and the baseline.  Inserts
+      landing in cells the build never filled (or deletes hollowing out
+      built cells) move this; it is the distributional analogue of the
+      collision-count drift TaCo re-clusters on.
+    * ``max_dead_fraction`` — tombstones carry a real cost (scored then
+      masked), so a mostly-dead slot range wants compaction.
+    * ``max_fill_fraction`` — re-index *before* inserts start raising
+      :class:`~repro.core.suco.CapacityError`.
+    * ``inertia_ratio_threshold`` — inserted points assigning with much
+      higher inertia than the corpus the centroids were trained on means
+      the codebooks no longer describe the incoming data.
+    """
+
+    def __init__(
+        self,
+        *,
+        tv_threshold: float = 0.15,
+        max_dead_fraction: float = 0.25,
+        max_fill_fraction: float = 0.9,
+        inertia_ratio_threshold: float = 2.0,
+    ):
+        if not 0.0 < tv_threshold <= 1.0:
+            raise ValueError(f"tv_threshold must be in (0, 1], got {tv_threshold}")
+        if not 0.0 < max_dead_fraction <= 1.0:
+            raise ValueError(
+                f"max_dead_fraction must be in (0, 1], got {max_dead_fraction}"
+            )
+        if not 0.0 < max_fill_fraction <= 1.0:
+            raise ValueError(
+                f"max_fill_fraction must be in (0, 1], got {max_fill_fraction}"
+            )
+        if inertia_ratio_threshold <= 1.0:
+            raise ValueError(
+                "inertia_ratio_threshold must be > 1, got "
+                f"{inertia_ratio_threshold}"
+            )
+        self.tv_threshold = tv_threshold
+        self.max_dead_fraction = max_dead_fraction
+        self.max_fill_fraction = max_fill_fraction
+        self.inertia_ratio_threshold = inertia_ratio_threshold
+        self._baseline: np.ndarray | None = None
+        self._baseline_inertia = 0.0
+
+    def capture(self, engine: SuCoEngine) -> "DriftMonitor":
+        """Snapshot ``engine``'s live statistics as the new baseline."""
+        counts = np.asarray(engine.index.cell_counts)  # jaxlint: sync-ok — baseline snapshot
+        self._baseline = _occupancy(counts)
+        self._baseline_inertia = _corpus_inertia(engine)
+        return self
+
+    def observe(self, engine: SuCoEngine) -> DriftReport:
+        """Compare ``engine``'s live statistics against the baseline."""
+        if self._baseline is None:
+            raise ValueError("no baseline captured — call capture(engine) first")
+        counts = np.asarray(engine.index.cell_counts)  # jaxlint: sync-ok — drift statistics
+        occ = _occupancy(counts)
+        tv = float(np.max(0.5 * np.abs(occ - self._baseline).sum(axis=1)))
+        assigned = int(engine._next_slot)
+        dead = (assigned - engine.n_live) / max(assigned, 1)
+        cap = engine.capacity
+        fill = assigned / cap if cap else 1.0
+        base = self._baseline_inertia
+        per_insert = engine.insert_inertia_per_point
+        ratio = per_insert / base if (per_insert > 0 and base > 0) else 1.0
+        reasons = []
+        if tv >= self.tv_threshold:
+            reasons.append(f"occupancy tv {tv:.3f} >= {self.tv_threshold}")
+        if dead >= self.max_dead_fraction:
+            reasons.append(f"dead fraction {dead:.3f} >= {self.max_dead_fraction}")
+        if fill >= self.max_fill_fraction:
+            reasons.append(f"fill fraction {fill:.3f} >= {self.max_fill_fraction}")
+        if ratio >= self.inertia_ratio_threshold:
+            reasons.append(
+                f"insert inertia ratio {ratio:.2f} >= "
+                f"{self.inertia_ratio_threshold}"
+            )
+        return DriftReport(
+            tv_distance=tv,
+            dead_fraction=float(dead),
+            fill_fraction=float(fill),
+            inertia_ratio=float(ratio),
+            reasons=tuple(reasons),
+        )
+
+
+def _corpus_inertia(engine: SuCoEngine) -> float:
+    """Mean per-point assignment inertia of the live corpus under the
+    engine's current centroids — the baseline the insert-inertia drift
+    signal is a ratio against.  One chunked assignment pass."""
+    keys, x_live = _live_rows(engine)
+    if len(x_live) == 0:
+        return 0.0
+    idx = engine.index
+    _, _, inertia = assign_points(
+        jnp.asarray(x_live),
+        idx.centroids1,
+        idx.centroids2,
+        spec=idx.spec,
+        sqrt_k=idx.sqrt_k,
+        block_n=engine.policy.block_n,
+    )
+    return float(inertia) / len(x_live)
+
+
+def _live_rows(engine: SuCoEngine) -> tuple[np.ndarray, np.ndarray]:
+    """``(slot_ids, rows)`` of the live (assigned, non-tombstoned) points."""
+    assigned = int(engine._next_slot)
+    if engine.index.tombstone is None:
+        live = np.ones(assigned, bool)
+    else:
+        live = ~np.asarray(engine.index.tombstone[:assigned])  # jaxlint: sync-ok — host gather for re-index
+    x = np.asarray(engine.x[:assigned])  # jaxlint: sync-ok — host gather for re-index
+    return np.flatnonzero(live), np.compress(live, x, axis=0)
+
+
+def warm_like(new_engine: SuCoEngine, old_engine: SuCoEngine) -> int:
+    """Pre-compile ``new_engine`` over exactly the ``(bucket, k)`` pairs
+    ``old_engine`` has served — the warm-handoff precondition of
+    :meth:`~repro.core.suco.SuCoEngine.swap`.  Returns fresh compiles."""
+    fresh = 0
+    for b, k in sorted(old_engine._buckets_seen):
+        fresh += new_engine.warmup([b], [k])
+    return fresh
+
+
+class MutationManager:
+    """Insert/delete/re-index lifecycle over a serving :class:`AnnServer`.
+
+    Answers carry engine *slot* ids, and a re-index renumbers slots (the
+    live corpus compacts into a fresh engine).  The manager therefore
+    tracks a stable external key per slot: :meth:`insert` assigns (or
+    accepts) keys, :meth:`delete` tombstones by key, and :meth:`keys_of`
+    maps a query answer's slot ids back to keys — valid for the engine
+    generation the answer was served on, which is why callers translate
+    ids at retire time (exactly what the mutate-while-serving test does).
+
+    :meth:`reindex` is the warm handoff: gather the live rows on the
+    host, ``minibatch``-re-cluster them into a successor engine with
+    ``capacity_factor`` headroom, warm the successor (level-for-level
+    when the server carries a degradation ladder) over the old surface's
+    seen traffic, then :meth:`~repro.serve.ann.AnnServer.swap`.
+    :meth:`maybe_reindex` gates that on the :class:`DriftMonitor`;
+    :meth:`insert` retries through a re-index once when the engine is
+    out of slots (``auto_reindex``).
+    """
+
+    def __init__(
+        self,
+        server: AnnServer,
+        config: SuCoConfig,
+        *,
+        monitor: DriftMonitor | None = None,
+        capacity_factor: float = 2.0,
+        auto_reindex: bool = True,
+        stats_seed: int = 0,
+    ):
+        if capacity_factor < 1.0:
+            raise ValueError(
+                f"capacity_factor must be >= 1, got {capacity_factor}"
+            )
+        self.server = server
+        self.config = config
+        self.capacity_factor = float(capacity_factor)
+        self.auto_reindex = auto_reindex
+        self.stats_seed = stats_seed
+        self.monitor = DriftMonitor() if monitor is None else monitor
+        self.monitor.capture(self.engine)
+        self.reindexes = 0
+        n0 = int(self.engine._next_slot)
+        self._keys = np.arange(n0, dtype=np.int64)
+        self._next_key = n0
+
+    @property
+    def engine(self) -> SuCoEngine:
+        """The server's base engine (a chaos proxy delegates through)."""
+        return self.server.engine
+
+    # ---- key bookkeeping -------------------------------------------------
+
+    def keys_of(self, slot_ids) -> np.ndarray:
+        """External keys for engine slot ids of the *current* generation."""
+        return self._keys[np.asarray(slot_ids)]  # jaxlint: sync-ok — host id translation
+
+    def live_keys(self) -> np.ndarray:
+        """Keys of the currently live points."""
+        slots, _ = _live_rows(self.engine)
+        return self._keys[slots]
+
+    # ---- mutation --------------------------------------------------------
+
+    def insert(self, x_new, keys=None) -> np.ndarray:
+        """Insert rows, routed through the server (ladder siblings rebind);
+        returns their external keys.  Out of slots + ``auto_reindex`` →
+        one re-index (with headroom for the batch) and a retry."""
+        x_new = np.atleast_2d(np.asarray(x_new))  # jaxlint: sync-ok — host payload
+        b = x_new.shape[0]
+        if keys is None:
+            keys = np.arange(self._next_key, self._next_key + b, dtype=np.int64)
+        keys = np.asarray(keys, dtype=np.int64)  # jaxlint: sync-ok — host key list
+        if keys.shape != (b,):
+            raise ValueError(f"keys must be ({b},), got {keys.shape}")
+        if np.isin(keys, self._keys).any():
+            raise ValueError("keys must be fresh — at least one is already in use")
+        try:
+            self.server.insert(x_new)
+        except CapacityError:
+            if not self.auto_reindex:
+                raise
+            self.reindex(min_free=b)
+            self.server.insert(x_new)
+        self._keys = np.concatenate([self._keys, keys])
+        if b:
+            self._next_key = max(self._next_key, int(keys.max()) + 1)
+        return keys
+
+    def delete(self, keys) -> int:
+        """Tombstone points by external key; returns newly-deleted count.
+        Unknown keys are ignored (delete is idempotent end to end)."""
+        keys = np.asarray(keys)  # jaxlint: sync-ok — host key list
+        slots = np.flatnonzero(np.isin(self._keys, keys))
+        if slots.size == 0:
+            return 0
+        return self.server.delete(slots)
+
+    # ---- re-index handoff ------------------------------------------------
+
+    def check(self) -> DriftReport:
+        """One drift observation against the current baseline."""
+        return self.monitor.observe(self.engine)
+
+    def maybe_reindex(self) -> DriftReport:
+        """Observe drift; re-cluster + warm swap when any threshold fired."""
+        report = self.check()
+        if report.triggered:
+            self.reindex()
+        return report
+
+    def reindex(self, *, capacity: int | None = None, min_free: int = 0) -> SuCoEngine:
+        """Re-cluster the live corpus and hand the server over warm.
+
+        Gathers the live rows, rebuilds with the manager's build config
+        forced to ``minibatch`` (the re-cluster must not need a dense
+        ``(n, K)`` pass while serving), wraps the fresh index in a
+        successor engine with ``capacity_factor`` slot headroom, warms it
+        — level-for-level when a degradation ladder is installed — over
+        the old surface's seen ``(bucket, k)`` traffic, and swaps.  Keys
+        compact with the corpus, the drift baseline re-captures, and the
+        successor engine (post-adoption, ``server.engine``) is returned.
+        """
+        slots, x_live = _live_rows(self.engine)
+        live_keys = self._keys[slots]
+        n_live = len(x_live)
+        if n_live == 0:
+            raise ValueError("cannot re-index an empty live corpus")
+        if capacity is None:
+            capacity = int(math.ceil(n_live * self.capacity_factor))
+        capacity = max(capacity, n_live + min_free)
+        cfg = dataclasses.replace(self.config, build_mode="minibatch")
+        x_dev = jnp.asarray(x_live, dtype=np.asarray(self.engine.x).dtype)  # jaxlint: sync-ok — dtype probe
+        index = build_index(x_dev, cfg)
+        old = self.engine
+        successor = SuCoEngine(
+            x_dev,
+            index,
+            dataclasses.replace(old.policy),  # fresh traffic histogram
+            capacity=capacity,
+        )
+        ladder = None
+        if self.server.ladder is not None:
+            old_ladder = self.server.ladder
+            ladder = DegradationLadder(
+                successor,
+                levels=old_ladder.max_level,
+                stats=(old_ladder.m_stat, old_ladder.sigma_stat),
+                stats_seed=self.stats_seed,
+            )
+            for old_e, new_e in zip(old_ladder.engines, ladder.engines):
+                warm_like(new_e, old_e)
+        else:
+            warm_like(successor, old)
+        self.server.swap(successor, ladder=ladder)
+        # The cutover itself is done; reclaim the predecessor executables
+        # here, off the serving surface (the manager runs between steps).
+        for e in (
+            self.server.ladder.engines if self.server.ladder is not None
+            else [self.engine]
+        ):
+            e.release_retired()
+        self._keys = live_keys
+        self.monitor.capture(self.engine)
+        self.reindexes += 1
+        return self.engine

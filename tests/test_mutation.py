@@ -1,0 +1,323 @@
+"""Live index mutation at the core layer: slot inserts against frozen
+centroids, tombstoned deletes threaded through every query path, capacity
+engines that never retrace, the warm-swap contract, the atomic artifact
+save, and the unified ``candidate_pool_size`` clamp."""
+
+import dataclasses
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.sc_linear import candidate_pool_size
+from repro.core.suco import (
+    CapacityError,
+    EnginePolicy,
+    SuCoConfig,
+    SuCoEngine,
+    assign_points,
+    build_index,
+    load_index_artifact,
+    suco_query,
+)
+from repro.data import make_dataset
+
+CFG = SuCoConfig(n_subspaces=4, sqrt_k=8, kmeans_iters=3, seed=0)
+N, D = 2000, 16
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("gaussian_mixture", N, D, m=20, k=10, seed=0)
+
+
+@pytest.fixture(scope="module")
+def index(ds):
+    return build_index(jnp.asarray(ds.x), CFG)
+
+
+def _fresh(x_new, rng, b=64):
+    return rng.standard_normal((b, D)).astype(np.float32) * 0.1 + x_new
+
+
+def _mutable_engine(ds, index, capacity=N + 400, **policy_kw):
+    policy = EnginePolicy(alpha=0.1, beta=0.05, **policy_kw)
+    return SuCoEngine(jnp.asarray(ds.x), index, policy, capacity=capacity)
+
+
+# ---------------------------------------------------------------------------
+# inserts
+# ---------------------------------------------------------------------------
+
+
+def test_insert_matches_assignment_oracle(ds, index):
+    eng = _mutable_engine(ds, index)
+    rng = np.random.default_rng(1)
+    x_new = _fresh(ds.x[:64], rng)
+    slots = eng.insert(x_new)
+    assert np.array_equal(slots, np.arange(N, N + 64))
+    cells, counts_delta, _ = assign_points(
+        jnp.asarray(x_new),
+        index.centroids1,
+        index.centroids2,
+        spec=index.spec,
+        sqrt_k=index.sqrt_k,
+        block_n=eng.policy.block_n,
+    )
+    got = np.asarray(eng.index.cell_ids[:, N:N + 64])
+    assert np.array_equal(got, np.asarray(cells))
+    # counts moved by exactly the oracle delta
+    assert np.array_equal(
+        np.asarray(eng.index.cell_counts),
+        np.asarray(index.cell_counts) + np.asarray(counts_delta),
+    )
+    assert eng.n_live == N + 64
+    assert not np.asarray(eng.index.tombstone[N:N + 64]).any()
+
+
+def test_cell_counts_equal_live_histogram_after_mutation(ds, index):
+    eng = _mutable_engine(ds, index)
+    rng = np.random.default_rng(2)
+    eng.insert(_fresh(ds.x[:100], rng, b=100))
+    eng.delete(np.arange(0, 150))
+    cells = np.asarray(eng.index.cell_ids)
+    tomb = np.asarray(eng.index.tombstone)
+    counts = np.asarray(eng.index.cell_counts)
+    for s in range(cells.shape[0]):
+        hist = np.bincount(
+            cells[s][~tomb], minlength=counts.shape[1]
+        )
+        assert np.array_equal(counts[s], hist), f"subspace {s}"
+
+
+def test_insert_beyond_capacity_raises(ds, index):
+    eng = _mutable_engine(ds, index, capacity=N + 10)
+    rng = np.random.default_rng(3)
+    with pytest.raises(CapacityError, match="exceeds capacity"):
+        eng.insert(_fresh(ds.x[:11], rng, b=11))
+    # nothing was mutated by the failed insert
+    assert eng.n_live == N
+    assert eng.free_slots == 10
+
+
+def test_immutable_engine_rejects_mutation(ds, index):
+    eng = SuCoEngine(jnp.asarray(ds.x), index, EnginePolicy(mode="dense"))
+    with pytest.raises(ValueError, match="mutable engine"):
+        eng.insert(np.zeros((1, D), np.float32))
+    with pytest.raises(ValueError, match="mutable engine"):
+        eng.delete([0])
+
+
+# ---------------------------------------------------------------------------
+# deletes
+# ---------------------------------------------------------------------------
+
+
+def test_delete_idempotent_and_counts_consistent(ds, index):
+    eng = _mutable_engine(ds, index)
+    ids = np.array([5, 5, 17, 999])
+    assert eng.delete(ids) == 3
+    counts_after = np.asarray(eng.index.cell_counts)
+    # re-deleting (with duplicates) is a no-op
+    assert eng.delete(ids) == 0
+    assert np.array_equal(np.asarray(eng.index.cell_counts), counts_after)
+    assert eng.n_live == N - 3
+    assert int(np.asarray(eng.index.cell_counts).sum()) == (
+        index.spec.n_subspaces * (N - 3)
+    )
+
+
+def test_delete_out_of_range_raises(ds, index):
+    eng = _mutable_engine(ds, index, capacity=N + 8)
+    # slots past n_points (even tombstoned free slots) are not valid ids
+    with pytest.raises(ValueError, match="ids must be in"):
+        eng.delete([N + 8])
+    with pytest.raises(ValueError, match="ids must be in"):
+        eng.delete([-1])
+
+
+def test_deleted_ids_never_in_answers_and_brute_force_exact(ds, index):
+    # beta=1.0 makes the candidate pool cover the whole corpus, so the
+    # engine answer must EQUAL brute force over the live points.
+    policy = EnginePolicy(alpha=0.2, beta=1.0, mode="dense")
+    eng = SuCoEngine(jnp.asarray(ds.x), index, policy, capacity=N + 100)
+    rng = np.random.default_rng(4)
+    eng.insert(_fresh(ds.x[:50], rng, b=50))
+    dead = rng.choice(N + 50, size=300, replace=False)
+    eng.delete(dead)
+    q = ds.x[200:208]
+    res = eng.query(q, k=10)
+    ids = np.asarray(res.ids)
+    assert not np.isin(ids, dead).any()
+    # brute force over the live corpus
+    x_all = np.asarray(eng.x)
+    tomb = np.asarray(eng.index.tombstone)
+    live = np.flatnonzero(~tomb)
+    d2 = ((q[:, None, :] - x_all[None, live, :]) ** 2).sum(-1)
+    want = live[np.argsort(d2, axis=1)[:, :10]]
+    assert np.array_equal(np.sort(ids, axis=1), np.sort(want, axis=1))
+
+
+def test_query_paths_bit_identical_under_tombstones(ds, index):
+    tomb = jnp.asarray(np.random.default_rng(5).random(N) < 0.25)
+    idx_t = dataclasses.replace(index, tombstone=tomb)
+    q = jnp.asarray(ds.x[:6])
+    outs = {}
+    for mode in ("dense", "streaming", "fused"):
+        r = suco_query(
+            jnp.asarray(ds.x), idx_t, q, k=9,
+            alpha=0.1, beta=0.05, mode=mode, block_n=512,
+        )
+        outs[mode] = (np.asarray(r.ids), np.asarray(r.dists))
+    for mode in ("streaming", "fused"):
+        assert np.array_equal(outs["dense"][0], outs[mode][0]), mode
+        assert np.allclose(outs["dense"][1], outs[mode][1]), mode
+    assert not np.asarray(tomb)[outs["dense"][0]].any()
+
+
+def test_k_bounded_by_live_count(ds, index):
+    eng = _mutable_engine(ds, index, capacity=N + 4)
+    eng.delete(np.arange(N - 5, N))
+    assert eng.n_live == N - 5
+    eng.query(ds.x[0], k=N - 5)  # boundary: fine
+    with pytest.raises(ValueError, match="must be in"):
+        eng.query(ds.x[0], k=N - 4)
+
+
+# ---------------------------------------------------------------------------
+# zero-retrace serving invariant under mutation
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_never_retraces(ds, index):
+    eng = _mutable_engine(ds, index, mode="dense")
+    eng.warmup(batch_sizes=(1, 4), ks=(5,))
+    c0 = eng.compile_count
+    rng = np.random.default_rng(6)
+    for step in range(3):
+        eng.insert(_fresh(ds.x[:16], rng, b=16))
+        eng.delete(rng.integers(0, N, size=8))
+        eng.query(ds.x[:4], k=5)
+        eng.query(ds.x[0], k=5)
+    assert eng.compile_count == c0
+
+
+# ---------------------------------------------------------------------------
+# warm swap
+# ---------------------------------------------------------------------------
+
+
+def test_swap_requires_warm_successor_and_adopts_state(ds, index):
+    eng = _mutable_engine(ds, index, mode="dense")
+    eng.warmup(batch_sizes=(1, 4), ks=(5,))
+    x2 = ds.x[:1500]
+    idx2 = build_index(jnp.asarray(x2), CFG)
+    succ = SuCoEngine(
+        jnp.asarray(x2), idx2, EnginePolicy(alpha=0.1, beta=0.05, mode="dense"),
+        capacity=1600,
+    )
+    with pytest.raises(ValueError, match="not warmed"):
+        eng.swap(succ)
+    for b, k in sorted(eng._buckets_seen):
+        succ.warmup([b], [k])
+    c_succ = succ.compile_count
+    eng.swap(succ)
+    assert eng.n_live == 1500
+    assert eng.capacity == 1600
+    r = eng.query(ds.x[:4], k=5)
+    assert np.asarray(r.ids).max() < 1600
+    # post-swap serving runs on the successor's warmed executables
+    assert succ.compile_count == c_succ
+
+
+# ---------------------------------------------------------------------------
+# atomic artifact save (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_save_is_atomic_under_simulated_crash(ds, index, tmp_path, monkeypatch):
+    path = tmp_path / "index.npz"
+    index.save(path, CFG)
+    good = path.read_bytes()
+
+    def crashing_savez(f, **payload):
+        f.write(b"partial garbage")
+        raise OSError("simulated crash mid-write")
+
+    monkeypatch.setattr(np, "savez", crashing_savez)
+    with pytest.raises(OSError, match="simulated crash"):
+        index.save(path, CFG)
+    monkeypatch.undo()
+    # the live artifact is untouched and still loads; no temp litter
+    assert path.read_bytes() == good
+    loaded, _ = load_index_artifact(path)
+    assert loaded.n_points == N
+    assert os.listdir(tmp_path) == ["index.npz"]
+
+
+def test_tombstone_roundtrips_through_artifact(ds, index, tmp_path):
+    tomb = jnp.asarray(np.random.default_rng(7).random(N) < 0.1)
+    idx_t = dataclasses.replace(index, tombstone=tomb)
+    path = tmp_path / "tomb.npz"
+    idx_t.save(path, CFG)
+    loaded, cfg = load_index_artifact(path)
+    assert loaded.tombstone is not None
+    assert np.array_equal(np.asarray(loaded.tombstone), np.asarray(tomb))
+    assert loaded.n_live == N - int(np.asarray(tomb).sum())
+
+
+def test_v1_artifact_still_loads(ds, index, tmp_path):
+    # A pre-mutation artifact has version 1 and no tombstone key; the
+    # reader must keep accepting it (tombstone comes back None).
+    path = tmp_path / "v2.npz"
+    index.save(path, CFG)
+    with np.load(path, allow_pickle=False) as z:
+        payload = {k: z[k] for k in z.files}
+    assert "tombstone" not in payload
+    payload["version"] = np.asarray(1, np.int64)
+    v1 = tmp_path / "v1.npz"
+    with open(v1, "wb") as f:
+        np.savez(f, **payload)
+    loaded, cfg = load_index_artifact(v1)
+    assert loaded.tombstone is None
+    assert loaded.n_points == N
+    assert cfg.n_subspaces == CFG.n_subspaces
+
+
+# ---------------------------------------------------------------------------
+# unified candidate_pool_size clamp (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60)
+@given(
+    n=st.integers(min_value=0, max_value=200_000),
+    k=st.integers(min_value=1, max_value=500),
+    beta=st.floats(min_value=0.0, max_value=2.0),
+)
+def test_candidate_pool_size_properties(n, k, beta):
+    pool = candidate_pool_size(n, k, beta)
+    assert pool >= k  # enough candidates to fill an answer
+    assert pool >= min(int(beta * n), n) or pool == k
+    # the n-clamp: beta*n past the corpus never over-allocates
+    assert pool <= max(k, n)
+    # monotone in beta
+    assert candidate_pool_size(n, k, min(beta * 2, 2.0)) >= pool
+
+
+def test_candidate_pool_size_edge_cases():
+    assert candidate_pool_size(100, 10, 0.0) == 10  # beta*n < k
+    assert candidate_pool_size(100, 10, 5.0) == 100  # beta*n > n: clamped
+    assert candidate_pool_size(7, 10, 0.5) == 10  # k > n: k wins
+    # post-delete live count shrinking below beta*n_build stays clamped
+    assert candidate_pool_size(50, 10, 1.0) == 50
+    with pytest.raises(ValueError):
+        candidate_pool_size(-1, 10, 0.5)
+    with pytest.raises(ValueError):
+        candidate_pool_size(100, 0, 0.5)
