@@ -24,8 +24,12 @@ server.  ``--suite serve_mutation`` runs the live-mutation lane (insert
 throughput, tombstone-delete visibility, warm re-index handoff with a
 ~0 swap pause and recall before/after the re-cluster) and merges a
 ``mutation`` section into ``BENCH_serve.json`` — run it after ``serve``
-so one artifact carries the whole serving trajectory.  ``--toy`` is the
-CI smoke form for any of these: shrunk sizes, writes the ``*.toy.json``
+so one artifact carries the whole serving trajectory.
+``--suite serve_recovery`` runs the durability lane (snapshot wall time,
+cold-recovery wall time and WAL replay rate vs log length, and the
+crash-drill assertion pass over every instrumented boundary) and merges
+a ``recovery`` section into the same artifact.  ``--toy`` is the CI
+smoke form for any of these: shrunk sizes, writes the ``*.toy.json``
 artifact.
 """
 
@@ -55,6 +59,7 @@ SUITES = {
     "serve_async": "benchmarks.serve:run_async",
     "serve_chaos": "benchmarks.serve_chaos",
     "serve_mutation": "benchmarks.serve_mutation",
+    "serve_recovery": "benchmarks.serve_recovery",
 }
 
 

@@ -1,0 +1,259 @@
+"""Durability + crash-recovery suite: recovery wall time, WAL replay
+rate vs log length, and the crash-drill assertion pass.
+
+Run via ``python -m benchmarks.run --suite serve_recovery --toy`` — the
+CI lane for the ISSUE-10 durability subsystem.  Emits a ``recovery``
+section *into* ``BENCH_serve.json`` (``.toy.json`` under ``--toy``),
+merging with whatever the ``serve``/``serve_mutation`` suites wrote
+earlier so one artifact carries the whole serving trajectory.
+
+Three tracked claims:
+
+* ``snapshot`` — wall time and artifact size of one checkpointed
+  artifact-v3 write (engine + serving-state sidecar + WAL truncation).
+* ``replay`` — cold :func:`~repro.serve.durability.recover` wall time as
+  a function of WAL tail length (snapshot load + record replay through
+  the real mutation surface + cache re-warm), with the recovered state
+  asserted fingerprint-identical to the pre-crash stack.  The marginal
+  records/s between the two log lengths isolates pure replay throughput
+  from the fixed snapshot-load + warmup cost.
+* ``drills`` — the full crash-point sweep at a small fixed scale: every
+  instrumented boundary fired once under group commit, recovery
+  bit-identical to a crash-free replay of the acknowledged prefix with
+  zero acknowledged records lost and zero retraces.  This is an
+  assertion pass, not a perf number — the drill wall time is reported
+  only so CI notices pathological regressions.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+
+from benchmarks.common import Row
+from benchmarks.serve import OUT_PATH, TOY_OUT_PATH
+from repro.core import EnginePolicy, SuCoConfig, SuCoEngine
+from repro.core.suco import build_index
+from repro.data import GENERATORS
+from repro.serve.ann import AnnServer, DegradationLadder
+from repro.serve.chaos import CRASH_POINTS, drill_steps, recovery_drill
+from repro.serve.durability import (
+    Durability,
+    DurabilityConfig,
+    fingerprint_diff,
+    recover,
+    state_fingerprint,
+)
+from repro.serve.mutation import MutationManager
+
+K = 10
+
+FULL = dict(n=20_000, d=32, sqrt_k=16, n_subspaces=8, kmeans_iters=3,
+            wal_lengths=(100, 1000))
+TOY = dict(n=2_000, d=16, sqrt_k=8, n_subspaces=4, kmeans_iters=2,
+           wal_lengths=(50, 200))
+
+# Drills always run at one small fixed scale: they assert correctness at
+# every crash boundary, they do not measure anything scale-dependent.
+DRILL_SCALE = dict(n=500, d=16, sqrt_k=8, n_subspaces=4, kmeans_iters=2)
+
+
+def _config(scale: dict) -> SuCoConfig:
+    return SuCoConfig(
+        n_subspaces=scale["n_subspaces"], sqrt_k=scale["sqrt_k"],
+        kmeans_iters=scale["kmeans_iters"], seed=0,
+    )
+
+
+def _build_stack(x: np.ndarray, scale: dict, root: Path, *,
+                 capacity: int, injector=None):
+    config = _config(scale)
+    xj = jax.numpy.asarray(x)
+    engine = SuCoEngine(
+        xj, build_index(xj, config),
+        EnginePolicy(alpha=0.05, beta=0.01, mode="streaming"),
+        capacity=capacity,
+    )
+    ladder = DegradationLadder(engine, levels=1, stats_seed=0)
+    server = AnnServer(engine, ladder=ladder)
+    ladder.warmup([1], [K])
+    manager = MutationManager(server, config, stats_seed=0)
+    dur = Durability(
+        root, DurabilityConfig(fsync="group"), crash=injector,
+        start_worker=False,
+    ).attach(server, manager)
+    return server, manager, dur
+
+
+def _run_recovery(scale: dict) -> dict:
+    n, d = scale["n"], scale["d"]
+    x = np.asarray(GENERATORS["gaussian_mixture"](n, d, 0)).astype(np.float32)
+    rng = np.random.default_rng(0)
+    max_len = max(scale["wal_lengths"])
+    capacity = n + 4 * max_len + 64
+
+    replay_rows = []
+    snapshot_row = None
+    for wal_len in scale["wal_lengths"]:
+        tmp = Path(tempfile.mkdtemp(prefix="suco-recovery-"))
+        try:
+            root = tmp / "root"
+            server, manager, dur = _build_stack(
+                x, scale, root, capacity=capacity
+            )
+            t0 = time.perf_counter()
+            dur.snapshot()
+            snap_s = time.perf_counter() - t0
+            if snapshot_row is None:
+                snap_path = sorted(root.glob("snapshot-*.npz"))[-1]
+                snapshot_row = dict(
+                    wall_s=round(snap_s, 4),
+                    bytes=snap_path.stat().st_size,
+                )
+            # one WAL record per op: 3 inserts for every delete
+            for i in range(wal_len):
+                if i % 4 == 3:
+                    manager.delete(manager.live_keys()[
+                        rng.integers(0, manager.server.engine.n_live, size=2)
+                    ])
+                else:
+                    rows = (
+                        x[rng.integers(0, n, size=4)]
+                        + 0.05 * rng.standard_normal((4, d)).astype(np.float32)
+                    )
+                    manager.insert(rows)
+            dur.flush()
+            wal_bytes = (root / "wal.log").stat().st_size
+            dur.abandon()  # process death: no orderly close
+
+            t0 = time.perf_counter()
+            res = recover(root, start_worker=False)
+            wall_s = time.perf_counter() - t0
+            diff = fingerprint_diff(
+                state_fingerprint(server, manager),
+                state_fingerprint(res.server, res.manager),
+            )
+            assert not diff, f"recovery diverged on {diff}"
+            assert res.report.replayed == wal_len
+            replay_rows.append(dict(
+                wal_records=wal_len,
+                wal_bytes=wal_bytes,
+                wall_s=round(wall_s, 4),
+                replayed=res.report.replayed,
+                warmed=res.report.warmed,
+                records_per_s=round(wal_len / wall_s, 1),
+            ))
+            res.durability.close()
+        finally:
+            shutil.rmtree(tmp)
+
+    # marginal replay throughput: strips the fixed snapshot-load + warmup
+    # cost shared by both runs
+    lo, hi = replay_rows[0], replay_rows[-1]
+    d_records = hi["wal_records"] - lo["wal_records"]
+    d_wall = hi["wall_s"] - lo["wall_s"]
+    marginal = round(d_records / d_wall, 1) if d_wall > 1e-9 else None
+
+    # -- crash-drill assertion pass -----------------------------------------
+    ds_x = np.asarray(
+        GENERATORS["gaussian_mixture"](DRILL_SCALE["n"], DRILL_SCALE["d"], 0)
+    ).astype(np.float32)
+    t0 = time.perf_counter()
+    passed = 0
+    for point in CRASH_POINTS:
+        tmp = Path(tempfile.mkdtemp(prefix="suco-drill-"))
+        try:
+            rep = recovery_drill(
+                tmp,
+                lambda r, inj: _build_stack(
+                    ds_x, DRILL_SCALE, r,
+                    capacity=DRILL_SCALE["n"] + 64, injector=inj,
+                ),
+                drill_steps(DRILL_SCALE["d"], seed=3),
+                point,
+                queries=ds_x[:4],
+                k=K,
+            )
+            assert rep.fired, f"{point}: never reached"
+            assert rep.lost_acked == 0, f"{point}: lost acknowledged records"
+            assert rep.bit_identical, f"{point}: {rep.fingerprint_diff}"
+            assert rep.retraces_after_warmup == 0, f"{point}: retraced"
+            assert rep.answers_match, f"{point}: answers diverged"
+            passed += 1
+        finally:
+            shutil.rmtree(tmp)
+    drills = dict(
+        points=len(CRASH_POINTS),
+        passed=passed,
+        fsync="group",
+        wall_s=round(time.perf_counter() - t0, 2),
+    )
+
+    return dict(
+        snapshot=snapshot_row,
+        replay=replay_rows,
+        marginal_replay_records_per_s=marginal,
+        drills=drills,
+    )
+
+
+def collect(*, toy: bool = False, out_path: Path | None = None) -> dict:
+    scale = TOY if toy else FULL
+    if out_path is None:
+        out_path = TOY_OUT_PATH if toy else OUT_PATH
+    section = _run_recovery(scale)
+    # Merge into the serve artifact: one file carries the whole serving
+    # trajectory.  Standalone runs create a minimal artifact.
+    if out_path.exists():
+        payload = json.loads(out_path.read_text())
+    else:
+        payload = dict(
+            meta=dict(
+                schema="suco-serve-v1",
+                backend=jax.default_backend(),
+                toy=toy,
+                n=scale["n"],
+                d=scale["d"],
+            )
+        )
+    payload["recovery"] = section
+    out_path.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def run(*, toy: bool = False) -> list[Row]:
+    payload = collect(toy=toy)
+    rec = payload["recovery"]
+    rows: list[Row] = [
+        (
+            "serve_recovery/snapshot",
+            rec["snapshot"]["wall_s"] * 1e6,
+            f"bytes={rec['snapshot']['bytes']}",
+        ),
+    ]
+    for r in rec["replay"]:
+        rows.append((
+            f"serve_recovery/replay_{r['wal_records']}",
+            r["wall_s"] * 1e6,
+            f"records_per_s={r['records_per_s']};warmed={r['warmed']};"
+            f"wal_bytes={r['wal_bytes']}",
+        ))
+    rows.append((
+        "serve_recovery/drills",
+        rec["drills"]["wall_s"] * 1e6,
+        f"passed={rec['drills']['passed']}/{rec['drills']['points']};"
+        f"fsync={rec['drills']['fsync']};"
+        f"marginal_replay_per_s={rec['marginal_replay_records_per_s']}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(toy=True):
+        print(",".join(map(str, r)))

@@ -5,12 +5,16 @@ it — the territory where retrace hazards and accidental host syncs live.
 Three rules:
 
 * ``host-sync`` — ``np.asarray`` / ``block_until_ready`` / ``.item()`` /
-  ``jax.device_get`` on device data blocks the dispatch pipeline.  Every such
-  point in ``serve/``/``distributed/`` must carry an explicit
+  ``jax.device_get`` on device data blocks the dispatch pipeline, and
+  ``os.fsync`` / ``os.fdatasync`` blocks the caller on durable storage
+  (milliseconds, not microseconds — a stray fsync on the serving path is
+  the WAL's no-blocking-fsync invariant broken).  Every such point in
+  ``serve/``/``distributed/`` must carry an explicit
   ``# jaxlint: sync-ok`` annotation (the AsyncAnnServer retire point is the
-  only blocking point in the hot path; everything else is warmup or
-  checkpoint I/O).  Conversions of host-literal containers (lists, list
-  comprehensions, constants) are not syncs and are ignored.
+  only blocking point in the hot path; everything else is warmup,
+  checkpoint I/O, or the durability maintenance thread).  Conversions of
+  host-literal containers (lists, list comprehensions, constants) are not
+  syncs and are ignored.
 * ``tracer-branch`` — a Python ``if``/``while`` on a parameter of a jitted
   function branches on a tracer: either a ConcretizationTypeError at trace
   time or, via ``static_argnames``, a silent retrace per distinct value.
@@ -35,6 +39,11 @@ _DISABLE = re.compile(r"#\s*jaxlint:\s*disable=([\w,-]+)")
 
 #: Call attribute names that force device->host synchronisation.
 _SYNC_ATTRS = frozenset({"block_until_ready", "device_get"})
+#: Blocking durable-storage calls: not a device sync, but the same SLO
+#: hazard — an fsync on the serving path stalls the dispatch loop for
+#: milliseconds.  The durability layer (serve/durability.py) confines
+#: these to per-record opt-in, the maintenance thread, and snapshot I/O.
+_BLOCKING_IO = frozenset({"fsync", "fdatasync"})
 _NUMPY_NAMES = frozenset({"np", "numpy"})
 _NUMPY_CONVERTERS = frozenset({"asarray", "array"})
 
@@ -85,6 +94,11 @@ def _sync_call_reason(call: ast.Call) -> str | None:
     if isinstance(func, ast.Attribute):
         if func.attr in _SYNC_ATTRS:
             return f"{_dotted(func) or func.attr}() blocks until device work finishes"
+        if func.attr in _BLOCKING_IO:
+            return (
+                f"{_dotted(func) or func.attr}() blocks the caller on durable "
+                "storage"
+            )
         if func.attr == "item" and not call.args and not call.keywords:
             return ".item() pulls a device scalar to the host"
         if isinstance(func.value, ast.Name) and func.value.id in _NUMPY_NAMES:
@@ -96,6 +110,8 @@ def _sync_call_reason(call: ast.Call) -> str | None:
                 )
     elif isinstance(func, ast.Name) and func.id in _SYNC_ATTRS:
         return f"{func.id}() blocks until device work finishes"
+    elif isinstance(func, ast.Name) and func.id in _BLOCKING_IO:
+        return f"{func.id}() blocks the caller on durable storage"
     return None
 
 
@@ -240,8 +256,8 @@ AST_RULES: tuple[str, ...] = ("host-sync", "tracer-branch", "jit-in-hot-path")
 
 AST_RULE_DOCS: dict[str, str] = {
     "host-sync": (
-        "every device->host sync point carries an explicit "
-        "'# jaxlint: sync-ok' annotation"
+        "every device->host sync point — and every blocking fsync/fdatasync — "
+        "carries an explicit '# jaxlint: sync-ok' annotation"
     ),
     "tracer-branch": (
         "no Python if/while branches on a traced argument of a jitted function"

@@ -102,6 +102,7 @@ import functools
 import os
 import tempfile
 import zipfile
+import zlib
 from typing import Iterable, Mapping, NamedTuple, Sequence
 
 import jax
@@ -162,10 +163,21 @@ _BUILD_MODES = ("auto", "dense", "chunked", "minibatch")
 # SuCoIndex.save/load artifact contract: a plain .npz, tagged and
 # version-stamped so a serving process refuses artifacts it cannot trust.
 # Version 2 added the optional "tombstone" key (live-mutation deletes);
-# version-1 artifacts load unchanged with no tombstones.
+# version 3 adds per-array content checksums ("crc_<key>") and an optional
+# "extra_<name>" block (serving-state sidecar: corpus rows, external key
+# table, WAL high-water mark — see repro.serve.durability).  Version-1/-2
+# artifacts load unchanged (no checksums to verify, no extras).
 _ARTIFACT_MAGIC = "suco-index"
-INDEX_ARTIFACT_VERSION = 2
-_ARTIFACT_READABLE_VERSIONS = (1, 2)
+INDEX_ARTIFACT_VERSION = 3
+_ARTIFACT_READABLE_VERSIONS = (1, 2, 3)
+
+# Payload keys excluded from content checksumming: both are validated
+# semantically before any checksum is looked at (magic match, version
+# gate), and tests rewrite them in place to probe those gates.
+_ARTIFACT_UNCHECKSUMMED = ("artifact", "version")
+
+#: Prefix for caller-supplied serving-state arrays riding in the artifact.
+_ARTIFACT_EXTRA_PREFIX = "extra_"
 
 # Keys every readable artifact must carry (the optional config_* block is
 # allowed to be absent; these are not).
@@ -182,6 +194,21 @@ _ARTIFACT_REQUIRED_KEYS = (
     "spec_perm",
     "spec_bounds",
 )
+
+
+def _array_crc(a: np.ndarray) -> np.uint32:
+    """CRC32 over an array's dtype, shape, and raw bytes.
+
+    The content checksum stored per payload array (``crc_<key>``): a
+    bit-flip inside the npz member that slips past the zip-level CRC (or a
+    rewrite that kept the zip consistent) still fails the load loudly with
+    the offending key named, instead of silently serving wrong answers.
+    """
+    a = np.ascontiguousarray(a)
+    h = zlib.crc32(str(a.dtype).encode())
+    h = zlib.crc32(repr(a.shape).encode(), h)
+    h = zlib.crc32(a.tobytes(), h)
+    return np.uint32(h & 0xFFFFFFFF)
 
 
 class ArtifactError(ValueError):
@@ -344,7 +371,13 @@ class SuCoIndex:
         counts = self.cell_counts.at[rows, dead_cells].add(-w)
         return dataclasses.replace(self, cell_counts=counts, tombstone=tomb)
 
-    def save(self, path, config: SuCoConfig | None = None) -> None:
+    def save(
+        self,
+        path,
+        config: SuCoConfig | None = None,
+        *,
+        extras: Mapping[str, np.ndarray] | None = None,
+    ) -> None:
         """Persist the index as a version-stamped ``.npz`` artifact.
 
         The artifact holds the four index arrays byte-exactly, the
@@ -353,6 +386,13 @@ class SuCoIndex:
         reconstruct the index without the original build.  Round trips are
         bit-identical.  Written via an open file handle so the exact
         ``path`` is honoured (``np.savez`` alone appends ``.npz``).
+
+        Version 3 additions: every payload array gets a ``crc_<key>``
+        content checksum (verified on load — a bit-flipped block fails
+        loudly naming the key), and ``extras`` rides along as
+        ``extra_<name>`` arrays — the serving-state sidecar
+        (:mod:`repro.serve.durability` stores the corpus rows, the
+        external key table, and the WAL high-water mark there).
 
         The write is **atomic**: the payload lands in a same-directory
         temp file, is fsynced, and is ``os.replace``d onto ``path`` — a
@@ -385,6 +425,19 @@ class SuCoIndex:
                 config_build_mode=np.asarray(config.build_mode),
                 config_block_n=np.asarray(config.block_n, np.int32),
             )
+        if extras:
+            for name, value in extras.items():
+                key = _ARTIFACT_EXTRA_PREFIX + name
+                if key in payload:
+                    raise ValueError(f"duplicate extras key {name!r}")
+                payload[key] = np.asarray(value)
+        payload.update(
+            {
+                f"crc_{k}": _array_crc(v)
+                for k, v in list(payload.items())
+                if k not in _ARTIFACT_UNCHECKSUMMED
+            }
+        )
         path = os.fspath(path)
         parent = os.path.dirname(path) or "."
         # Same directory: os.replace is atomic only within a filesystem.
@@ -527,7 +580,11 @@ def assign_points(
     return cells, counts, jnp.sum(inertia)
 
 
-def load_index_artifact(path) -> tuple[SuCoIndex, SuCoConfig | None]:
+def load_index_artifact(
+    path, *, return_extras: bool = False
+) -> tuple[SuCoIndex, SuCoConfig | None] | tuple[
+    SuCoIndex, SuCoConfig | None, dict[str, np.ndarray]
+]:
     """Load a ``SuCoIndex.save`` artifact -> ``(index, build config | None)``.
 
     Validates the artifact tag, version, and key inventory before touching
@@ -535,6 +592,15 @@ def load_index_artifact(path) -> tuple[SuCoIndex, SuCoConfig | None]:
     truncated/corrupt file raises :class:`ArtifactError` (a ``ValueError``)
     naming the path and the found-vs-expected state instead of leaking a
     bare ``KeyError``/``BadZipFile`` into a serving process.
+
+    Version-3 artifacts additionally carry per-array content checksums
+    (``crc_<key>``): every checksummed array is verified before anything is
+    returned, and a mismatch — a bit-flip the zip layer did not catch, or a
+    tampered rewrite — raises :class:`ArtifactError` naming the offending
+    key.  Pre-checksum artifacts (v1/v2) load with no verification, as
+    before.  With ``return_extras=True`` the result is a 3-tuple whose last
+    element maps each ``extra_<name>`` sidecar array (serving state written
+    by :mod:`repro.serve.durability`) back to ``name``.
     """
     try:
         z = np.load(path, allow_pickle=False)
@@ -563,6 +629,21 @@ def load_index_artifact(path) -> tuple[SuCoIndex, SuCoConfig | None]:
                     f"{version} (this build reads version "
                     f"{INDEX_ARTIFACT_VERSION})"
                 )
+            # Content checksums (v3): verify BEFORE constructing anything —
+            # a serving process must never adopt a bit-flipped centroid
+            # block.  Pre-checksum artifacts simply carry no crc_* keys.
+            for key in sorted(names):
+                if key.startswith("crc_") or f"crc_{key}" not in names:
+                    continue
+                stored = int(z[f"crc_{key}"][()])
+                computed = int(_array_crc(z[key]))
+                if computed != stored:
+                    raise ArtifactError(
+                        f"{path!s}: content checksum mismatch on key "
+                        f"{key!r} (stored 0x{stored:08x}, computed "
+                        f"0x{computed:08x}) — bit-flipped or tampered "
+                        "artifact"
+                    )
             spec = sub.SubspaceSpec(
                 d=int(z["spec_d"][()]),
                 n_subspaces=int(z["spec_n_subspaces"][()]),
@@ -596,6 +677,13 @@ def load_index_artifact(path) -> tuple[SuCoIndex, SuCoConfig | None]:
                     build_mode=str(z["config_build_mode"][()]),
                     block_n=int(z["config_block_n"][()]),
                 )
+            extras: dict[str, np.ndarray] = {}
+            if return_extras:
+                extras = {
+                    k[len(_ARTIFACT_EXTRA_PREFIX):]: z[k]
+                    for k in names
+                    if k.startswith(_ARTIFACT_EXTRA_PREFIX)
+                }
         except ArtifactError:
             raise
         except Exception as e:
@@ -605,6 +693,8 @@ def load_index_artifact(path) -> tuple[SuCoIndex, SuCoConfig | None]:
                 f"{path!s}: {_ARTIFACT_MAGIC} artifact payload is corrupt "
                 f"({type(e).__name__}: {e}) — truncated file?"
             ) from e
+    if return_extras:
+        return index, config, extras
     return index, config
 
 
@@ -1506,9 +1596,15 @@ class SuCoEngine:
         form warms exactly the observed traffic) before serving."""
         return SuCoEngine(self.x, self.index, self.policy.autoscaled(max_buckets))
 
-    def save(self, path, config: SuCoConfig | None = None) -> None:
+    def save(
+        self,
+        path,
+        config: SuCoConfig | None = None,
+        *,
+        extras: Mapping[str, np.ndarray] | None = None,
+    ) -> None:
         """Persist this engine's index artifact (see :meth:`SuCoIndex.save`)."""
-        self.index.save(path, config)
+        self.index.save(path, config, extras=extras)
 
     # ---- live mutation ---------------------------------------------------
 

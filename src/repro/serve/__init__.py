@@ -23,15 +23,40 @@ from repro.serve.ann import (
     latency_summary,
 )
 from repro.serve.chaos import (
+    CRASH_POINTS,
     ChaosConfig,
     ChaosEngine,
     ChaosError,
+    CrashInjector,
+    CrashPoint,
+    DrillReport,
+    DrillStep,
     ReplayReport,
     VirtualClock,
+    drill_steps,
     flood_trace,
     kill_pool_engine,
+    recovery_drill,
     replay,
     wrap_ladder,
+)
+from repro.serve.durability import (
+    Durability,
+    DurabilityConfig,
+    RecoveryError,
+    RecoveryReport,
+    RecoveryResult,
+    WalRecord,
+    WriteAheadLog,
+    load_serving_stack,
+    recover,
+    save_stack,
+)
+from repro.serve.mutation import (
+    DriftMonitor,
+    DriftReport,
+    MutationManager,
+    ReindexInProgressError,
 )
 
 __all__ = [
@@ -56,4 +81,25 @@ __all__ = [
     "kill_pool_engine",
     "replay",
     "wrap_ladder",
+    "CRASH_POINTS",
+    "CrashInjector",
+    "CrashPoint",
+    "DrillReport",
+    "DrillStep",
+    "drill_steps",
+    "recovery_drill",
+    "Durability",
+    "DurabilityConfig",
+    "RecoveryError",
+    "RecoveryReport",
+    "RecoveryResult",
+    "WalRecord",
+    "WriteAheadLog",
+    "load_serving_stack",
+    "recover",
+    "save_stack",
+    "DriftMonitor",
+    "DriftReport",
+    "MutationManager",
+    "ReindexInProgressError",
 ]

@@ -344,10 +344,14 @@ class AnnServer:
         backoff_s: float = 0.002,
         seed: int = 0,
         sleep: Callable[[float], None] = time.sleep,
+        durability=None,
     ):
         self.engine = engine
         self.max_batch = max_batch
         self.clock = clock
+        # A repro.serve.durability.Durability (or None): when set, every
+        # acknowledged mutation is WAL-logged before the call returns.
+        self.durability = durability
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.max_queue = max_queue
@@ -497,13 +501,18 @@ class AnnServer:
 
     # ---- live mutation ---------------------------------------------------
 
-    def insert(self, x_new) -> np.ndarray:
+    def insert(self, x_new, *, keys=None) -> np.ndarray:
         """Insert points into the serving engine between steps; returns the
         assigned slot ids.  Ladder siblings are re-pointed at the mutated
-        arrays so degraded answers see the same live corpus."""
+        arrays so degraded answers see the same live corpus.  With a
+        durability root attached the insert is WAL-logged (with its
+        external ``keys``, if the caller tracks any) before the return —
+        the acknowledgement implies the record is framed on disk."""
         slots = self.engine.insert(x_new)
         if self.ladder is not None:
             self.ladder.rebind()
+        if self.durability is not None:
+            self.durability.log_insert(x_new, slots, keys=keys)
         return slots
 
     def delete(self, ids) -> int:
@@ -513,6 +522,8 @@ class AnnServer:
         n_newly = self.engine.delete(ids)
         if self.ladder is not None:
             self.ladder.rebind()
+        if self.durability is not None:
+            self.durability.log_delete(ids)
         return n_newly
 
     def swap(self, engine: SuCoEngine, *, ladder: DegradationLadder | None = None) -> None:
@@ -563,6 +574,11 @@ class AnnServer:
             self.ladder.m_stat = ladder.m_stat
             self.ladder.sigma_stat = ladder.sigma_stat
             self.ladder._bounds = {}
+        if self.durability is not None:
+            # A bare swap installs state the WAL cannot replay; the
+            # durability layer checkpoints it (suppressed when the swap is
+            # part of a manager-driven, WAL-replayable reindex).
+            self.durability.note_swap()
 
     # ---- fault isolation -------------------------------------------------
 

@@ -26,7 +26,14 @@ Injectors (all seeded, all off by default):
   degradation ladder);
 * **shard death** — :func:`kill_pool_engine` makes one per-k engine of a
   :class:`~repro.distributed.engine.ShardedEnginePool` raise on every
-  query (exercises k-class rebinding).
+  query (exercises k-class rebinding);
+* **process death** — :class:`CrashInjector` raises :class:`CrashPoint`
+  at any one of the instrumented durability boundaries
+  (:data:`CRASH_POINTS`: WAL append/fsync, snapshot write/rename, log
+  truncation, the off-thread re-index prepare); :func:`recovery_drill`
+  kills a durable stack there, recovers it from disk, and verifies the
+  no-acknowledged-loss / bit-identical-state contract of
+  :mod:`repro.serve.durability`.
 
 Usage sketch (see ``tests/test_chaos.py`` / ``benchmarks/serve_chaos.py``)::
 
@@ -42,7 +49,8 @@ Usage sketch (see ``tests/test_chaos.py`` / ``benchmarks/serve_chaos.py``)::
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from pathlib import Path
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -58,6 +66,13 @@ __all__ = [
     "flood_trace",
     "replay",
     "kill_pool_engine",
+    "CrashPoint",
+    "CrashInjector",
+    "CRASH_POINTS",
+    "DrillStep",
+    "DrillReport",
+    "drill_steps",
+    "recovery_drill",
 ]
 
 
@@ -291,6 +306,249 @@ def replay(
         max_level=max((r.degrade_level for r in done), default=0),
         summary=latency_summary(reqs),
         retraces=server.executables - exe_before,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Crash-point injection + recovery drills (the durability counterpart of the
+# fault injectors above — see repro.serve.durability / docs/durability.md)
+# ---------------------------------------------------------------------------
+
+
+class CrashPoint(BaseException):
+    """The injected process death.  A ``BaseException`` on purpose: real
+    crashes don't care about ``except Exception`` cleanup — only state
+    already on disk survives, which is exactly what the drill tests."""
+
+
+#: Every instrumented write/rename/fsync boundary in the durability layer.
+#: ``Durability`` / ``WriteAheadLog`` call ``injector.reach(point)`` at each;
+#: the recovery drill kills the stack at every one in turn.
+CRASH_POINTS: tuple[str, ...] = (
+    "wal.append.pre",  # record not yet written (mutation applied, un-acked)
+    "wal.append.torn",  # half a frame on disk — the torn-tail case
+    "wal.append.post-write",  # frame fully written, ack never returned
+    "wal.fsync.post",  # record storage-durable, ack never returned
+    "snapshot.pre",  # before the checkpoint starts
+    "snapshot.post-write",  # .writing staged, final name not yet replaced
+    "snapshot.post-rename",  # snapshot live, WAL not yet truncated
+    "wal.truncate.post-write",  # truncated log staged as .tmp
+    "wal.truncate.post-rename",  # truncated log live, handle not reopened
+    "reindex.mid-prepare",  # off-thread re-cluster died mid-build
+)
+
+
+class CrashInjector:
+    """Arms one :data:`CRASH_POINTS` name and raises :class:`CrashPoint`
+    the first time the durability layer reaches it.  ``reached`` records
+    every boundary crossed (armed or not) — the coverage ledger the drill
+    sweep uses to prove each point actually fires."""
+
+    def __init__(self, armed: str | None = None):
+        self.armed = armed
+        self.fired = False
+        self.reached: list[str] = []
+
+    def arm(self, point: str) -> "CrashInjector":
+        if point not in CRASH_POINTS:
+            raise ValueError(f"unknown crash point {point!r}")
+        self.armed = point
+        self.fired = False
+        return self
+
+    def reach(self, point: str) -> None:
+        self.reached.append(point)
+        if self.armed == point and not self.fired:
+            self.fired = True
+            raise CrashPoint(point)
+
+
+@dataclasses.dataclass(frozen=True)
+class DrillStep:
+    """One scripted action of a recovery drill.
+
+    ``kind``: ``"insert"`` (payload = rows), ``"delete"`` (payload =
+    external keys), ``"reindex"``, ``"snapshot"``, ``"flush"`` (the
+    group-commit, driven synchronously so drills stay deterministic).
+    """
+
+    kind: str
+    payload: np.ndarray | None = None
+
+    @property
+    def records(self) -> int:
+        """WAL records this step appends when fully acknowledged."""
+        return 1 if self.kind in ("insert", "delete", "reindex") else 0
+
+
+def drill_steps(d: int, *, seed: int = 0) -> list[DrillStep]:
+    """The standard drill script: every :data:`CRASH_POINTS` boundary is
+    reachable from it under both fsync policies.  The explicit ``flush``
+    fires ``wal.fsync.post`` under group-commit (under per-record fsync
+    that point fires at the first insert instead); the explicit
+    ``snapshot`` precedes the re-index so the ``snapshot.*`` /
+    ``wal.truncate.*`` points fire at a scripted boundary."""
+    rng = np.random.default_rng(seed)
+    row = lambda b: rng.standard_normal((b, d)).astype(np.float32)  # noqa: E731
+    return [
+        DrillStep("insert", row(3)),
+        DrillStep("flush"),
+        DrillStep("delete", np.asarray([0, 1], np.int64)),
+        DrillStep("snapshot"),
+        DrillStep("insert", row(2)),
+        DrillStep("reindex"),
+        DrillStep("insert", row(2)),
+    ]
+
+
+@dataclasses.dataclass(frozen=True)
+class DrillReport:
+    """Outcome of one kill → recover → verify drill."""
+
+    crash_point: str
+    fired: bool  # the armed boundary was actually reached
+    acked: int  # mutation records acknowledged before the kill
+    applied: int  # records reflected in the recovered state
+    lost_acked: int  # max(0, acked - applied): MUST be 0
+    bit_identical: bool  # fingerprints match the crash-free reference
+    fingerprint_diff: tuple[str, ...]
+    retraces_after_warmup: int  # executable growth while serving: MUST be 0
+    answers_match: bool  # recovered answers == reference answers
+    quality_bounds_match: bool  # Theorem-2 floors agree with the reference
+    dropped_bytes: int  # torn WAL tail truncated during recovery
+    snapshots_skipped: int
+
+
+def _apply_drill_step(server, manager, dur, step: DrillStep) -> None:
+    if step.kind == "insert":
+        manager.insert(step.payload)
+    elif step.kind == "delete":
+        manager.delete(step.payload)
+    elif step.kind == "reindex":
+        manager.reindex()
+    elif step.kind == "snapshot":
+        dur.snapshot()
+    elif step.kind == "flush":
+        dur.flush()
+    else:
+        raise ValueError(f"unknown drill step kind {step.kind!r}")
+
+
+def _drill_answers(server, queries, k: int):
+    """Serve ``queries`` one at a time (the warmed batch-1 bucket) and
+    return their ``(ids, dists)`` in order."""
+    out = []
+    for i, q in enumerate(queries):
+        req = AnnRequest(i, np.asarray(q, np.float32), k=k)  # jaxlint: sync-ok — host payload
+        server.submit(req)
+        while server.queue:
+            server.step()
+        if getattr(server, "inflight", 0):
+            server.flush()
+        out.append((req.ids, req.dists))
+    return out
+
+
+def recovery_drill(
+    root,
+    build: Callable,
+    steps: Sequence[DrillStep],
+    crash_point: str,
+    *,
+    queries: np.ndarray,
+    k: int = 10,
+    recover_kwargs: dict | None = None,
+) -> DrillReport:
+    """Kill a durable serving stack at ``crash_point``, recover it, and
+    verify the durability contract against a crash-free reference.
+
+    ``build(dir, injector)`` constructs a fresh serving stack rooted at
+    ``dir`` — returning ``(server, manager, durability)`` with the
+    injector wired into the :class:`~repro.serve.durability.Durability`
+    (``crash=injector``) and ``start_worker=False`` (drills drive the
+    group-commit flush synchronously via :class:`DrillStep` so the kill
+    schedule is deterministic).
+
+    Protocol: build → clean baseline snapshot → arm → run ``steps``
+    counting acknowledged records until :class:`CrashPoint` (or script
+    end) → abandon (no final flush: the OS page cache is all recovery
+    gets) → :func:`repro.serve.durability.recover` → rebuild a reference
+    stack in a sibling directory and replay the acknowledged prefix
+    crash-free → compare byte-for-byte:
+
+    * zero acknowledged records lost (``applied >= acked``; the one-past
+      case is a record that was framed but whose ack never returned);
+    * state fingerprints bit-identical to the reference;
+    * recovered answers identical, with zero retraces while serving
+      (the snapshot's warm surface covers the traffic);
+    * Theorem-2 quality floors agree with the reference ladder.
+    """
+    root = Path(root)
+    crash_dir, ref_dir = root / "crash", root / "ref"
+    injector = CrashInjector()
+    server, manager, dur = build(crash_dir, injector)
+    dur.snapshot()  # clean baseline — every drill starts recoverable
+    injector.arm(crash_point)
+    acked = 0
+    try:
+        for step in steps:
+            _apply_drill_step(server, manager, dur, step)
+            acked += step.records
+    except CrashPoint:
+        pass
+    dur.abandon()  # process death: no orderly flush
+
+    from repro.serve.durability import (  # lazy: chaos must import light
+        fingerprint_diff,
+        recover,
+        state_fingerprint,
+    )
+
+    rec = recover(crash_dir, start_worker=False, **(recover_kwargs or {}))
+    applied = rec.report.applied_records
+
+    ref_server, ref_manager, ref_dur = build(ref_dir, CrashInjector())
+    cum = 0
+    for step in steps:
+        if cum + step.records > applied:
+            break
+        _apply_drill_step(ref_server, ref_manager, ref_dur, step)
+        cum += step.records
+
+    diff = fingerprint_diff(
+        state_fingerprint(rec.server, rec.manager),
+        state_fingerprint(ref_server, ref_manager),
+    )
+    exe0 = rec.server.executables
+    got = _drill_answers(rec.server, queries, k)
+    retraces = rec.server.executables - exe0
+    want = _drill_answers(ref_server, queries, k)
+    answers_match = all(
+        np.array_equal(g[0], w[0]) and np.array_equal(g[1], w[1])
+        for g, w in zip(got, want)
+    )
+    bounds_match = True
+    if rec.server.ladder is not None and ref_server.ladder is not None:
+        bounds_match = all(
+            rec.server.ladder.quality_bound(lv, k)
+            == ref_server.ladder.quality_bound(lv, k)
+            for lv in range(rec.server.ladder.max_level + 1)
+        )
+    rec.durability.close()
+    ref_dur.close()
+    return DrillReport(
+        crash_point=crash_point,
+        fired=injector.fired,
+        acked=acked,
+        applied=applied,
+        lost_acked=max(0, acked - applied),
+        bit_identical=not diff,
+        fingerprint_diff=diff,
+        retraces_after_warmup=retraces,
+        answers_match=answers_match,
+        quality_bounds_match=bounds_match,
+        dropped_bytes=rec.report.dropped_bytes,
+        snapshots_skipped=rec.report.snapshots_skipped,
     )
 
 

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 
 import jax.numpy as jnp
 import numpy as np
@@ -57,8 +58,16 @@ __all__ = [
     "DriftReport",
     "DriftMonitor",
     "MutationManager",
+    "ReindexInProgressError",
     "warm_like",
 ]
+
+
+class ReindexInProgressError(RuntimeError):
+    """A re-index is already in flight: the single-flight guard rejects a
+    second one (and rejects inserts/deletes while an *asynchronous*
+    prepare is pending, so the gathered corpus cannot go stale under
+    the prepare's feet)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -266,6 +275,12 @@ class MutationManager:
         n0 = int(self.engine._next_slot)
         self._keys = np.arange(n0, dtype=np.int64)
         self._next_key = n0
+        # A repro.serve.durability.Durability (or None) — wired by
+        # Durability.attach; a committed re-index is WAL-logged through it.
+        self.durability = None
+        self._reindex_lock = threading.Lock()  # single-flight claim
+        self._reindexing = False
+        self._pending: _ReindexJob | None = None
 
     @property
     def engine(self) -> SuCoEngine:
@@ -298,13 +313,14 @@ class MutationManager:
             raise ValueError(f"keys must be ({b},), got {keys.shape}")
         if np.isin(keys, self._keys).any():
             raise ValueError("keys must be fresh — at least one is already in use")
+        self._check_no_pending("insert")
         try:
-            self.server.insert(x_new)
+            self.server.insert(x_new, keys=keys)
         except CapacityError:
             if not self.auto_reindex:
                 raise
             self.reindex(min_free=b)
-            self.server.insert(x_new)
+            self.server.insert(x_new, keys=keys)
         self._keys = np.concatenate([self._keys, keys])
         if b:
             self._next_key = max(self._next_key, int(keys.max()) + 1)
@@ -317,6 +333,7 @@ class MutationManager:
         slots = np.flatnonzero(np.isin(self._keys, keys))
         if slots.size == 0:
             return 0
+        self._check_no_pending("delete")
         return self.server.delete(slots)
 
     # ---- re-index handoff ------------------------------------------------
@@ -332,6 +349,121 @@ class MutationManager:
             self.reindex()
         return report
 
+    def _check_no_pending(self, op: str) -> None:
+        if self._pending is not None:
+            raise ReindexInProgressError(
+                f"{op} rejected: an asynchronous re-index prepare is pending "
+                "— finish_reindex() first (mutating now would invalidate the "
+                "gathered corpus the successor is being built from)"
+            )
+
+    def _claim(self) -> None:
+        with self._reindex_lock:
+            if self._reindexing:
+                raise ReindexInProgressError(
+                    "a re-index is already in flight — the single-flight "
+                    "guard admits one at a time"
+                )
+            self._reindexing = True
+
+    def _release(self) -> None:
+        with self._reindex_lock:
+            self._reindexing = False
+
+    def _gather(self, capacity: int | None, min_free: int) -> "_Gathered":
+        """Phase 1, on the caller (serving) thread: host-gather everything
+        the off-thread prepare needs, so the prepare never reads live
+        mutable state (the old ladder's ``_buckets_seen`` sets mutate
+        under traffic — they are *copied* here)."""
+        slots, x_live = _live_rows(self.engine)
+        live_keys = self._keys[slots]
+        n_live = len(x_live)
+        if n_live == 0:
+            raise ValueError("cannot re-index an empty live corpus")
+        if capacity is None:
+            capacity = int(math.ceil(n_live * self.capacity_factor))
+        capacity = max(capacity, n_live + min_free)
+        old = self.engine
+        old_ladder = self.server.ladder
+        if old_ladder is not None:
+            seen = tuple(sorted(e._buckets_seen) for e in old_ladder.engines)
+            ladder_meta = (
+                old_ladder.max_level,
+                old_ladder.m_stat,
+                old_ladder.sigma_stat,
+            )
+        else:
+            seen = (sorted(old._buckets_seen),)
+            ladder_meta = None
+        return _Gathered(
+            x_live=x_live,
+            live_keys=live_keys,
+            capacity=int(capacity),
+            min_free=int(min_free),
+            dtype=np.asarray(old.x).dtype,  # jaxlint: sync-ok — dtype probe
+            policy=dataclasses.replace(old.policy),  # fresh traffic histogram
+            seen=seen,
+            ladder_meta=ladder_meta,
+        )
+
+    def _build_successor(self, g: "_Gathered") -> "_Prepared":
+        """Phase 2, safe to run off-thread: re-cluster the gathered corpus
+        and warm a successor surface.  Touches nothing on the incumbent —
+        an exception (or an injected crash) here leaves the server
+        serving exactly as before."""
+        cfg = dataclasses.replace(self.config, build_mode="minibatch")
+        x_dev = jnp.asarray(g.x_live, dtype=g.dtype)
+        index = build_index(x_dev, cfg)
+        if self.durability is not None:
+            self.durability.reach("reindex.mid-prepare")
+        successor = SuCoEngine(x_dev, index, g.policy, capacity=g.capacity)
+        ladder = None
+        if g.ladder_meta is not None:
+            levels, m_stat, sigma_stat = g.ladder_meta
+            ladder = DegradationLadder(
+                successor,
+                levels=levels,
+                stats=(m_stat, sigma_stat),
+                stats_seed=self.stats_seed,
+            )
+            for pairs, new_e in zip(g.seen, ladder.engines):
+                for b, k in pairs:
+                    new_e.warmup([b], [k])
+        else:
+            for b, k in g.seen[0]:
+                successor.warmup([b], [k])
+        return _Prepared(gathered=g, successor=successor, ladder=ladder)
+
+    def _commit(self, p: "_Prepared") -> SuCoEngine:
+        """Phase 3, on the caller thread: the warm swap and bookkeeping.
+        With a durability root attached the committed re-index is
+        WAL-logged (resolved capacity — replay rebuilds the identical
+        successor) as the last step, after the in-memory state it
+        describes exists."""
+        dur = self.durability
+        if dur is not None:
+            dur._in_reindex = True
+        try:
+            self.server.swap(p.successor, ladder=p.ladder)
+        finally:
+            if dur is not None:
+                dur._in_reindex = False
+        # The cutover itself is done; reclaim the predecessor executables
+        # here, off the serving surface (the manager runs between steps).
+        for e in (
+            self.server.ladder.engines if self.server.ladder is not None
+            else [self.engine]
+        ):
+            e.release_retired()
+        self._keys = p.gathered.live_keys
+        self.monitor.capture(self.engine)
+        self.reindexes += 1
+        if dur is not None:
+            dur.log_reindex(
+                capacity=p.gathered.capacity, min_free=p.gathered.min_free
+            )
+        return self.engine
+
     def reindex(self, *, capacity: int | None = None, min_free: int = 0) -> SuCoEngine:
         """Re-cluster the live corpus and hand the server over warm.
 
@@ -343,47 +475,139 @@ class MutationManager:
         the old surface's seen ``(bucket, k)`` traffic, and swaps.  Keys
         compact with the corpus, the drift baseline re-captures, and the
         successor engine (post-adoption, ``server.engine``) is returned.
+
+        Failure containment: everything up to the swap builds a private
+        successor — an exception anywhere in the prepare leaves the
+        incumbent serving untouched.  Single-flight: a concurrent
+        ``reindex``/``reindex_async`` raises
+        :class:`ReindexInProgressError`.
         """
-        slots, x_live = _live_rows(self.engine)
-        live_keys = self._keys[slots]
-        n_live = len(x_live)
-        if n_live == 0:
-            raise ValueError("cannot re-index an empty live corpus")
-        if capacity is None:
-            capacity = int(math.ceil(n_live * self.capacity_factor))
-        capacity = max(capacity, n_live + min_free)
-        cfg = dataclasses.replace(self.config, build_mode="minibatch")
-        x_dev = jnp.asarray(x_live, dtype=np.asarray(self.engine.x).dtype)  # jaxlint: sync-ok — dtype probe
-        index = build_index(x_dev, cfg)
-        old = self.engine
-        successor = SuCoEngine(
-            x_dev,
-            index,
-            dataclasses.replace(old.policy),  # fresh traffic histogram
-            capacity=capacity,
-        )
-        ladder = None
-        if self.server.ladder is not None:
-            old_ladder = self.server.ladder
-            ladder = DegradationLadder(
-                successor,
-                levels=old_ladder.max_level,
-                stats=(old_ladder.m_stat, old_ladder.sigma_stat),
-                stats_seed=self.stats_seed,
-            )
-            for old_e, new_e in zip(old_ladder.engines, ladder.engines):
-                warm_like(new_e, old_e)
+        self._check_no_pending("reindex")
+        self._claim()
+        try:
+            prepared = self._build_successor(self._gather(capacity, min_free))
+            return self._commit(prepared)
+        finally:
+            self._release()
+
+    # ---- asynchronous prepare (off the serving thread) -------------------
+
+    def reindex_async(
+        self, *, capacity: int | None = None, min_free: int = 0
+    ) -> "_ReindexJob":
+        """Start the re-cluster prepare off-thread and return immediately:
+        the server keeps answering while the successor builds.  The
+        returned job is also stored; :meth:`finish_reindex` joins it and
+        commits the warm swap (on the caller's thread — the swap itself
+        stays between serving steps).  A prepare failure is contained:
+        ``finish_reindex`` re-raises it and the incumbent is untouched.
+
+        The prepare runs on the durability maintenance thread when one is
+        attached (the same off-serving-path thread that group-commits the
+        WAL), else on a dedicated daemon thread.
+        """
+        self._check_no_pending("reindex_async")
+        self._claim()
+        try:
+            job = _ReindexJob(self, self._gather(capacity, min_free))
+        except BaseException:
+            self._release()
+            raise
+        self._pending = job
+        dur = self.durability
+        if dur is not None and dur.worker is not None:
+            dur.worker.submit(job.run)
         else:
-            warm_like(successor, old)
-        self.server.swap(successor, ladder=ladder)
-        # The cutover itself is done; reclaim the predecessor executables
-        # here, off the serving surface (the manager runs between steps).
-        for e in (
-            self.server.ladder.engines if self.server.ladder is not None
-            else [self.engine]
-        ):
-            e.release_retired()
-        self._keys = live_keys
-        self.monitor.capture(self.engine)
-        self.reindexes += 1
-        return self.engine
+            threading.Thread(
+                target=job.run, name="suco-reindex-prepare", daemon=True
+            ).start()
+        return job
+
+    def finish_reindex(self, *, timeout: float | None = None) -> SuCoEngine:
+        """Join the pending asynchronous prepare and commit the swap.
+
+        If the prepare raised (including an injected :class:`CrashPoint`),
+        the exception is re-raised here, the pending job is cleared, and
+        the incumbent engine keeps serving — nothing was mutated.
+        """
+        job = self._pending
+        if job is None:
+            raise ValueError("no asynchronous re-index is pending")
+        try:
+            prepared = job.wait(timeout=timeout)
+        except TimeoutError:
+            raise  # still pending — call finish_reindex() again
+        except BaseException:
+            self._pending = None
+            self._release()
+            raise
+        try:
+            return self._commit(prepared)
+        finally:
+            self._pending = None
+            self._release()
+
+    # ---- durability ------------------------------------------------------
+
+    def save(self, path) -> None:
+        """One-shot durable save of the whole serving stack — engine,
+        ladder stats, warm surface, and this manager's key table — as an
+        atomic, checksummed artifact-v3 file.
+        :func:`repro.serve.durability.load_serving_stack` round-trips it."""
+        from repro.serve.durability import save_stack  # lazy: avoid cycle
+
+        save_stack(path, self.server, self, config=self.config)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Gathered:
+    """Host snapshot handed from the serving thread to the prepare."""
+
+    x_live: np.ndarray
+    live_keys: np.ndarray
+    capacity: int
+    min_free: int
+    dtype: np.dtype
+    policy: object
+    seen: tuple  # per-level sorted (bucket, k) lists, copied
+    ladder_meta: tuple | None  # (levels, m_stat, sigma_stat) or None
+
+
+@dataclasses.dataclass(frozen=True)
+class _Prepared:
+    gathered: _Gathered
+    successor: SuCoEngine
+    ladder: DegradationLadder | None
+
+
+class _ReindexJob:
+    """One asynchronous prepare: runs :meth:`MutationManager._build_successor`
+    wherever it is scheduled, captures any failure (``BaseException`` — an
+    injected crash must not kill the worker thread), and hands the result
+    back on :meth:`wait`."""
+
+    def __init__(self, manager: MutationManager, gathered: _Gathered):
+        self._manager = manager
+        self._gathered = gathered
+        self._done = threading.Event()
+        self._result: _Prepared | None = None
+        self._error: BaseException | None = None
+
+    def run(self) -> None:
+        try:
+            self._result = self._manager._build_successor(self._gathered)
+        except BaseException as e:  # noqa: BLE001 — containment by design
+            self._error = e
+        finally:
+            self._done.set()
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, *, timeout: float | None = None) -> _Prepared:
+        if not self._done.wait(timeout=timeout):
+            raise TimeoutError("re-index prepare still running")
+        if self._error is not None:
+            raise self._error
+        return self._result

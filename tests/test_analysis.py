@@ -302,6 +302,31 @@ def test_host_sync_flags_block_until_ready_and_item():
     assert rules == ["host-sync", "host-sync"]
 
 
+def test_host_sync_flags_unannotated_fsync():
+    """ISSUE-10: a durability layer full of ``os.fsync`` must declare every
+    one as deliberately off the serving path — an unannotated fsync is a
+    lint error, same as a device sync."""
+    src = "import os\n\ndef commit(f):\n    os.fsync(f.fileno())\n"
+    findings = _fatal(lint_source(src, "fixture.py"))
+    assert [f.rule for f in findings] == ["host-sync"]
+    assert "fsync" in findings[0].message
+
+
+def test_host_sync_fsync_annotation_suppresses():
+    src = (
+        "import os\n\ndef commit(f):\n"
+        "    os.fsync(f.fileno())  # jaxlint: sync-ok — group commit\n"
+    )
+    findings = lint_source(src, "fixture.py")
+    assert findings and all(f.suppressed for f in findings)
+
+
+def test_host_sync_flags_bare_name_fsync():
+    src = "from os import fsync\n\ndef commit(fd):\n    fsync(fd)\n"
+    findings = _fatal(lint_source(src, "fixture.py"))
+    assert [f.rule for f in findings] == ["host-sync"]
+
+
 def test_tracer_branch_fails_on_if_over_traced_arg():
     src = (
         "import jax\n\n@jax.jit\ndef f(x, flag):\n"

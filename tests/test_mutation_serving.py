@@ -16,7 +16,12 @@ from repro.core.suco import EnginePolicy, SuCoConfig, SuCoEngine, build_index
 from repro.data import make_dataset
 from repro.serve.ann import AnnRequest, AnnServer, AsyncAnnServer, DegradationLadder
 from repro.serve.chaos import VirtualClock, flood_trace, replay
-from repro.serve.mutation import DriftMonitor, MutationManager, warm_like
+from repro.serve.mutation import (
+    DriftMonitor,
+    MutationManager,
+    ReindexInProgressError,
+    warm_like,
+)
 
 N, D, K = 2000, 16, 10
 CFG = SuCoConfig(n_subspaces=4, sqrt_k=8, kmeans_iters=3, seed=0)
@@ -132,6 +137,65 @@ def test_mutate_while_serving_chaos(ds, index):
     # recall@k regression guard on top (the clustered-regime expectation)
     recall = float(np.mean([rc for rc, _, _ in rows]))
     assert recall >= 0.9, f"recall@{K} {recall} collapsed post-handoff"
+
+
+def test_async_reindex_while_serving_chaos(ds, index):
+    """ISSUE-10 satellite: the re-cluster prepare runs OFF the serving
+    thread.  The replay keeps answering between ``reindex_async()`` and
+    ``finish_reindex()``; a scripted insert in that window is rejected by
+    the single-flight guard (the gathered corpus must not go stale); the
+    commit swaps with zero retraces and post-swap answers come from the
+    successor."""
+    clock, engine, ladder, server = _serving_stack(ds, index)
+    mgr = MutationManager(server, CFG, capacity_factor=1.2)
+    exe_warm = server.executables
+    snap: dict = {}
+
+    def ev_start(_server):
+        snap["exe_pre"] = server.executables
+        mgr.reindex_async()
+
+    def ev_insert_rejected(_server):
+        with pytest.raises(ReindexInProgressError, match="pending"):
+            mgr.insert(ds.x[:2])
+        snap["rejected"] = True
+
+    def ev_finish(_server):
+        # blocks (real time) until the off-thread prepare lands, then
+        # commits the swap on THIS thread — the only thread that mutates
+        mgr.finish_reindex(timeout=300)
+        snap["t_swap"] = clock()
+        snap["exe_post"] = server.executables
+
+    trace = flood_trace(
+        60, D, interarrival_s=0.001, deadline_s=None, ks=(K,),
+        seed=7, queries=ds.x,
+    )
+    trace += [
+        (0.0155, ev_start),
+        (0.0255, ev_insert_rejected),
+        (0.0405, ev_finish),
+    ]
+    trace.sort(key=lambda tr: tr[0])
+    report = replay(server, trace, clock)
+
+    # every request completed — serving never paused for the prepare
+    assert report.completed == frozenset(range(60))
+    assert report.shed == report.expired == report.failed == frozenset()
+    assert snap["rejected"]
+    assert mgr.reindexes == 1
+
+    # zero retraces: flat until the commit, successor pre-warmed
+    assert snap["exe_pre"] == exe_warm
+    assert server.executables == snap["exe_post"]
+
+    # post-swap requests answer against the successor corpus
+    reqs = {r.rid: r for _, r in trace if not callable(r)}
+    gen1 = [r for r in reqs.values() if r.t_start >= snap["t_swap"]]
+    assert gen1  # the schedule actually exercises the post-swap window
+    for r in gen1:
+        assert r.done and r.error is None
+        assert len(np.asarray(r.ids)) == K
 
 
 def test_ladder_quality_bound_tracks_live_count(ds, index):
